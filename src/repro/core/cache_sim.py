@@ -1,0 +1,166 @@
+"""Trace-driven LLC write-transition simulator: paper Fig. 13 / Fig. 14.
+
+The paper profiles MiBench workloads in GEM5 and shows (Fig. 13) that ~80%
+of L2 write traffic is in the expensive 0->1 direction, then evaluates
+(Fig. 14) the normalized write energy of EXTENT vs. state-of-the-art on
+those transition mixes.
+
+We reproduce the *analysis pipeline* exactly, but feed it (a) the paper's
+published per-benchmark transition mixes and (b) real tensor-write traces
+captured from our training/serving steps (the ML-system analogue of an LLC
+write stream). Energy per access comes from the calibrated driver table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import write_driver
+from repro.core.priority import Priority, uint_type
+
+# Fig. 13 digitized access-pattern mixes per MiBench workload:
+# fractions of L2 write-bit traffic {0->1, 1->0, 0->0, 1->1}.
+FIG13_WORKLOADS: Dict[str, Dict[str, float]] = {
+    "qsort":      {"t01": 0.46, "t10": 0.11, "t00": 0.33, "t11": 0.10},
+    "susan":      {"t01": 0.42, "t10": 0.10, "t00": 0.38, "t11": 0.10},
+    "jpeg":       {"t01": 0.44, "t10": 0.12, "t00": 0.33, "t11": 0.11},
+    "lame":       {"t01": 0.40, "t10": 0.13, "t00": 0.35, "t11": 0.12},
+    "dijkstra":   {"t01": 0.43, "t10": 0.11, "t00": 0.36, "t11": 0.10},
+    "patricia":   {"t01": 0.41, "t10": 0.12, "t00": 0.36, "t11": 0.11},
+    "stringsearch": {"t01": 0.45, "t10": 0.10, "t00": 0.35, "t11": 0.10},
+    "sha":        {"t01": 0.48, "t10": 0.14, "t00": 0.27, "t11": 0.11},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TransitionMix:
+    t01: float  # 0->1 (P->AP, expensive direction)
+    t10: float  # 1->0
+    t00: float  # redundant zero
+    t11: float  # redundant one
+
+    @property
+    def flip_fraction(self) -> float:
+        return self.t01 + self.t10
+
+    @property
+    def expensive_share(self) -> float:
+        """Share of *flipping* traffic in the 0->1 direction (Fig. 13's
+        headline: ~80% of energy-relevant accesses)."""
+        f = self.flip_fraction
+        return self.t01 / f if f else 0.0
+
+
+def mix_from_fig13(name: str) -> TransitionMix:
+    return TransitionMix(**FIG13_WORKLOADS[name])
+
+
+def trace_transition_mix(old: jax.Array, new: jax.Array) -> TransitionMix:
+    """Measure the actual bit-transition mix of one tensor write."""
+    ut = uint_type(old.dtype)
+    ou = jax.lax.bitcast_convert_type(old, ut)
+    nu = jax.lax.bitcast_convert_type(new, ut)
+    nbits = jnp.dtype(ut).itemsize * 8
+    shift = jnp.arange(nbits, dtype=ut)
+    bo = (ou[..., None] >> shift) & ut(1)
+    bn = (nu[..., None] >> shift) & ut(1)
+    total = bo.size
+    t01 = float(jnp.sum((bo == 0) & (bn == 1))) / total
+    t10 = float(jnp.sum((bo == 1) & (bn == 0))) / total
+    t11 = float(jnp.sum((bo == 1) & (bn == 1))) / total
+    return TransitionMix(t01=t01, t10=t10, t00=1.0 - t01 - t10 - t11, t11=t11)
+
+
+# ---------------------------------------------------------------------------
+# energy evaluation (Fig. 14)
+# ---------------------------------------------------------------------------
+
+def energy_per_word(
+    mix: TransitionMix,
+    scheme: str = "extent",
+    level_mix: Optional[Dict[int, float]] = None,
+    cfg: write_driver.DriverConfig = write_driver.DriverConfig(),
+) -> float:
+    """Expected energy (pJ) of one 64-bit word write under a scheme.
+
+    Schemes:
+      basic  — full static pulse on every bit (no CMP, no skip),
+      quark  — Table-1 [21] scaling: tuned Delta, no self-termination,
+      cast   — [40]: self-termination, single exact level,
+      extent — self-termination + redundant-skip + the level mix
+               (default: the paper's high/low priority split).
+    """
+    W = write_driver.WORD_BITS
+
+    def _intensity(m: TransitionMix) -> float:
+        """Direction-weighted flip intensity of a workload (2.5:1)."""
+        return 2.5 * m.t01 + m.t10
+
+    # average Fig.13 intensity: the operating point at which each scheme's
+    # published Table-1 word energy was measured
+    avg = TransitionMix(
+        t01=float(np.mean([v["t01"] for v in FIG13_WORKLOADS.values()])),
+        t10=float(np.mean([v["t10"] for v in FIG13_WORKLOADS.values()])),
+        t00=0.0, t11=0.0)
+
+    if scheme == "basic":
+        # static full pulse on every bit, transition-independent
+        return write_driver.TABLE1["basic"]["energy_pj"]
+    if scheme == "quark":
+        # [21]: tuned-Delta writes, no self-termination: energy tracks flip
+        # traffic around the published word value
+        return (write_driver.TABLE1["quark_islped17"]["energy_pj"]
+                * _intensity(mix) / _intensity(avg))
+    if scheme == "cast":
+        # [40]: self-terminated, content-aware, single-quality writes
+        return (write_driver.TABLE1["cast_tcad20"]["energy_pj"]
+                * _intensity(mix) / _intensity(avg))
+    assert scheme == "extent", scheme
+    levels = write_driver.default_driver(cfg)
+    if level_mix is None:
+        # paper's evaluation mixes fully-accurate and approximate writes;
+        # the Fig. 14 setting tags multimedia payload LOW/MID, control EXACT
+        level_mix = {int(Priority.EXACT): 0.35, int(Priority.HIGH): 0.15,
+                     int(Priority.MID): 0.20, int(Priority.LOW): 0.30}
+    e = 0.0
+    for code, frac in level_mix.items():
+        lvl = next(l for l in levels if l.code == code)
+        e += frac * W * (mix.t01 * lvl.e_0to1_pj + mix.t10 * lvl.e_1to0_pj)
+    return e
+
+
+def fig14_normalized_energy(
+    workloads: Iterable[str] = tuple(FIG13_WORKLOADS),
+) -> Dict[str, Dict[str, float]]:
+    """Normalized (to basic-cell) energy per workload per scheme — the
+    Fig. 14 reproduction consumed by benchmarks/fig14_energy.py."""
+    out = {}
+    for w in workloads:
+        mix = mix_from_fig13(w)
+        basic = energy_per_word(mix, "basic")
+        row = {}
+        for scheme in ("basic", "quark", "cast", "extent"):
+            row[scheme] = energy_per_word(mix, scheme) / basic
+        out[w] = row
+    return out
+
+
+def wer_for_mix(mix: TransitionMix,
+                level_mix: Optional[Dict[int, float]] = None,
+                cfg: write_driver.DriverConfig = write_driver.DriverConfig(),
+                ) -> float:
+    """Expected per-bit write error rate for a transition/level mix — the
+    system-level accuracy proxy the paper uses in §IV.A."""
+    levels = write_driver.default_driver(cfg)
+    if level_mix is None:
+        level_mix = {int(Priority.EXACT): 0.35, int(Priority.HIGH): 0.15,
+                     int(Priority.MID): 0.20, int(Priority.LOW): 0.30}
+    wer = 0.0
+    for code, frac in level_mix.items():
+        lvl = next(l for l in levels if l.code == code)
+        wer += frac * (mix.t01 * lvl.wer_0to1 + mix.t10 * lvl.wer_1to0)
+    return wer

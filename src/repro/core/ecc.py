@@ -1,0 +1,73 @@
+"""SEC-DED ECC model: the state-of-the-art alternative the paper argues
+against ("despite all the benefits of using ECCs, it imposes a significant
+decoding latency overhead on reading and writing operations").
+
+Hamming(72,64): 8 check bits per 64-bit word correct any single bit error
+and detect doubles. We model:
+  * storage overhead 12.5 % (the paper's EXTENT pays 3.7 % area instead),
+  * encode/decode latency adders on every access,
+  * residual word-failure probability after correction:
+      P_fail = 1 - (1-p)^72 - 72 p (1-p)^71   (>=2 raw errors in a word)
+and provide an apples-to-apples comparison vs. the EXTENT levels at equal
+raw bit-error rates — reproducing the paper's argument quantitatively.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.core import write_driver
+from repro.core.priority import Priority
+
+WORD_DATA_BITS = 64
+WORD_CODE_BITS = 72
+ENCODE_NS = 0.8   # XOR-tree encode (typ. 32nm synthesized SEC-DED)
+DECODE_NS = 1.6   # syndrome + correct
+
+
+def residual_word_failure(p_bit: float) -> float:
+    """P(>= 2 raw bit errors in a 72-bit codeword) — uncorrectable."""
+    q = 1.0 - p_bit
+    return float(1.0 - q ** WORD_CODE_BITS
+                 - WORD_CODE_BITS * p_bit * q ** (WORD_CODE_BITS - 1))
+
+
+def ecc_scheme(level: Priority) -> Dict[str, float]:
+    """Write a word at `level`'s raw WER but add SEC-DED on top."""
+    lvl = next(l for l in write_driver.default_driver()
+               if l.code == int(Priority.coerce(level)))
+    p_raw = 0.5 * (lvl.wer_0to1 + lvl.wer_1to0)  # 50/50 direction mix
+    energy = (0.5 * (lvl.e_0to1_pj + lvl.e_1to0_pj)
+              * WORD_CODE_BITS * 0.5)  # flips on code bits too (+12.5 %)
+    return {
+        "raw_ber": p_raw,
+        "post_ecc_word_fail": residual_word_failure(p_raw),
+        "energy_pj_word": energy,
+        "latency_ns": lvl.latency_ns + ENCODE_NS + DECODE_NS,
+        "storage_overhead": (WORD_CODE_BITS - WORD_DATA_BITS)
+        / WORD_DATA_BITS,
+    }
+
+
+def extent_scheme(level: Priority) -> Dict[str, float]:
+    lvl = next(l for l in write_driver.default_driver()
+               if l.code == int(Priority.coerce(level)))
+    p_raw = 0.5 * (lvl.wer_0to1 + lvl.wer_1to0)
+    energy = 0.5 * (lvl.e_0to1_pj + lvl.e_1to0_pj) * WORD_DATA_BITS * 0.5
+    return {
+        "raw_ber": p_raw,
+        "post_word_fail": float(1.0 - (1.0 - p_raw) ** WORD_DATA_BITS),
+        "energy_pj_word": energy,
+        "latency_ns": lvl.latency_ns,
+        "storage_overhead": 0.037,  # the paper's area overhead stands in
+    }
+
+
+def compare(level: Priority = Priority.MID) -> Dict[str, Dict[str, float]]:
+    """The paper's §II argument, quantified: at approximate levels ECC's
+    +12.5 % storage, +2.4 ns access latency and code-bit write energy buy
+    correction the application-level masking didn't need; at the exact
+    level raw WER is already ~1e-10 and ECC is belt-and-braces."""
+    return {"ecc": ecc_scheme(level), "extent": extent_scheme(level)}

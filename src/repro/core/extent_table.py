@@ -1,0 +1,97 @@
+"""EXTENT table + quality controller: the paper's architecture layer (Fig. 11).
+
+The controller sits between the priority API and the write driver:
+
+  * applications send (address/block, priority) via the API;
+  * the EXTENT table caches the reported quality per memory block so
+    repeated accesses to a block skip the tag handshake;
+  * on a write, the controller looks the block up — hit returns the cached
+    quality, miss installs the writer's default.
+
+Here a "block" is a named tensor region (or a (tensor, block_idx) pair for
+sub-tensor granularity). The table is a bounded LRU — the paper's table is
+a small SRAM structure, so capacity pressure and eviction are modeled, and
+hit/miss statistics are exported for the architecture benchmarks.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, Hashable, Optional, Tuple
+
+from repro.core.priority import Priority
+
+
+@dataclasses.dataclass
+class ExtentTable:
+    capacity: int = 4096
+    default: Priority = Priority.EXACT
+
+    def __post_init__(self):
+        self._map: "collections.OrderedDict[Hashable, Priority]" = (
+            collections.OrderedDict())
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- controller operations ------------------------------------------------
+    def update(self, block: Hashable, quality: Priority) -> None:
+        """API `priority_level` command: install/refresh a block's quality."""
+        q = Priority.coerce(quality)
+        if block in self._map:
+            self._map.move_to_end(block)
+        elif len(self._map) >= self.capacity:
+            self._map.popitem(last=False)
+            self.evictions += 1
+        self._map[block] = q
+
+    def lookup(self, block: Hashable) -> Priority:
+        """Write-path query: hit -> cached quality; miss -> writer default
+        (and the default is installed, matching the paper's description)."""
+        if block in self._map:
+            self.hits += 1
+            self._map.move_to_end(block)
+            return self._map[block]
+        self.misses += 1
+        self.update(block, self.default)
+        return self.default
+
+    # -- observability ---------------------------------------------------------
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "hit_rate": self.hit_rate,
+                "occupancy": len(self._map)}
+
+
+@dataclasses.dataclass
+class QualityController:
+    """Fig. 11 controller: EXTENT table + per-stream default policies.
+
+    Streams ("kv", "checkpoint", "optimizer", ...) carry their own writer
+    defaults; `quality_for` resolves (stream, block) -> driver level.
+    """
+    table: ExtentTable = dataclasses.field(default_factory=ExtentTable)
+    stream_defaults: Dict[str, Priority] = dataclasses.field(
+        default_factory=lambda: {
+            "kv": Priority.MID,
+            "kv_v": Priority.LOW,
+            "checkpoint_weights": Priority.EXACT,
+            "checkpoint_moments": Priority.LOW,
+            "activation": Priority.HIGH,
+        })
+
+    def tag(self, stream: str, block: Hashable, quality) -> None:
+        self.table.update((stream, block), Priority.coerce(quality))
+
+    def quality_for(self, stream: str, block: Hashable) -> Priority:
+        prev_default = self.table.default
+        self.table.default = self.stream_defaults.get(stream, Priority.EXACT)
+        try:
+            return self.table.lookup((stream, block))
+        finally:
+            self.table.default = prev_default

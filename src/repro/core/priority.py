@@ -1,0 +1,149 @@
+"""Priority-tagging API: the paper's "software support" layer (Fig. 10/11).
+
+The paper exposes `priority_level` tags (2-bit, 00..11) from the application
+through an API down to the write driver. Here the same contract is expressed
+over pytrees of tensors:
+
+  * ``Priority`` — the four driver levels,
+  * ``tag_pytree(tree, rule)`` — map leaves (by path/name/dtype) to levels,
+  * bit-plane priorities — the ML-specific refinement: within one float
+    tensor, sign/exponent bits are control-flow-critical (a flipped exponent
+    is a catastrophic, non-maskable error) while low mantissa bits are the
+    error-tolerant payload. ``bitplane_priorities`` builds the per-bit level
+    map the approximate store consumes.
+
+This mirrors the paper's rule that "any inaccuracy in the application's flow
+control could not be tolerated": for tensors, exponent/sign ARE the flow
+control.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Priority(enum.IntEnum):
+    LOW = 0b00       # "10"-tagged minor data in the paper's pseudo-code
+    MID = 0b01
+    HIGH = 0b10
+    EXACT = 0b11     # default for untagged / control data
+
+    @classmethod
+    def coerce(cls, v) -> "Priority":
+        if isinstance(v, cls):
+            return v
+        if isinstance(v, str):
+            return cls[v.upper()]
+        return cls(int(v))
+
+
+def tag_pytree(tree: Any,
+               rule: Callable[[Tuple[Any, ...], Any], Any],
+               default: Priority = Priority.EXACT) -> Any:
+    """Tree of tensors -> same-structure tree of Priority.
+
+    ``rule(path, leaf)`` may return a Priority / int / str / None (None ->
+    default). Paths are jax key-paths, so dict keys and dataclass fields
+    match by name.
+    """
+    def one(path, leaf):
+        r = rule(path, leaf)
+        return default if r is None else Priority.coerce(r)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def path_contains(path: Tuple[Any, ...], *names: str) -> bool:
+    s = jax.tree_util.keystr(path)
+    return any(n in s for n in names)
+
+
+# ---------------------------------------------------------------------------
+# standard tagging policies (the "practitioner presets" — Rely/ACCEPT stand-in)
+# ---------------------------------------------------------------------------
+
+def checkpoint_policy(path, leaf) -> Priority:
+    """Checkpoint tagging: weights exact; optimizer second moments are the
+    most error-tolerant (they are smoothed statistics); first moments mid."""
+    if path_contains(path, ".v", "nu"):
+        return Priority.LOW
+    if path_contains(path, ".m", "mu"):
+        return Priority.MID
+    if path_contains(path, "step"):
+        return Priority.EXACT
+    return Priority.EXACT
+
+
+def kv_cache_policy(path, leaf) -> Priority:
+    """KV-cache tagging: V tensors tolerate more error than K (K errors
+    perturb the attention pattern, V errors only the weighted payload)."""
+    if path_contains(path, "'v'"):
+        return Priority.LOW
+    if path_contains(path, "'k'"):
+        return Priority.MID
+    # recurrent states (mamba2/RG-LRU) must stay exact: a write error
+    # persists in the recurrence indefinitely (DESIGN.md §4)
+    if path_contains(path, "state", "conv"):
+        return Priority.EXACT
+    return Priority.HIGH
+
+
+# ---------------------------------------------------------------------------
+# bit-plane priorities within a float word
+# ---------------------------------------------------------------------------
+
+_BITS: Dict[Any, int] = {}
+
+
+def bits_of(dtype) -> int:
+    return jnp.dtype(dtype).itemsize * 8
+
+
+def uint_type(dtype):
+    return {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}[
+        jnp.dtype(dtype).itemsize]
+
+
+def mantissa_bits(dtype) -> int:
+    d = jnp.dtype(dtype)
+    return {jnp.dtype(jnp.bfloat16): 7, jnp.dtype(jnp.float16): 10,
+            jnp.dtype(jnp.float32): 23}.get(d, 0)
+
+
+def bitplane_priorities(dtype, tensor_level: Priority) -> np.ndarray:
+    """Per-bit priority codes (LSB..MSB) for one element of ``dtype``.
+
+    sign+exponent bits are always EXACT; mantissa bits degrade from the
+    tensor's level at the top of the mantissa down to LOW at the LSBs.
+    Integer dtypes: top quarter EXACT, rest at tensor level.
+    """
+    n = bits_of(dtype)
+    m = mantissa_bits(dtype)
+    out = np.full((n,), int(Priority.EXACT), np.int32)
+    lvl = int(tensor_level)
+    if lvl == int(Priority.EXACT):  # "fully accurate" mode: nothing degrades
+        return out
+    if m == 0:  # integer payloads
+        out[: max(1, 3 * n // 4)] = lvl
+        return out
+    # mantissa occupies bits [0, m); low half of it one level below
+    out[:m] = lvl
+    out[: max(1, m // 2)] = max(int(Priority.LOW), lvl - 1)
+    out[m:] = int(Priority.EXACT)  # exponent + sign
+    return out
+
+
+def priority_mask(dtype, tensor_level: Priority) -> jax.Array:
+    """(bits,) int32 priority-code vector for broadcasting against unpacked
+    bit tensors inside the approximate store / Pallas kernel."""
+    return jnp.asarray(bitplane_priorities(dtype, tensor_level))
+
+
+def priority_of(tags: Any, path_leaf) -> Priority:
+    """Convenience: fetch a tag from a tagged tree by identity (used by the
+    checkpoint writer when iterating flattened leaves)."""
+    return tags[path_leaf] if isinstance(tags, dict) else Priority.EXACT

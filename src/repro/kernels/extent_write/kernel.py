@@ -1,0 +1,152 @@
+"""Pallas-TPU kernel for the EXTENT approximate write path.
+
+Fuses, in one HBM pass over (old, new):
+    XOR bit-diff -> per-bit-plane stochastic write failure -> stored word
+    + per-block energy / flip / error reductions.
+
+Why a kernel: the write path is purely memory-bound (O(bytes) work, zero
+matmul). Composed as jnp ops it materializes the (elements x nbits) unpacked
+bit tensor (16-32x write amplification through HBM); fused it runs at HBM
+streaming bandwidth with all bit algebra in VREGs and the stats reduced in
+VMEM scratch. This is the TPU re-thinking of the paper's per-row driver
+bank: the "64 parallel drivers per word" become lane-parallel bit ops over a
+(block_r, block_c) VMEM tile.
+
+RNG: counter-based murmur3-style hash of (seed, element index, bit plane) —
+no state, identical on TPU hardware and in interpret mode, and reproducible
+from ref.py (the pure-jnp oracle implements the same hash bit-exactly).
+
+Layout: operands are bitcast to uint32 lanes *outside* the kernel (ops.py):
+uint32 is the native VPU lane width; bf16 tensors pack pairs of elements
+into one lane, f32 maps 1:1. Block shape defaults to (256, 512) lanes =
+512 KiB per uint32 buffer — 3 buffers (old/new/stored) plus unrolled f32
+temporaries stay well under the 16 MiB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import numpy as np
+
+# murmur3 finalizer constants (numpy scalars: safe to close over in a
+# pallas kernel body — jnp arrays would be captured consts, which is an error)
+_M1 = np.uint32(0x85EBCA6B)
+_M2 = np.uint32(0xC2B2AE35)
+_K_ELEM = np.uint32(2654435761)   # Knuth multiplicative hash
+_K_BIT = np.uint32(0x9E3779B9)    # golden-ratio increment per bit plane
+
+DEFAULT_BLOCK = (256, 512)
+
+
+def _hash_u32(x: jax.Array) -> jax.Array:
+    """murmur3 fmix32: avalanching 32-bit hash, vectorizes on the VPU."""
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 13)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def uniform_bits(seed: jax.Array, elem_idx: jax.Array, bit: int) -> jax.Array:
+    """Deterministic uniform uint32 for (seed, element, bit-plane)."""
+    h = (elem_idx.astype(jnp.uint32) * _K_ELEM
+         ^ (jnp.uint32(bit) * _K_BIT) ^ seed.astype(jnp.uint32))
+    return _hash_u32(h)
+
+
+def _kernel(
+    old_ref, new_ref, seed_ref, thr01_ref, thr10_ref, e01_ref, e10_ref,
+    stored_ref, energy_ref, flips01_ref, flips10_ref, errors_ref,
+    *, nbits: int, block: Tuple[int, int], cols_total: int,
+):
+    r, c = pl.program_id(0), pl.program_id(1)
+    old = old_ref[...]
+    new = new_ref[...]
+    seed = seed_ref[0]
+
+    # global flat element index of each lane in this block
+    row0 = r * block[0]
+    col0 = c * block[1]
+    rows = jax.lax.broadcasted_iota(jnp.uint32, block, 0) + jnp.uint32(row0)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, block, 1) + jnp.uint32(col0)
+    elem = rows * jnp.uint32(cols_total) + cols
+
+    diff = old ^ new
+    one = jnp.uint32(1)
+
+    fail_acc = jnp.zeros(block, jnp.uint32)
+    energy = jnp.zeros(block, jnp.float32)
+    n01 = jnp.zeros(block, jnp.uint32)
+    n10 = jnp.zeros(block, jnp.uint32)
+    nerr = jnp.zeros(block, jnp.uint32)
+
+    for b in range(nbits):  # static unroll: nbits is 16 or 32
+        bitmask = one << b
+        flip = (diff & bitmask) != 0
+        to_ap = flip & ((new & bitmask) != 0)          # 0->1 writes
+        u = uniform_bits(seed, elem, b)
+        thr = jnp.where(to_ap, thr01_ref[b], thr10_ref[b])
+        fail = flip & (u < thr)
+        fail_acc = fail_acc | jnp.where(fail, bitmask, jnp.uint32(0))
+        e_bit = jnp.where(to_ap, e01_ref[b], e10_ref[b])
+        energy = energy + jnp.where(flip, e_bit, 0.0)
+        n01 = n01 + to_ap.astype(jnp.uint32)
+        n10 = n10 + (flip & ~to_ap).astype(jnp.uint32)
+        nerr = nerr + fail.astype(jnp.uint32)
+
+    stored_ref[...] = new ^ fail_acc
+    energy_ref[0, 0] = jnp.sum(energy)
+    flips01_ref[0, 0] = jnp.sum(n01.astype(jnp.int32))
+    flips10_ref[0, 0] = jnp.sum(n10.astype(jnp.int32))
+    errors_ref[0, 0] = jnp.sum(nerr.astype(jnp.int32))
+
+
+def extent_write_kernel(
+    old_u32: jax.Array,      # (R, C) uint32 lanes, R % block[0] == 0 etc.
+    new_u32: jax.Array,
+    seed: jax.Array,         # (1,) uint32
+    thr01: jax.Array,        # (nbits,) uint32 failure thresholds (wer * 2^32)
+    thr10: jax.Array,
+    e01: jax.Array,          # (nbits,) f32 per-flip energies (pJ)
+    e10: jax.Array,
+    *,
+    nbits: int,
+    block: Tuple[int, int] = DEFAULT_BLOCK,
+    interpret: bool = True,  # CPU container: validate via interpreter
+):
+    """Returns (stored (R,C) uint32, energy (gr,gc) f32, flips01, flips10,
+    errors (gr,gc) i32). Stats are per-block partial sums."""
+    R, C = old_u32.shape
+    assert R % block[0] == 0 and C % block[1] == 0, (old_u32.shape, block)
+    grid = (R // block[0], C // block[1])
+
+    vec_spec = pl.BlockSpec((nbits,), lambda r, c: (0,))
+    stat_spec = pl.BlockSpec((1, 1), lambda r, c: (r, c))
+    data_spec = pl.BlockSpec(block, lambda r, c: (r, c))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, nbits=nbits, block=block, cols_total=C),
+        grid=grid,
+        in_specs=[
+            data_spec, data_spec,
+            pl.BlockSpec((1,), lambda r, c: (0,)),   # seed
+            vec_spec, vec_spec, vec_spec, vec_spec,
+        ],
+        out_specs=[
+            data_spec, stat_spec, stat_spec, stat_spec, stat_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), jnp.uint32),
+            jax.ShapeDtypeStruct(grid, jnp.float32),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+        ],
+        interpret=interpret,
+    )(old_u32, new_u32, seed, thr01, thr10, e01, e10)

@@ -1,0 +1,131 @@
+"""Public jit'd wrapper for the extent_write kernel.
+
+Handles dtype bitcasting (bf16/f16 pack 2 elements per uint32 lane, f32/int32
+map 1:1), padding to block multiples, level-table -> threshold conversion,
+and reduction of per-block stats. ``use_kernel=False`` routes to the ref
+oracle (same semantics) — the default on CPU hosts where only interpret-mode
+execution is available and speed doesn't matter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import write_driver
+from repro.core.priority import Priority, bitplane_priorities
+from repro.kernels.extent_write import kernel as K
+from repro.kernels.extent_write import ref as R
+
+
+@functools.lru_cache(maxsize=64)
+def _level_vectors(dtype, level: Priority,
+                   cfg: Optional[write_driver.DriverConfig] = None):
+    """Per-bit-plane (thr01, thr10, e01, e10) for one element dtype, with the
+    bit-plane priority policy applied, then widened to the uint32 lane
+    layout (2x16-bit elements per lane for 16-bit dtypes)."""
+    table = write_driver.level_table(cfg or write_driver.DriverConfig())
+    codes = bitplane_priorities(dtype, Priority.coerce(level))  # (ebits,)
+    wer01 = np.asarray(table["wer01"])[codes]
+    wer10 = np.asarray(table["wer10"])[codes]
+    e01 = np.asarray(table["e01"])[codes]
+    e10 = np.asarray(table["e10"])[codes]
+    ebits = codes.shape[0]
+    if ebits == 16:  # two elements per uint32 lane: repeat the bit pattern
+        wer01 = np.concatenate([wer01, wer01])
+        wer10 = np.concatenate([wer10, wer10])
+        e01 = np.concatenate([e01, e01])
+        e10 = np.concatenate([e10, e10])
+    to_thr = lambda w: (np.clip(w, 0.0, 1.0) * 2**32).astype(np.uint64).clip(
+        0, 2**32 - 1).astype(np.uint32)
+    return (jnp.asarray(to_thr(wer01)), jnp.asarray(to_thr(wer10)),
+            jnp.asarray(e01, jnp.float32), jnp.asarray(e10, jnp.float32))
+
+
+def _to_lanes(x: jax.Array) -> Tuple[jax.Array, int]:
+    """Bitcast any 2/4-byte tensor into a flat uint32 lane vector."""
+    nbytes = jnp.dtype(x.dtype).itemsize
+    if nbytes == 4:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint32).reshape(-1)
+        return u, x.size
+    assert nbytes == 2, x.dtype
+    u16 = jax.lax.bitcast_convert_type(x, jnp.uint16).reshape(-1)
+    if u16.size % 2:
+        u16 = jnp.concatenate([u16, jnp.zeros((1,), jnp.uint16)])
+    pair = u16.reshape(-1, 2).astype(jnp.uint32)
+    return pair[:, 0] | (pair[:, 1] << 16), x.size
+
+
+def _from_lanes(u: jax.Array, shape, dtype) -> jax.Array:
+    nbytes = jnp.dtype(dtype).itemsize
+    n = int(np.prod(shape))
+    if nbytes == 4:
+        return jax.lax.bitcast_convert_type(u[:n], dtype).reshape(shape)
+    lo = (u & 0xFFFF).astype(jnp.uint16)
+    hi = (u >> 16).astype(jnp.uint16)
+    u16 = jnp.stack([lo, hi], axis=-1).reshape(-1)[:n]
+    return jax.lax.bitcast_convert_type(u16, dtype).reshape(shape)
+
+
+def extent_write(
+    key: jax.Array,
+    old: jax.Array,
+    new: jax.Array,
+    *,
+    level: Priority = Priority.LOW,
+    block: Tuple[int, int] = K.DEFAULT_BLOCK,
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """EXTENT approximate write of ``new`` over ``old`` (same shape/dtype).
+
+    Returns (stored, stats{energy_pj, flips01, flips10, errors}).
+    The driver level table is resolved eagerly (it is Python-float
+    calibration code); the data path below is jitted.
+    """
+    assert old.shape == new.shape and old.dtype == new.dtype
+    thr01, thr10, e01, e10 = _level_vectors(old.dtype, Priority.coerce(level))
+    return _extent_write_jit(key, old, new, thr01, thr10, e01, e10,
+                             block=block, use_kernel=use_kernel,
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_kernel",
+                                             "interpret"))
+def _extent_write_jit(
+    key, old, new, thr01, thr10, e01, e10, *,
+    block: Tuple[int, int], use_kernel: bool, interpret: bool,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    nbits = int(thr01.shape[0])
+    seed = jax.random.bits(key, (1,), jnp.uint32)
+
+    old_u, _ = _to_lanes(old)
+    new_u, _ = _to_lanes(new)
+    n_lanes = old_u.size
+    bc = block[0] * block[1]
+    pad = (-n_lanes) % bc
+    # padding lanes: old == new == 0 -> no flips, no energy, no failures
+    old_p = jnp.concatenate([old_u, jnp.zeros((pad,), jnp.uint32)])
+    new_p = jnp.concatenate([new_u, jnp.zeros((pad,), jnp.uint32)])
+    rows = old_p.size // block[1]
+    old2 = old_p.reshape(rows, block[1])
+    new2 = new_p.reshape(rows, block[1])
+
+    if use_kernel:
+        stored2, energy, f01, f10, err = K.extent_write_kernel(
+            old2, new2, seed, thr01, thr10, e01, e10,
+            nbits=nbits, block=(min(block[0], rows), block[1]),
+            interpret=interpret)
+        stats = {"energy_pj": jnp.sum(energy),
+                 "flips01": jnp.sum(f01), "flips10": jnp.sum(f10),
+                 "errors": jnp.sum(err)}
+    else:
+        stored2, stats = R.extent_write_ref(
+            old2, new2, seed, thr01, thr10, e01, e10, nbits=nbits)
+
+    stored_u = stored2.reshape(-1)[:n_lanes]
+    stored = _from_lanes(stored_u, old.shape, old.dtype)
+    return stored, stats

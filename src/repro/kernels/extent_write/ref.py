@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the extent_write Pallas kernel.
+
+Implements the identical semantics (same murmur3 counter RNG, same bit
+algebra, same stats) with plain jnp ops over the unpacked (elements x nbits)
+tensor — the slow-but-obviously-correct reference every kernel test
+asserts against bit-exactly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.extent_write.kernel import uniform_bits
+
+
+def extent_write_ref(
+    old_u32: jax.Array,   # (R, C) uint32
+    new_u32: jax.Array,
+    seed: jax.Array,      # (1,) uint32
+    thr01: jax.Array,     # (nbits,) uint32
+    thr10: jax.Array,
+    e01: jax.Array,       # (nbits,) f32
+    e10: jax.Array,
+    *,
+    nbits: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    R, C = old_u32.shape
+    elem = (jnp.arange(R, dtype=jnp.uint32)[:, None] * jnp.uint32(C)
+            + jnp.arange(C, dtype=jnp.uint32)[None, :])
+
+    bits = jnp.arange(nbits, dtype=jnp.uint32)
+    mask = (jnp.uint32(1) << bits)                       # (nbits,)
+    diff = old_u32 ^ new_u32
+    flip = (diff[..., None] & mask) != 0                  # (R,C,nbits)
+    to_ap = flip & ((new_u32[..., None] & mask) != 0)
+
+    u = jnp.stack(
+        [uniform_bits(seed[0], elem, b) for b in range(nbits)], axis=-1)
+    thr = jnp.where(to_ap, thr01, thr10)
+    fail = flip & (u < thr)
+
+    fail_mask = jnp.sum(jnp.where(fail, mask, jnp.uint32(0)), axis=-1,
+                        dtype=jnp.uint32)
+    stored = new_u32 ^ fail_mask
+
+    e_bit = jnp.where(to_ap, e01, e10)
+    stats = {
+        "energy_pj": jnp.sum(jnp.where(flip, e_bit, 0.0), dtype=jnp.float32),
+        "flips01": jnp.sum(to_ap, dtype=jnp.int32),
+        "flips10": jnp.sum(flip & ~to_ap, dtype=jnp.int32),
+        "errors": jnp.sum(fail, dtype=jnp.int32),
+    }
+    return stored, stats

@@ -1,0 +1,3 @@
+from repro.kernels.kv_quant.ops import kv_dequant, kv_quant_store  # noqa: F401
+from repro.kernels.kv_quant.kernel import kv_quant_kernel  # noqa: F401
+from repro.kernels.kv_quant.ref import kv_quant_ref  # noqa: F401

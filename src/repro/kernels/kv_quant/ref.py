@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the kv_quant kernel (same RNG, same semantics)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.extent_write.kernel import uniform_bits
+from repro.kernels.kv_quant.kernel import QMAX
+
+
+def kv_quant_ref(x: jax.Array, seed: jax.Array, thr: jax.Array,
+                 block: Tuple[int, int]) -> Tuple[jax.Array, jax.Array,
+                                                  jax.Array]:
+    R, C = x.shape
+    br, bc = block
+    gr, gc = R // br, C // bc
+    xf = x.astype(jnp.float32)
+    blocks = xf.reshape(gr, br, gc, bc).transpose(0, 2, 1, 3)  # (gr,gc,br,bc)
+    absmax = jnp.max(jnp.abs(blocks), axis=(2, 3))
+    scales = jnp.maximum(absmax, 1e-12) / QMAX                  # (gr, gc)
+    q = jnp.clip(jnp.round(blocks / scales[:, :, None, None]), -QMAX,
+                 QMAX).astype(jnp.int32)
+
+    elem = (jnp.arange(R, dtype=jnp.uint32)[:, None] * jnp.uint32(C)
+            + jnp.arange(C, dtype=jnp.uint32)[None, :])
+    elem_b = elem.reshape(gr, br, gc, bc).transpose(0, 2, 1, 3)
+
+    qu = q.astype(jnp.uint32) & jnp.uint32(0xFF)
+    bits = jnp.arange(8, dtype=jnp.uint32)
+    mask = jnp.uint32(1) << bits
+    is_set = (qu[..., None] & mask) != 0
+    u = jnp.stack([uniform_bits(seed[0], elem_b, b) for b in range(8)],
+                  axis=-1)
+    fail = is_set & (u < thr)
+    fail_mask = jnp.sum(jnp.where(fail, mask, jnp.uint32(0)), axis=-1,
+                        dtype=jnp.uint32)
+    stored_u = qu ^ fail_mask
+    stored = ((stored_u.astype(jnp.int32) ^ 0x80) - 0x80).astype(jnp.int8)
+    stored = stored.transpose(0, 2, 1, 3).reshape(R, C)
+    errors = jnp.sum(fail, axis=(2, 3, 4), dtype=jnp.int32)
+    return stored, scales, errors

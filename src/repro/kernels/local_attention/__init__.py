@@ -1,0 +1,2 @@
+from repro.kernels.local_attention.ops import local_attention  # noqa: F401
+from repro.kernels.local_attention.ref import local_attention_ref  # noqa: F401

@@ -1,0 +1,12 @@
+"""Oracle for the local_attention kernel: the framework's exact chunked
+attention (models/attention.py) — independently tested against decode."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import attention
+
+
+def local_attention_ref(q, k, v, *, window: int, softcap: float = 0.0):
+    return attention(q, k, v, window=window, causal=True,
+                     softcap_val=softcap, dtype=q.dtype)

@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real step function (train_step / prefill /
+decode) against ShapeDtypeStruct inputs on the production mesh, compiles it,
+and records memory_analysis / cost_analysis / per-collective byte counts
+parsed from the optimized HLO. No arrays are ever allocated at full size.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, all_cells, cell_is_runnable
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.sharding.rules import (default_rules, make_constrain, spec_for,
+                                  strategy_rules, tree_shardings)
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    shp = SHAPES[shape_name]
+    return api.batch_shapes(shp)
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _collective_bytes(hlo_text: str, n_devices: int):
+    """Parse per-collective wire-byte totals from optimized HLO.
+
+    Returns {op_kind: {"count", "result_bytes", "wire_bytes"}}. Wire bytes
+    use ring-algorithm estimates per participating group:
+      all-gather / reduce-scatter: (g-1)/g * full_bytes
+      all-reduce:                2*(g-1)/g * bytes
+      all-to-all:                  (g-1)/g * bytes
+      collective-permute:                    bytes
+    """
+    dt_bytes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+    pat = re.compile(
+        r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s*"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start)?\(")
+    grp = re.compile(r"replica_groups=\{?\{([0-9.,]+)\}")
+    out = {}
+    for m in pat.finditer(hlo_text):
+        kind = m.group(4)
+        # result bytes: tuple or single array
+        nbytes = 0
+        if m.group(1) is not None:
+            for part in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", m.group(1)):
+                dt, dims = part.group(1), part.group(2)
+                sz = 1
+                for d in dims.split(","):
+                    if d:
+                        sz *= int(d)
+                nbytes += sz * dt_bytes.get(dt, 4)
+        else:
+            sz = 1
+            for d in (m.group(3) or "").split(","):
+                if d:
+                    sz *= int(d)
+            nbytes = sz * dt_bytes.get(m.group(2), 4)
+        # group size from the replica_groups following this op
+        tail = hlo_text[m.end():m.end() + 2000]
+        gm = grp.search(tail)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = re.search(r"replica_groups=\[(\d+),(\d+)\]", tail)
+            g = int(gi.group(2)) if gi else n_devices
+        g = max(2, g)
+        if kind == "all-reduce":
+            wire = 2 * (g - 1) / g * nbytes
+        elif kind == "collective-permute":
+            wire = nbytes
+        else:
+            wire = (g - 1) / g * nbytes
+        rec = out.setdefault(kind, {"count": 0, "result_bytes": 0,
+                                    "wire_bytes": 0.0})
+        rec["count"] += 1
+        rec["result_bytes"] += nbytes
+        rec["wire_bytes"] += wire
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, rules, remat=True):
+    """Build (fn, example_args (SDS), in_shardings, out_shardings, donate)."""
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    shp = SHAPES[shape_name]
+    constrain = make_constrain(mesh, rules)
+
+    p_axes = api.param_axes()
+    p_shapes = api.param_shapes()
+    params_sh = tree_shardings(mesh, rules, p_axes, p_shapes)
+    params_sds = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    batch_sds = api.batch_shapes(shp)
+    batch_sh = {
+        k: NamedSharding(mesh, spec_for(mesh, rules, api.batch_axes(shp)[k],
+                                        v.shape))
+        for k, v in batch_sds.items()}
+    repl = NamedSharding(mesh, P())
+
+    if shp.kind == "train":
+        opt_cfg = opt.AdamWConfig()
+        step_fn = make_train_step(api, opt_cfg, constrain=constrain,
+                                  remat=remat)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        opt_sh = opt.OptState(step=repl,
+                              m=jax.tree.map(lambda s: s, params_sh),
+                              v=jax.tree.map(lambda s: s, params_sh))
+        args = (params_sds, opt_sds, batch_sds)
+        in_sh = (params_sh, opt_sh, batch_sh)
+        out_sh = (params_sh, opt_sh, None)
+        donate = (0, 1)
+        return step_fn, args, in_sh, out_sh, donate
+
+    max_seq = shp.seq_len
+    if shp.kind == "prefill":
+        def prefill_fn(params, batch):
+            return api.prefill(params, batch, max_seq, constrain=constrain)
+        cache_sds = jax.eval_shape(
+            lambda: api.init_cache(shp.global_batch, max_seq))
+        cache_sh = tree_shardings(
+            mesh, rules, _cache_axes_tree(api, cache_sds),
+            jax.tree.map(lambda s: s.shape, cache_sds))
+        args = (params_sds, batch_sds)
+        in_sh = (params_sh, batch_sh)
+        out_sh = (repl, cache_sh)
+        return prefill_fn, args, in_sh, out_sh, ()
+
+    # decode: one new token against a seq_len-deep cache
+    def decode_fn(params, token, cache, pos):
+        return api.decode_step(params, token, cache, pos, max_seq,
+                               constrain=constrain)
+    cache_sds = jax.eval_shape(
+        lambda: api.init_cache(shp.global_batch, max_seq))
+    cache_sh = tree_shardings(
+        mesh, rules, _cache_axes_tree(api, cache_sds),
+        jax.tree.map(lambda s: s.shape, cache_sds))
+    token_sds = jax.ShapeDtypeStruct((shp.global_batch,), jnp.int32)
+    token_sh = NamedSharding(mesh, spec_for(
+        mesh, rules, ("batch",), token_sds.shape))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (params_sds, token_sds, cache_sds, pos_sds)
+    in_sh = (params_sh, token_sh, cache_sh, repl)
+    out_sh = (repl, cache_sh)
+    return decode_fn, args, in_sh, out_sh, (2,)
+
+
+def _cache_axes_tree(api, cache_sds):
+    """Expand the per-family cache_axes template to the actual tree
+    structure (leaves = logical-axes tuples)."""
+    template = api.cache_axes()
+
+    def expand(ax, sds):
+        return ax
+
+    # template has same dict structure; map over sds tree with template lookup
+    flat_sds, treedef = jax.tree.flatten(cache_sds)
+    flat_ax = treedef.flatten_up_to(template)
+    return treedef.unflatten(flat_ax)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             rules_override=None, tag: str = "baseline",
+             mesh_shape=None, rules_name: str = "baseline", remat=True):
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    n_dev = mesh.devices.size
+    rules = rules_override or strategy_rules(mesh, rules_name)
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate = build_cell(arch, shape_name, mesh,
+                                                 rules, remat=remat)
+    mesh_label = "x".join(str(s) for s in mesh.devices.shape)
+    rec = {"arch": arch, "shape": shape_name, "tag": tag,
+           "mesh": ("pod" + mesh_label) if multi_pod else mesh_label,
+           "rules": rules_name, "remat": str(remat),
+           "n_devices": n_dev}
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    rec["lower_s"] = round(t1 - t0, 2)
+    rec["compile_s"] = round(t2 - t1, 2)
+    rec["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+    }
+    rec["cost"] = {k: cost.get(k) for k in
+                   ("flops", "bytes accessed", "transcendentals")
+                   if k in cost}
+    hlo = compiled.as_text()
+    rec["collectives"] = _collective_bytes(hlo, n_dev)
+    rec["hlo_bytes"] = len(hlo)
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    rec["num_params"] = api.num_params()
+    rec["active_params"] = api.active_params_per_token()
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{arch}__{shape_name}__{rec['mesh']}__{tag}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override intra-pod (data,model), e.g. 64x4")
+    ap.add_argument("--rules", default="baseline",
+                    help="sharding strategy name (see sharding/rules.py)")
+    ap.add_argument("--remat", default="full",
+                    choices=("full", "selective", "none"))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    mesh_shape = (tuple(int(x) for x in args.mesh_shape.split("x"))
+                  if args.mesh_shape else None)
+    remat = {"full": True, "selective": "selective", "none": False}[args.remat]
+
+    cells = (list(all_cells()) if args.all
+             else [(args.arch, args.shape)])
+    failures = []
+    for arch, shape in cells:
+        if not cell_is_runnable(arch, shape):
+            print(f"SKIP {arch} x {shape} (documented in DESIGN.md §4)")
+            continue
+        base = "x".join(str(s) for s in (mesh_shape or (16, 16)))
+        mesh_name = ("pod2x" + base) if args.multi_pod else base
+        path = out_dir / f"{arch}__{shape}__{mesh_name}__{args.tag}.json"
+        if args.skip_existing and path.exists():
+            print(f"CACHED {arch} x {shape} x {mesh_name}")
+            continue
+        try:
+            rec = run_cell(arch, shape, args.multi_pod, out_dir,
+                           tag=args.tag, mesh_shape=mesh_shape,
+                           rules_name=args.rules, remat=remat)
+            print(f"OK {arch} x {shape} x {mesh_name}: "
+                  f"compile={rec['compile_s']}s "
+                  f"flops/dev={rec['cost'].get('flops'):.3e} "
+                  f"peak={rec['memory']['peak_bytes']}")
+        except Exception as e:  # record, keep sweeping
+            failures.append((arch, shape, repr(e)))
+            print(f"FAIL {arch} x {shape} x {mesh_name}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall cells OK")
+
+
+if __name__ == "__main__":
+    main()

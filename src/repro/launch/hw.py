@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants used by the roofline analysis (target HW —
+this container only compiles, it never runs on the real part)."""
+
+PEAK_FLOPS_BF16 = 197e12   # per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW_PER_LINK = 50e9     # bytes/s per link (conservative: 1 link/collective)
+CHIPS_PER_POD = 256

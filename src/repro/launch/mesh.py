@@ -1,0 +1,40 @@
+"""Production mesh builders.
+
+Functions (never module-level constants) so that importing this module
+never touches jax device state. Single pod: (data=16, model=16) = 256
+chips (TPU v5e-256 pod). Multi-pod: a leading `pod` axis of 2 -> 512
+chips; the sharding rules put only the gradient all-reduce on the pod
+axis (DCN-friendly traffic pattern, scales to N pods by changing one
+number).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape=None) -> Mesh:
+    """Default single-pod (data=16, model=16); multi-pod (pod=2, 16, 16).
+    `shape` overrides the intra-pod (data, model) split for §Perf strategy
+    validation — e.g. (64, 4) — chip count must stay 256 per pod."""
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    elif multi_pod:
+        shape = (2,) + tuple(shape)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, found {len(devices)};"
+            " the dry-run launcher must set"
+            " XLA_FLAGS=--xla_force_host_platform_device_count=512 before any"
+            " jax import")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1-device mesh for CPU smoke tests: same axis names, size 1."""
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))

@@ -1,0 +1,199 @@
+"""Uniform model API over all assigned architectures.
+
+``get_model(cfg)`` returns a ``ModelApi`` whose methods dispatch on the
+config family; train_step / serving / dryrun never special-case archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import rglru, ssm, transformer, vlm, whisper
+from repro.models.layers import (
+    init_from_descs, param_count, shapes_from_descs, specs_from_descs,
+)
+
+_KV_AXES = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+
+_NO_CONSTRAIN = lambda t, spec: t  # noqa: E731
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def descs(self):
+        f = self.cfg.family
+        if f in ("dense", "moe"):
+            return transformer.descs(self.cfg)
+        if f == "vlm":
+            return vlm.descs(self.cfg)
+        if f == "ssm":
+            return ssm.descs(self.cfg)
+        if f == "hybrid":
+            return rglru.descs(self.cfg)
+        if f == "audio":
+            return whisper.descs(self.cfg)
+        raise ValueError(f)
+
+    def init(self, key: jax.Array):
+        return init_from_descs(key, self.descs(), jnp.dtype(self.cfg.param_dtype))
+
+    def param_axes(self):
+        return specs_from_descs(self.descs())
+
+    def param_shapes(self):
+        return shapes_from_descs(self.descs())
+
+    def num_params(self) -> int:
+        return param_count(self.descs())
+
+    def active_params_per_token(self) -> int:
+        """For MODEL_FLOPS = 6 * N_active * D accounting."""
+        total = self.num_params()
+        cfg = self.cfg
+        if not cfg.num_experts:
+            return total
+        expert_p = 3 * cfg.d_model * cfg.d_ff * cfg.num_experts * cfg.num_layers
+        active = 3 * cfg.d_model * cfg.d_ff * cfg.experts_per_token * cfg.num_layers
+        return total - expert_p + active
+
+    # ------------------------------------------------------------ training
+    def forward_hidden(self, params, batch, *, remat=True,
+                       constrain=_NO_CONSTRAIN):
+        f = self.cfg.family
+        if f in ("dense", "moe"):
+            return transformer.hidden_forward(
+                params, batch["tokens"], self.cfg, remat=remat,
+                constrain=constrain)
+        if f == "vlm":
+            return vlm.hidden_forward(params, batch, self.cfg, remat=remat,
+                                      constrain=constrain)
+        if f == "ssm":
+            return ssm.hidden_forward(params, batch["tokens"], self.cfg,
+                                      remat=remat, constrain=constrain)
+        if f == "hybrid":
+            return rglru.hidden_forward(params, batch["tokens"], self.cfg,
+                                        remat=remat, constrain=constrain)
+        if f == "audio":
+            return whisper.hidden_forward(params, batch, self.cfg,
+                                          remat=remat, constrain=constrain)
+        raise ValueError(f)
+
+    def logits(self, params, h):
+        if self.cfg.family == "audio":
+            return whisper.logits_fn(params, h, self.cfg)
+        from repro.models.layers import unembed
+        return unembed(params["embed"], h, self.cfg,
+                       jnp.dtype(self.cfg.compute_dtype))
+
+    # ------------------------------------------------------------- serving
+    def prefill(self, params, batch, max_seq: int, *,
+                constrain=_NO_CONSTRAIN):
+        f = self.cfg.family
+        if f in ("dense", "moe"):
+            return transformer.prefill(params, batch["tokens"], self.cfg,
+                                       max_seq, constrain=constrain)
+        if f == "vlm":
+            return vlm.prefill(params, batch, self.cfg, max_seq,
+                               constrain=constrain)
+        if f == "ssm":
+            return ssm.prefill(params, batch["tokens"], self.cfg, max_seq,
+                               constrain=constrain)
+        if f == "hybrid":
+            return rglru.prefill(params, batch["tokens"], self.cfg, max_seq,
+                                 constrain=constrain)
+        if f == "audio":
+            return whisper.prefill(params, batch, self.cfg, max_seq,
+                                   constrain=constrain)
+        raise ValueError(f)
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.init_cache(self.cfg, batch_size, max_seq)
+        if f == "ssm":
+            return ssm.init_cache(self.cfg, batch_size, max_seq)
+        if f == "hybrid":
+            return rglru.init_cache(self.cfg, batch_size, max_seq)
+        if f == "audio":
+            return whisper.init_cache(self.cfg, batch_size, max_seq)
+        raise ValueError(f)
+
+    def decode_step(self, params, token, cache, pos, max_seq: int, *,
+                    constrain=_NO_CONSTRAIN):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.decode_step(params, token, cache, pos,
+                                           self.cfg, max_seq,
+                                           constrain=constrain)
+        if f == "ssm":
+            return ssm.decode_step(params, token, cache, pos, self.cfg,
+                                   max_seq, constrain=constrain)
+        if f == "hybrid":
+            return rglru.decode_step(params, token, cache, pos, self.cfg,
+                                     max_seq, constrain=constrain)
+        if f == "audio":
+            return whisper.decode_step(params, token, cache, pos, self.cfg,
+                                       max_seq, constrain=constrain)
+        raise ValueError(f)
+
+    def cache_axes(self):
+        """Logical axes tree matching init_cache structure."""
+        f = self.cfg.family
+        kv = {"k": _KV_AXES, "v": _KV_AXES}
+        if f in ("dense", "moe", "vlm"):
+            spec = transformer.cache_spec(self.cfg, 8)  # names only
+            return {name: dict(kv) for name in spec}
+        if f == "ssm":
+            return {"state": ("layers", "batch", "ssm_heads", None, None),
+                    "conv": ("layers", "batch", None, "mlp")}
+        if f == "hybrid":
+            return {"rec_state": ("layers", "batch", "mlp"),
+                    "rec_conv": ("layers", "batch", None, "mlp"),
+                    "att": dict(kv)}
+        if f == "audio":
+            return {"self": dict(kv), "cross": dict(kv)}
+        raise ValueError(f)
+
+    # ------------------------------------------------------------ shapes
+    def batch_shapes(self, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Train/prefill input ShapeDtypeStructs for a shape cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if cfg.family == "audio":
+            dec = S if shape.kind == "train" else max(64, S // 512)
+            out = {"frames": jax.ShapeDtypeStruct(
+                       (B, S, cfg.d_model), jnp.dtype(cfg.compute_dtype)),
+                   "tokens": jax.ShapeDtypeStruct((B, dec), i32)}
+            if shape.kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct((B, dec), i32)
+            return out
+        if cfg.family == "vlm":
+            n_txt = S - cfg.num_image_tokens
+            assert n_txt > 0, (S, cfg.num_image_tokens)
+            out = {"image_embeds": jax.ShapeDtypeStruct(
+                       (B, cfg.num_image_tokens, cfg.vision_dim),
+                       jnp.dtype(cfg.compute_dtype)),
+                   "tokens": jax.ShapeDtypeStruct((B, n_txt), i32)}
+            if shape.kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            return out
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return out
+
+    def batch_axes(self, shape: ShapeConfig) -> Dict[str, Tuple]:
+        return {name: ("batch",) + (None,) * (len(sds.shape) - 1)
+                for name, sds in self.batch_shapes(shape).items()}
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(cfg)

@@ -1,0 +1,201 @@
+"""Attention: GQA with per-layer sliding windows, logit softcap, QKV bias.
+
+Training/prefill use an exact query-chunked formulation (attention rows are
+independent, so chunking queries needs no flash-style running statistics):
+live logits are (q_chunk x key_range) instead of (S x S). For windowed layers
+the key range is additionally sliced to ~window size, so masked-out FLOPs are
+not paid (keeps the compute roofline term honest for SWA models).
+
+Decode uses a unified KV cache: every layer class has capacity C (= window W
+for local layers -> ring buffer; = S_max for full layers). Slot `i` of a ring
+buffer holds absolute position p = i + W*floor((pos-i)/W) — derived, never
+stored — and the validity mask falls out of p >= 0.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDesc, rope, softcap
+
+NEG_INF = -2.0e38
+
+
+def attn_descs(cfg: ModelConfig, layers: int) -> Dict[str, ParamDesc]:
+    L, D, H, K, h = layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    d = {
+        "wq": ParamDesc((L, D, H, h), ("layers", "embed", "heads", "head_dim")),
+        "wk": ParamDesc((L, D, K, h), ("layers", "embed", "kv_heads", "head_dim")),
+        "wv": ParamDesc((L, D, K, h), ("layers", "embed", "kv_heads", "head_dim")),
+        "wo": ParamDesc((L, H, h, D), ("layers", "heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamDesc((L, H, h), ("layers", "heads", "bias"))
+        d["bk"] = ParamDesc((L, K, h), ("layers", "kv_heads", "bias"))
+        d["bv"] = ParamDesc((L, K, h), ("layers", "kv_heads", "bias"))
+    return d
+
+
+def qkv_project(p, x, cfg: ModelConfig, positions, dtype):
+    """x: (B,S,D) -> q (B,S,H,h), k/v (B,S,K,h), rope applied."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_block(q, k, v, mask, scale, cap, dtype):
+    """q: (B,Q,H,h) grouped against k/v: (B,T,K,h). mask: (B,Q,T) or None."""
+    B, Q, H, h = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Q, K, G, h)
+    logits = jnp.einsum(
+        "bqkgh,btkh->bkgqt", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    logits = softcap(logits, cap)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dtype)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", probs, v)
+    return out.reshape(B, Q, H, h)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    causal: bool,
+    softcap_val: float,
+    q_positions: Optional[jax.Array] = None,
+    k_positions: Optional[jax.Array] = None,
+    q_chunk: int = 1024,
+    dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Exact chunked attention. window: keys j attend iff i-j < window (and
+    j<=i when causal). Pass window >= S for full attention."""
+    B, S, H, h = q.shape
+    T = k.shape[1]
+    scale = h ** -0.5
+    if q_positions is None:
+        q_positions = jnp.arange(S)[None, :]
+    if k_positions is None:
+        k_positions = jnp.arange(T)[None, :]
+
+    Q = min(q_chunk, S)
+    if S % Q != 0:  # fall back to single chunk for ragged smoke shapes
+        Q = S
+    n_chunks = S // Q
+
+    # Windowed layers: only a bounded key span can be visible to a q-chunk.
+    slice_keys = causal and window < T and (window + Q) < T
+    kspan = min(T, window + Q) if slice_keys else T
+
+    def one_chunk(c):
+        q_c = jax.lax.dynamic_slice_in_dim(q, c * Q, Q, axis=1)
+        qp_c = jax.lax.dynamic_slice_in_dim(q_positions, c * Q, Q, axis=1)
+        if slice_keys:
+            start = jnp.clip(c * Q + Q - kspan, 0, T - kspan)
+            k_c = jax.lax.dynamic_slice_in_dim(k, start, kspan, axis=1)
+            v_c = jax.lax.dynamic_slice_in_dim(v, start, kspan, axis=1)
+            kp_c = jax.lax.dynamic_slice_in_dim(k_positions, start, kspan, axis=1)
+        else:
+            k_c, v_c, kp_c = k, v, k_positions
+        if causal:
+            d = qp_c[:, :, None] - kp_c[:, None, :]
+            mask = (d >= 0) & (d < window)
+        else:
+            mask = None  # non-causal (encoder/cross): window is meaningless
+        return _sdpa_block(q_c, k_c, v_c, mask, scale, softcap_val, dtype)
+
+    if n_chunks == 1:
+        return one_chunk(0)
+
+    def body(_, c):
+        return None, one_chunk(c)
+
+    _, out = jax.lax.scan(
+        jax.checkpoint(body), None, jnp.arange(n_chunks)
+    )
+    # (n_chunks, B, Q, H, h) -> (B, S, H, h)
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, h)
+
+
+# ---------------------------------------------------------------------------
+# decode-time cache
+# ---------------------------------------------------------------------------
+
+def cache_capacity(window: int, max_seq: int) -> int:
+    return min(window, max_seq) if window > 0 else max_seq
+
+
+def init_cache(n_layers: int, batch: int, capacity: int, kv_heads: int,
+               head_dim: int, dtype) -> Dict[str, jax.Array]:
+    shape = (n_layers, batch, capacity, kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def ring_positions(capacity: int, pos: jax.Array) -> jax.Array:
+    """Absolute position stored in each slot of a capacity-C ring buffer when
+    the most recent write was at `pos`. Negative -> slot not yet written."""
+    i = jnp.arange(capacity)
+    return i + capacity * ((pos - i) // capacity)
+
+
+def cache_update(cache_k, cache_v, k_new, v_new, pos: jax.Array):
+    """Write one token (B,1,K,h) at ring slot pos % C. Layer dim excluded."""
+    C = cache_k.shape[1]
+    slot = pos % C
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    return cache_k, cache_v
+
+
+def decode_attention(
+    q: jax.Array,          # (B,1,H,h) — rope already applied
+    cache_k: jax.Array,    # (B,C,K,h)
+    cache_v: jax.Array,
+    pos: jax.Array,        # scalar: position of the token being decoded
+    *,
+    window: int,
+    softcap_val: float,
+    dtype=jnp.bfloat16,
+) -> jax.Array:
+    C = cache_k.shape[1]
+    kp = ring_positions(C, pos)  # (C,)
+    d = pos - kp
+    mask = (kp >= 0) & (d >= 0) & (d < window)
+    mask = jnp.broadcast_to(mask[None, None, :], (q.shape[0], q.shape[1], C))
+    return _sdpa_block(q, cache_k, cache_v, mask, q.shape[-1] ** -0.5,
+                       softcap_val, dtype)
+
+
+def prefill_cache(k: jax.Array, v: jax.Array, capacity: int):
+    """Fill a ring cache from prefill K/V (B,S,K,h): keep the last `capacity`
+    positions, placed at their ring slots."""
+    B, S, K, h = k.shape
+    if S <= capacity:
+        pad = capacity - S
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return ck, cv
+    tail_k = k[:, S - capacity:]
+    tail_v = v[:, S - capacity:]
+    # position p lands in slot p % capacity; tail position j (absolute
+    # S-capacity+j) -> slot (S-capacity+j) % capacity == roll by (S % capacity)
+    shift = (S - capacity) % capacity
+    ck = jnp.roll(tail_k, shift=shift, axis=1)
+    cv = jnp.roll(tail_v, shift=shift, axis=1)
+    return ck, cv

@@ -1,0 +1,184 @@
+"""Shared layers + parameter-descriptor machinery.
+
+Parameters are described once as ``ParamDesc(shape, axes)`` trees; both the
+initializer and the sharding-spec tree derive from the same descriptors, so
+logical axes can never drift from the actual arrays. Scanned layer stacks
+carry a leading ``layers`` axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDesc:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]  # logical axis names, one per dim
+    scale: float = 1.0     # stddev multiplier on top of 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_desc(x: Any) -> bool:
+    return isinstance(x, ParamDesc)
+
+
+def init_from_descs(key: jax.Array, descs: Any, dtype) -> Any:
+    """Materialize a descriptor tree into a parameter tree."""
+    leaves, treedef = jax.tree.flatten(descs, is_leaf=is_desc)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.axes and d.axes[-1] == "norm_scale":
+            out.append(jnp.ones(d.shape, dtype))
+            continue
+        if d.axes and d.axes[-1] == "bias":
+            out.append(jnp.zeros(d.shape, dtype))
+            continue
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / math.sqrt(max(1, fan_in))
+        out.append((jax.random.normal(k, d.shape) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def specs_from_descs(descs: Any) -> Any:
+    """Descriptor tree -> tree of logical-axes tuples (same structure)."""
+    return jax.tree.map(lambda d: d.axes, descs, is_leaf=is_desc)
+
+
+def shapes_from_descs(descs: Any) -> Any:
+    return jax.tree.map(lambda d: d.shape, descs, is_leaf=is_desc)
+
+
+def param_count(descs: Any) -> int:
+    return sum(
+        math.prod(d.shape)
+        for d in jax.tree.leaves(descs, is_leaf=is_desc)
+    )
+
+
+def remat_wrap(fn, remat):
+    """Remat policy for scanned layer-group bodies.
+
+    True/'full'  -> checkpoint everything (recompute the whole group in bwd)
+    'selective'  -> save matmul outputs (jax 'dots saveable' policy):
+                    ~0.35x the recompute of full remat at ~2x activation
+                    residency — the §Perf knob for compute-bound cells
+    False        -> no remat (only viable at smoke scale)
+    """
+    if remat is True or remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "selective":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# numerics helpers
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    if theta <= 0.0:
+        return x
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq_len: int, d_model: int, offset: int = 0) -> jax.Array:
+    """Whisper-style sinusoidal position encodings (adaptation: used for both
+    encoder and decoder; the HF model learns decoder positions)."""
+    pos = jnp.arange(offset, offset + seq_len, dtype=jnp.float32)[:, None]
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(1, half - 1))
+    ang = pos * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP / embedding descriptors
+# ---------------------------------------------------------------------------
+
+def mlp_descs(cfg: ModelConfig, layers: int) -> Dict[str, ParamDesc]:
+    L, D, F = layers, cfg.d_model, cfg.d_ff
+    return {
+        "wi_gate": ParamDesc((L, D, F), ("layers", "embed", "mlp")),
+        "wi_up": ParamDesc((L, D, F), ("layers", "embed", "mlp")),
+        "wo": ParamDesc((L, F, D), ("layers", "mlp", "embed")),
+    }
+
+
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array, compute_dtype,
+              act: str = "silu") -> jax.Array:
+    act_fn = jax.nn.silu if act == "silu" else functools.partial(
+        jax.nn.gelu, approximate=True)
+    gate = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(compute_dtype))
+    up = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(compute_dtype))
+    a = act_fn(gate.astype(jnp.float32)).astype(compute_dtype) * up
+    return jnp.einsum("bsf,fd->bsd", a, p["wo"].astype(compute_dtype))
+
+
+def embed_descs(cfg: ModelConfig) -> Dict[str, ParamDesc]:
+    # embedding std = 1/sqrt(D): tied lookups are scaled by sqrt(D) (gemma
+    # convention) giving ~unit-variance hiddens AND ~unit-scale tied logits.
+    # ParamDesc std = scale/sqrt(fan_in) with fan_in = vocab, so
+    # scale = sqrt(V/D).
+    emb_scale = math.sqrt(cfg.vocab_size / cfg.d_model)
+    d = {"embedding": ParamDesc((cfg.vocab_size, cfg.d_model),
+                                ("vocab", "embed"), scale=emb_scale)}
+    if not cfg.tie_embeddings:
+        d["unembedding"] = ParamDesc((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return d
+
+
+def embed_tokens(p, tokens: jax.Array, cfg: ModelConfig, compute_dtype) -> jax.Array:
+    emb = p["embedding"].astype(compute_dtype)[tokens]
+    if cfg.tie_embeddings:
+        emb = emb * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    return emb
+
+
+def unembed(p, h: jax.Array, cfg: ModelConfig, compute_dtype) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum(
+            "bsd,vd->bsv", h, p["embedding"].astype(compute_dtype),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", h, p["unembedding"].astype(compute_dtype),
+            preferred_element_type=jnp.float32,
+        )
+    return softcap(logits, cfg.final_logit_softcap)

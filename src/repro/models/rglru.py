@@ -1,0 +1,285 @@
+"""RecurrentGemma: RG-LRU recurrent blocks + local attention, pattern (R,R,A).
+
+26 layers = 8 scanned (R,R,A) groups + 2 trailing R layers. Parameters live
+in per-kind stacks (rec: 18, attn: 8, mlp/norms: 26); the group scan consumes
+exact reshaped views, so no parameter is duplicated and HLO stays
+depth-independent. RG-LRU uses a log-space associative scan for train/prefill
+and the exact 1-step update for decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    ParamDesc, embed_descs, embed_tokens, mlp_apply, mlp_descs,
+    rms_norm, unembed,
+)
+
+_C_GATE = 8.0  # RG-LRU "c" constant
+
+
+def _counts(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    L = cfg.num_layers
+    plen = len(cfg.block_pattern)       # 3
+    n_groups, tail = divmod(L, plen)    # 8, 2
+    kinds = [cfg.block_pattern[i % plen] for i in range(L)]
+    n_rec = sum(k == "R" for k in kinds)
+    n_att = L - n_rec
+    return n_groups, tail, n_rec, n_att
+
+
+def rec_descs(cfg: ModelConfig, n: int) -> Dict[str, ParamDesc]:
+    D, R, K = cfg.d_model, cfg.lru_width, cfg.ssm_conv_width
+    return {
+        "ln": ParamDesc((n, D), ("layers", "norm_scale")),
+        "wy": ParamDesc((n, D, R), ("layers", "embed", "mlp")),
+        "wx": ParamDesc((n, D, R), ("layers", "embed", "mlp")),
+        "conv_w": ParamDesc((n, K, R), ("layers", "conv", "mlp")),
+        "conv_b": ParamDesc((n, R), ("layers", "bias")),
+        "wr": ParamDesc((n, R, R), ("layers", "mlp", "rnn_gate")),
+        "wi": ParamDesc((n, R, R), ("layers", "mlp", "rnn_gate")),
+        "lam": ParamDesc((n, R), ("layers", "norm_scale")),
+        "out": ParamDesc((n, R, D), ("layers", "mlp", "embed")),
+    }
+
+
+def att_descs(cfg: ModelConfig, n: int) -> Dict[str, Any]:
+    d = attn.attn_descs(cfg, n)
+    d["ln"] = ParamDesc((n, cfg.d_model), ("layers", "norm_scale"))
+    return d
+
+
+def descs(cfg: ModelConfig) -> Dict[str, Any]:
+    _, _, n_rec, n_att = _counts(cfg)
+    L, D = cfg.num_layers, cfg.d_model
+    return {
+        "embed": embed_descs(cfg),
+        "rec": rec_descs(cfg, n_rec),
+        "att": att_descs(cfg, n_att),
+        "mlp": {**mlp_descs(cfg, L),
+                "ln": ParamDesc((L, D), ("layers", "norm_scale"))},
+        "final_norm": ParamDesc((D,), ("norm_scale",)),
+    }
+
+
+def _rglru_gates(lp, u, dtype):
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rg->bsg", u, lp["wr"].astype(dtype))
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rg->bsg", u, lp["wi"].astype(dtype))
+                       .astype(jnp.float32))
+    log_a = -_C_GATE * jax.nn.softplus(lp["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (
+        i * u.astype(jnp.float32))
+    return a, gated
+
+
+def rec_block(lp, h, cfg: ModelConfig, dtype, state=None, conv_state=None):
+    """RG-LRU temporal-mix block. state: (B,R) f32 for decode."""
+    x = rms_norm(h, lp["ln"], cfg.norm_eps)
+    y = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, lp["wy"].astype(dtype))
+                    .astype(jnp.float32)).astype(dtype)
+    u = jnp.einsum("bsd,dr->bsr", x, lp["wx"].astype(dtype))
+
+    K = lp["conv_w"].shape[0]
+    if conv_state is None:
+        conv = jax.lax.conv_general_dilated(
+            u, lp["conv_w"].astype(dtype)[:, None, :], (1,), [(K - 1, 0)],
+            dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=u.shape[-1],
+        ) + lp["conv_b"].astype(dtype)
+        S = u.shape[1]
+        new_conv = (u[:, S - (K - 1):, :] if S >= K - 1
+                    else jnp.pad(u, ((0, 0), (K - 1 - S, 0), (0, 0))))
+    else:
+        win = jnp.concatenate([conv_state.astype(dtype), u], axis=1)
+        conv = (jnp.einsum("bkr,kr->br", win, lp["conv_w"].astype(dtype))
+                + lp["conv_b"].astype(dtype))[:, None, :]
+        new_conv = win[:, 1:, :]
+
+    a, gated = _rglru_gates(lp, conv, dtype)
+    if state is None:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a2 * a1, a2 * b1 + b2
+        a_sc, hseq = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        new_state = hseq[:, -1, :]
+    else:
+        new_state = a[:, 0] * state + gated[:, 0]
+        hseq = new_state[:, None, :]
+    out = jnp.einsum("bsr,rd->bsd", (hseq.astype(dtype) * y),
+                     lp["out"].astype(dtype))
+    return h + out, new_state, new_conv
+
+
+def att_block(lp, h, cfg: ModelConfig, dtype, positions, cache=None, pos=None):
+    """Local-attention block (MQA). cache: {'k','v'} (B,C,1,hd) for decode."""
+    x = rms_norm(h, lp["ln"], cfg.norm_eps)
+    q, k, v = attn.qkv_project(lp, x, cfg, positions, dtype)
+    if cache is None:
+        a = attn.attention(q, k, v, window=cfg.local_window, causal=True,
+                           softcap_val=0.0, q_positions=positions,
+                           k_positions=positions, dtype=dtype)
+        new_cache = (k, v)
+    else:
+        ck, cv = attn.cache_update(cache["k"], cache["v"], k, v, pos)
+        a = attn.decode_attention(q, ck, cv, pos, window=cfg.local_window,
+                                  softcap_val=0.0, dtype=dtype)
+        new_cache = (ck, cv)
+    out = jnp.einsum("bsnh,nhd->bsd", a, lp["wo"].astype(dtype))
+    return h + out, new_cache
+
+
+def _mlp_block(lp, h, cfg: ModelConfig, dtype):
+    x = rms_norm(h, lp["ln"], cfg.norm_eps)
+    return h + mlp_apply(lp, x, dtype, cfg.mlp_act)
+
+
+def _views(cfg: ModelConfig, params):
+    """Split per-kind stacks into scan-group views + tail views."""
+    n_g, tail, n_rec, n_att = _counts(cfg)
+    rec, att, mlp = params["rec"], params["att"], params["mlp"]
+    body = {
+        "rec": jax.tree.map(lambda a: a[: 2 * n_g].reshape((n_g, 2) + a.shape[1:]), rec),
+        "att": jax.tree.map(lambda a: a[:n_g], att),
+        "mlp": jax.tree.map(lambda a: a[: 3 * n_g].reshape((n_g, 3) + a.shape[1:]), mlp),
+    }
+    tail_v = {
+        "rec": jax.tree.map(lambda a: a[2 * n_g:], rec),
+        "mlp": jax.tree.map(lambda a: a[3 * n_g:], mlp),
+    }
+    return body, tail_v
+
+
+def hidden_forward(params, tokens, cfg: ModelConfig, *, remat=True,
+                   constrain=lambda t, spec: t, extra_embeds=None):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    n_g, tail, _, _ = _counts(cfg)
+    h = embed_tokens(params["embed"], tokens, cfg, dtype)
+    h = constrain(h, ("batch", None, None))
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    body_p, tail_p = _views(cfg, params)
+
+    def group(h, gp):
+        for s in range(2):
+            lp = jax.tree.map(lambda a: a[s], gp["rec"])
+            h, _, _ = rec_block(lp, h, cfg, dtype)
+            h = _mlp_block(jax.tree.map(lambda a: a[s], gp["mlp"]), h, cfg, dtype)
+        h, _ = att_block(gp["att"], h, cfg, dtype, positions)
+        h = _mlp_block(jax.tree.map(lambda a: a[2], gp["mlp"]), h, cfg, dtype)
+        return constrain(h, ("batch", None, None)), None
+
+    from repro.models.layers import remat_wrap
+    body_fn = remat_wrap(group, remat)
+    h, _ = jax.lax.scan(body_fn, h, body_p)
+    for t in range(tail):
+        h, _, _ = rec_block(jax.tree.map(lambda a: a[t], tail_p["rec"]), h, cfg, dtype)
+        h = _mlp_block(jax.tree.map(lambda a: a[t], tail_p["mlp"]), h, cfg, dtype)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    n_g, tail, n_rec, n_att = _counts(cfg)
+    R, K = cfg.lru_width, cfg.ssm_conv_width
+    C = min(cfg.local_window, max_seq)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    return {
+        "rec_state": jnp.zeros((n_rec, batch, R), jnp.float32),
+        "rec_conv": jnp.zeros((n_rec, batch, K - 1, R), jnp.float32),
+        "att": attn.init_cache(n_att, batch, C, cfg.num_kv_heads,
+                               cfg.head_dim, dtype),
+    }
+
+
+def _run_serving(params, h, cfg, positions, cache, pos, dtype, constrain,
+                 prefill_cap: int = 0):
+    """Shared prefill/decode layer sweep. cache=None -> prefill (collect)."""
+    n_g, tail, n_rec, n_att = _counts(cfg)
+    body_p, tail_p = _views(cfg, params)
+    decode = cache is not None
+    if decode:
+        rec_state_b = cache["rec_state"][: 2 * n_g].reshape(n_g, 2, *cache["rec_state"].shape[1:])
+        rec_conv_b = cache["rec_conv"][: 2 * n_g].reshape(n_g, 2, *cache["rec_conv"].shape[1:])
+        att_c = jax.tree.map(lambda a: a, cache["att"])
+        xs = (body_p, rec_state_b, rec_conv_b, att_c)
+    else:
+        xs = (body_p,)
+
+    def group(h, xs_g):
+        gp = xs_g[0]
+        ys = {}
+        rs_list, rc_list = [], []
+        for s in range(2):
+            lp = jax.tree.map(lambda a: a[s], gp["rec"])
+            st = xs_g[1][s] if decode else None
+            cv = xs_g[2][s] if decode else None
+            h, st2, cv2 = rec_block(lp, h, cfg, dtype, state=st, conv_state=cv)
+            rs_list.append(st2)
+            rc_list.append(cv2.astype(jnp.float32))
+            h = _mlp_block(jax.tree.map(lambda a: a[s], gp["mlp"]), h, cfg, dtype)
+        ac = ({"k": xs_g[3]["k"], "v": xs_g[3]["v"]} if decode else None)
+        h, (nk, nv) = att_block(gp["att"], h, cfg, dtype, positions,
+                                cache=ac, pos=pos)
+        if not decode:
+            nk, nv = attn.prefill_cache(nk, nv, prefill_cap)
+        h = _mlp_block(jax.tree.map(lambda a: a[2], gp["mlp"]), h, cfg, dtype)
+        ys = {"rec_state": jnp.stack(rs_list), "rec_conv": jnp.stack(rc_list),
+              "att": {"k": nk, "v": nv}}
+        return constrain(h, ("batch", None, None)), ys
+
+    h, ys = jax.lax.scan(group, h, xs)
+    tail_states, tail_convs = [], []
+    for t in range(tail):
+        st = cache["rec_state"][2 * n_g + t] if decode else None
+        cv = cache["rec_conv"][2 * n_g + t] if decode else None
+        h, st2, cv2 = rec_block(jax.tree.map(lambda a: a[t], tail_p["rec"]),
+                                h, cfg, dtype, state=st, conv_state=cv)
+        tail_states.append(st2)
+        tail_convs.append(cv2.astype(jnp.float32))
+        h = _mlp_block(jax.tree.map(lambda a: a[t], tail_p["mlp"]), h, cfg, dtype)
+    new_cache = {
+        "rec_state": jnp.concatenate(
+            [ys["rec_state"].reshape(2 * n_g, *ys["rec_state"].shape[2:]),
+             jnp.stack(tail_states)]),
+        "rec_conv": jnp.concatenate(
+            [ys["rec_conv"].reshape(2 * n_g, *ys["rec_conv"].shape[2:]),
+             jnp.stack(tail_convs)]),
+        "att": ys["att"],
+    }
+    return h, new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_seq: int,
+            *, constrain=lambda t, spec: t, extra_embeds=None):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], tokens, cfg, dtype)
+    h = constrain(h, ("batch", None, None))
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    h, cache = _run_serving(params, h, cfg, positions, None, None, dtype,
+                            constrain,
+                            prefill_cap=min(cfg.local_window, max_seq))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    last = unembed(params["embed"], h[:, -1:, :], cfg, dtype)[:, 0]
+    return last, cache
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig, max_seq: int,
+                *, constrain=lambda t, spec: t):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    B = token.shape[0]
+    h = embed_tokens(params["embed"], token[:, None], cfg, dtype)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    h, new_cache = _run_serving(params, h, cfg, positions, cache, pos, dtype,
+                                constrain)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg, dtype)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,228 @@
+"""Mamba2 (SSD — state-space duality) stack, TPU-adapted.
+
+The GPU reference implements SSD as a warp-level chunked scan; the TPU
+adaptation expresses each chunk as dense (Q x Q) / (Q x N) einsums (MXU
+work) with a sequential ``lax.scan`` carrying the (H, P, N) inter-chunk
+state — intra-chunk compute is matmul-shaped, inter-chunk recurrence is
+O(S/Q) scan steps. Decode is the exact 1-step SSM update.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDesc, rms_norm
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    return d_inner, H, cfg.ssm_headdim, cfg.ssm_state
+
+
+def layer_descs(cfg: ModelConfig, layers: int) -> Dict[str, ParamDesc]:
+    L, D = layers, cfg.d_model
+    d_inner, H, P, N = dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return {
+        "ln": ParamDesc((L, D), ("layers", "norm_scale")),
+        "in_proj_z": ParamDesc((L, D, d_inner), ("layers", "embed", "mlp")),
+        "in_proj_x": ParamDesc((L, D, d_inner), ("layers", "embed", "mlp")),
+        "in_proj_bc": ParamDesc((L, D, 2 * N), ("layers", "embed", "ssm_state2")),
+        "in_proj_dt": ParamDesc((L, D, H), ("layers", "embed", "ssm_heads")),
+        "conv_w": ParamDesc((L, cfg.ssm_conv_width, conv_ch), ("layers", "conv", "mlp")),
+        "conv_b": ParamDesc((L, conv_ch), ("layers", "bias")),
+        "A_log": ParamDesc((L, H), ("layers", "norm_scale")),   # init ~ 1
+        "D_skip": ParamDesc((L, H), ("layers", "norm_scale")),  # init ~ 1
+        "dt_bias": ParamDesc((L, H), ("layers", "bias")),
+        "gate_ln": ParamDesc((L, d_inner), ("layers", "norm_scale")),
+        "out_proj": ParamDesc((L, d_inner, D), ("layers", "mlp", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C), w: (K,C)."""
+    K, C = w.shape
+    out = jax.lax.conv_general_dilated(
+        x, w[:, None, :],
+        window_strides=(1,), padding=[(K - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C,
+    )
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int, state0=None):
+    """SSD over chunks. x:(B,S,H,P) dt:(B,S,H) A:(H,) B_,C_:(B,S,N).
+    Returns y:(B,S,H,P), final state (B,H,P,N). All f32 internally."""
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        Q = S
+    nc = S // Q
+    xf = x.astype(jnp.float32).reshape(Bb, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bb, nc, Q, H)
+    Bf = B_.astype(jnp.float32).reshape(Bb, nc, Q, N)
+    Cf = C_.astype(jnp.float32).reshape(Bb, nc, Q, N)
+    if state0 is None:
+        state0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(state, xs):
+        xc, dtc, Bc, Cc = xs  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        a = dtc * A  # (B,Q,H) negative
+        ca = jnp.cumsum(a, axis=1)
+        # inter-chunk: contribution of incoming state
+        y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", Cc, jnp.exp(ca), state)
+        # intra-chunk. Mask BEFORE exp: for masked (i<j) entries diff > 0 can
+        # overflow exp to inf, and grad-through-where of a non-finite branch
+        # poisons the backward pass (NaN grads).
+        diff = ca[:, :, None, :] - ca[:, None, :, :]  # (B,Q,Q,H) = ca_i - ca_j
+        diff = jnp.where(tri[None, :, :, None], diff, -1e30)
+        M = jnp.exp(diff)
+        G = jnp.einsum("bqn,bkn->bqk", Cc, Bc)
+        y_intra = jnp.einsum("bqk,bqkh,bkh,bkhp->bqhp", G, M, dtc, xc)
+        # state update
+        decay_all = jnp.exp(ca[:, -1:, :])            # (B,1,H)
+        decay_rem = jnp.exp(ca[:, -1:, :] - ca)       # (B,Q,H)
+        new_state = state * decay_all[:, 0, :, None, None] + jnp.einsum(
+            "bkh,bkn,bkhp->bhpn", dtc * decay_rem, Bc, xc)
+        return new_state, y_inter + y_intra
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xf, dtf, Bf, Cf))
+    state, y = jax.lax.scan(body, state0, xs)
+    y = jnp.moveaxis(y, 0, 1).reshape(Bb, S, H, P)
+    return y, state
+
+
+def block_forward(lp, h, cfg: ModelConfig, dtype, state=None, conv_state=None):
+    """One mamba2 block. If state/conv_state given -> decode mode (S==1)."""
+    d_inner, H, P, N = dims(cfg)
+    B = h.shape[0]
+    x_in = rms_norm(h, lp["ln"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", x_in, lp["in_proj_z"].astype(dtype))
+    xs = jnp.einsum("bsd,de->bse", x_in, lp["in_proj_x"].astype(dtype))
+    bc = jnp.einsum("bsd,de->bse", x_in, lp["in_proj_bc"].astype(dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x_in, lp["in_proj_dt"].astype(dtype))
+    conv_in = jnp.concatenate([xs, bc], axis=-1)  # (B,S,conv_ch)
+
+    K = lp["conv_w"].shape[0]
+    if conv_state is None:
+        conv_out = _causal_conv(conv_in, lp["conv_w"].astype(dtype), lp["conv_b"].astype(dtype))
+        # tail of conv inputs, for prefill -> decode handoff
+        S = conv_in.shape[1]
+        if S >= K - 1:
+            new_conv_state = conv_in[:, S - (K - 1):, :]
+        else:
+            new_conv_state = jnp.pad(conv_in, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    else:
+        # decode: conv over [conv_state ++ conv_in] last K positions
+        window = jnp.concatenate([conv_state.astype(dtype), conv_in], axis=1)  # (B,K,C)
+        w = lp["conv_w"].astype(dtype)
+        conv_out = jnp.einsum("bkc,kc->bc", window, w)[:, None, :]
+        conv_out = jax.nn.silu(conv_out + lp["conv_b"].astype(dtype))
+        new_conv_state = window[:, 1:, :]
+
+    xs = conv_out[..., :d_inner].reshape(B, -1, H, P)
+    B_ = conv_out[..., d_inner:d_inner + N]
+    C_ = conv_out[..., d_inner + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+
+    if state is None:
+        y, new_state = ssd_chunked(xs, dt, A, B_, C_, cfg.ssm_chunk)
+    else:
+        # exact 1-step update: s' = exp(dt A) s + dt * B x ; y = C s'
+        da = jnp.exp(dt[:, 0, :] * A)                       # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], B_[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32))
+        new_state = state * da[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", C_[:, 0].astype(jnp.float32), new_state)[:, None]
+
+    y = y + lp["D_skip"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, -1, d_inner)
+    y = rms_norm(y.astype(dtype), lp["gate_ln"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dtype)
+    out = jnp.einsum("bse,ed->bsd", y, lp["out_proj"].astype(dtype))
+    return h + out, new_state, new_conv_state
+
+
+# ---------------------------------------------------------------------------
+# full mamba2 model
+# ---------------------------------------------------------------------------
+from repro.models.layers import embed_descs, embed_tokens, unembed  # noqa: E402
+
+
+def descs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "embed": embed_descs(cfg),
+        "layers": layer_descs(cfg, cfg.num_layers),
+        "final_norm": ParamDesc((cfg.d_model,), ("norm_scale",)),
+    }
+
+
+def hidden_forward(params, tokens, cfg: ModelConfig, *, remat=True,
+                   constrain=lambda t, spec: t, extra_embeds=None):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], tokens, cfg, dtype)
+    h = constrain(h, ("batch", None, None))
+
+    def body(h, lp):
+        h, _, _ = block_forward(lp, h, cfg, dtype)
+        return constrain(h, ("batch", None, None)), None
+
+    from repro.models.layers import remat_wrap
+    body_fn = remat_wrap(body, remat)
+    h, _ = jax.lax.scan(body_fn, h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    del max_seq  # constant-size state: the whole point of an SSM
+    d_inner, H, P, N = dims(cfg)
+    L, K = cfg.num_layers, cfg.ssm_conv_width
+    return {
+        "state": jnp.zeros((L, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((L, batch, K - 1, d_inner + 2 * N), jnp.float32),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_seq: int,
+            *, constrain=lambda t, spec: t, extra_embeds=None):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], tokens, cfg, dtype)
+    h = constrain(h, ("batch", None, None))
+
+    def body(h, lp):
+        h, state, conv = block_forward(lp, h, cfg, dtype)
+        return constrain(h, ("batch", None, None)), {
+            "state": state, "conv": conv.astype(jnp.float32)}
+
+    h, cache = jax.lax.scan(body, h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    last = unembed(params["embed"], h[:, -1:, :], cfg, dtype)[:, 0]
+    return last, cache
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig, max_seq: int,
+                *, constrain=lambda t, spec: t):
+    del pos, max_seq  # position-free recurrence
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], token[:, None], cfg, dtype)
+
+    def body(h, xs):
+        lp, c = xs
+        h, state, conv = block_forward(lp, h, cfg, dtype,
+                                       state=c["state"], conv_state=c["conv"])
+        return h, {"state": state, "conv": conv.astype(jnp.float32)}
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg, dtype)[:, 0]
+    return logits, new_cache

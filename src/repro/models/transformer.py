@@ -1,0 +1,255 @@
+"""Generic decoder-only transformer LM (dense / MoE / VLM backbone).
+
+Depth is executed as a ``lax.scan`` over *pattern groups*: the per-layer
+window pattern (e.g. gemma2's (local, global)) defines a group of
+``pattern_len`` layers whose parameters are stacked ``(n_groups,
+pattern_len, ...)``; the scan body unrolls the (static, tiny) pattern. HLO
+size is therefore depth-independent, which keeps 40+ layer configs
+compilable on the CPU dry-run host and keeps remat policy uniform.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    ParamDesc,
+    embed_descs,
+    embed_tokens,
+    mlp_apply,
+    mlp_descs,
+    rms_norm,
+    unembed,
+)
+
+
+def _pattern(cfg: ModelConfig) -> Tuple[int, ...]:
+    return cfg.window_pattern
+
+
+def _groups(cfg: ModelConfig) -> Tuple[int, int]:
+    plen = len(_pattern(cfg))
+    assert cfg.num_layers % plen == 0, (cfg.name, cfg.num_layers, plen)
+    return cfg.num_layers // plen, plen
+
+
+def descs(cfg: ModelConfig) -> Dict[str, Any]:
+    L, D = cfg.num_layers, cfg.d_model
+    layer: Dict[str, Any] = {
+        "attn": attn.attn_descs(cfg, L),
+        "ln_attn": ParamDesc((L, D), ("layers", "norm_scale")),
+        "ln_mlp": ParamDesc((L, D), ("layers", "norm_scale")),
+    }
+    if cfg.num_experts:
+        layer["moe"] = moe_mod.moe_descs(cfg, L)
+    else:
+        layer["mlp"] = mlp_descs(cfg, L)
+    if cfg.use_post_norms:
+        layer["ln_post_attn"] = ParamDesc((L, D), ("layers", "norm_scale"))
+        layer["ln_post_mlp"] = ParamDesc((L, D), ("layers", "norm_scale"))
+    return {
+        "embed": embed_descs(cfg),
+        "layers": layer,
+        "final_norm": ParamDesc((D,), ("norm_scale",)),
+    }
+
+
+def _group_params(cfg: ModelConfig, layers: Dict[str, Any]):
+    """(L, ...) stacks -> (n_groups, pattern_len, ...) for scanning."""
+    n_g, plen = _groups(cfg)
+    return jax.tree.map(
+        lambda a: a.reshape((n_g, plen) + a.shape[1:]), layers
+    )
+
+
+def _ffn(lp, x, cfg: ModelConfig, dtype, constrain):
+    if cfg.num_experts:
+        return moe_mod.moe_apply(lp["moe"], x, cfg, dtype, constrain)
+    return mlp_apply(lp["mlp"], x, dtype, cfg.mlp_act), None
+
+
+def _layer(h, lp, cfg: ModelConfig, window: int, positions, dtype, constrain):
+    """One pre-norm (optionally sandwich-norm) transformer layer."""
+    eps = cfg.norm_eps
+    a_in = rms_norm(h, lp["ln_attn"], eps)
+    q, k, v = attn.qkv_project(lp["attn"], a_in, cfg, positions, dtype)
+    q = constrain(q, ("batch", None, "heads", None))
+    a = attn.attention(
+        q, k, v, window=window, causal=True,
+        softcap_val=cfg.attn_logit_softcap,
+        q_positions=positions, k_positions=positions, dtype=dtype,
+    )
+    a = jnp.einsum("bsnh,nhd->bsd", a, lp["attn"]["wo"].astype(dtype))
+    if cfg.use_post_norms:
+        a = rms_norm(a, lp["ln_post_attn"], eps)
+    h = constrain(h + a, ("batch", None, None))
+
+    m_in = rms_norm(h, lp["ln_mlp"], eps)
+    m, aux = _ffn(lp, m_in, cfg, dtype, constrain)
+    if cfg.use_post_norms:
+        m = rms_norm(m, lp["ln_post_mlp"], eps)
+    h = constrain(h + m, ("batch", None, None))
+    return h, aux
+
+
+def hidden_forward(
+    params: Dict[str, Any],
+    tokens: jax.Array,  # (B, S_text)
+    cfg: ModelConfig,
+    *,
+    extra_embeds: Optional[jax.Array] = None,  # (B, N, D) VLM/image prefix
+    remat: bool = True,
+    constrain=lambda t, spec: t,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence forward -> final-norm hidden states (B, S_total, D)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], tokens, cfg, dtype)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(dtype), h], axis=1)
+    B, S, D = h.shape
+    h = constrain(h, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    n_g, plen = _groups(cfg)
+    windows = [w if w > 0 else S for w in _pattern(cfg)]
+
+    def group_body(carry, gp):
+        h, lb = carry
+        for s in range(plen):
+            lp = jax.tree.map(lambda a: a[s], gp)
+            h, aux = _layer(h, lp, cfg, min(windows[s], S), positions, dtype,
+                            constrain)
+            if aux is not None:
+                lb = lb + aux["lb_loss"]
+        return (h, lb), None
+
+    from repro.models.layers import remat_wrap
+    body = remat_wrap(group_body, remat)
+    (h, lb), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                              _group_params(cfg, params["layers"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, {"lb_loss": lb}
+
+
+def logits_fn(params, h, cfg: ModelConfig) -> jax.Array:
+    return unembed(params["embed"], h, cfg, jnp.dtype(cfg.compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, max_seq: int) -> Dict[str, Tuple[int, int]]:
+    """slot name -> (capacity, window)."""
+    out = {}
+    for s, w in enumerate(_pattern(cfg)):
+        cap = attn.cache_capacity(w, max_seq)
+        out[f"slot{s}"] = (cap, w if w > 0 else max_seq)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    n_g, _ = _groups(cfg)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    caches = {}
+    for name, (cap, _w) in cache_spec(cfg, max_seq).items():
+        caches[name] = attn.init_cache(
+            n_g, batch, cap, cfg.num_kv_heads, cfg.head_dim, dtype)
+    return caches
+
+
+def prefill(
+    params, tokens, cfg: ModelConfig, max_seq: int,
+    *, extra_embeds=None, constrain=lambda t, spec: t,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Run the prompt, return (last-token logits (B,V), filled caches)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params["embed"], tokens, cfg, dtype)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(dtype), h], axis=1)
+    B, S, D = h.shape
+    h = constrain(h, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    n_g, plen = _groups(cfg)
+    spec = cache_spec(cfg, max_seq)
+    windows = [w if w > 0 else S for w in _pattern(cfg)]
+
+    def group_body(h, gp):
+        ys = {}
+        for s in range(plen):
+            lp = jax.tree.map(lambda a: a[s], gp)
+            a_in = rms_norm(h, lp["ln_attn"], cfg.norm_eps)
+            q, k, v = attn.qkv_project(lp["attn"], a_in, cfg, positions, dtype)
+            a = attn.attention(
+                q, k, v, window=min(windows[s], S), causal=True,
+                softcap_val=cfg.attn_logit_softcap,
+                q_positions=positions, k_positions=positions, dtype=dtype)
+            a = jnp.einsum("bsnh,nhd->bsd", a, lp["attn"]["wo"].astype(dtype))
+            if cfg.use_post_norms:
+                a = rms_norm(a, lp["ln_post_attn"], cfg.norm_eps)
+            h = constrain(h + a, ("batch", None, None))
+            m_in = rms_norm(h, lp["ln_mlp"], cfg.norm_eps)
+            m, _ = _ffn(lp, m_in, cfg, dtype, constrain)
+            if cfg.use_post_norms:
+                m = rms_norm(m, lp["ln_post_mlp"], cfg.norm_eps)
+            h = constrain(h + m, ("batch", None, None))
+            cap = spec[f"slot{s}"][0]
+            ck, cv = attn.prefill_cache(k, v, cap)
+            ys[f"slot{s}"] = {"k": ck, "v": cv}
+        return h, ys
+
+    h, caches = jax.lax.scan(group_body, h,
+                             _group_params(cfg, params["layers"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    last = logits_fn(params, h[:, -1:, :], cfg)[:, 0]
+    return last, caches
+
+
+def decode_step(
+    params, token, caches, pos, cfg: ModelConfig, max_seq: int,
+    *, constrain=lambda t, spec: t,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step. token: (B,) int32; pos: scalar int32 (position of the
+    new token). Returns (logits (B,V), updated caches)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    B = token.shape[0]
+    h = embed_tokens(params["embed"], token[:, None], cfg, dtype)  # (B,1,D)
+    n_g, plen = _groups(cfg)
+    spec = cache_spec(cfg, max_seq)
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+
+    def group_body(h, xs):
+        gp, cg = xs
+        new_c = {}
+        for s in range(plen):
+            lp = jax.tree.map(lambda a: a[s], gp)
+            cap, window = spec[f"slot{s}"]
+            a_in = rms_norm(h, lp["ln_attn"], cfg.norm_eps)
+            q, k, v = attn.qkv_project(lp["attn"], a_in, cfg, positions, dtype)
+            ck, cv = attn.cache_update(cg[f"slot{s}"]["k"], cg[f"slot{s}"]["v"],
+                                       k, v, pos)
+            a = attn.decode_attention(
+                q, ck, cv, pos, window=window,
+                softcap_val=cfg.attn_logit_softcap, dtype=dtype)
+            a = jnp.einsum("bsnh,nhd->bsd", a, lp["attn"]["wo"].astype(dtype))
+            if cfg.use_post_norms:
+                a = rms_norm(a, lp["ln_post_attn"], cfg.norm_eps)
+            h = h + a
+            m_in = rms_norm(h, lp["ln_mlp"], cfg.norm_eps)
+            m, _ = _ffn(lp, m_in, cfg, dtype, constrain)
+            if cfg.use_post_norms:
+                m = rms_norm(m, lp["ln_post_mlp"], cfg.norm_eps)
+            h = h + m
+            new_c[f"slot{s}"] = {"k": ck, "v": cv}
+        return h, new_c
+
+    h, new_caches = jax.lax.scan(
+        group_body, h, (_group_params(cfg, params["layers"]), caches))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, h, cfg)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,52 @@
+"""LLaVA-NeXT-style VLM: projected patch embeddings prefixed to the LM.
+
+The vision tower + anyres tiling is a STUB per the assignment: the batch
+carries precomputed patch embeddings (B, num_image_tokens, vision_dim);
+only the (real) multimodal projector and the LM backbone execute here.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.layers import ParamDesc
+
+
+def descs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = transformer.descs(cfg)
+    d["projector"] = {
+        "w1": ParamDesc((cfg.vision_dim, cfg.d_model), ("vision", "embed")),
+        "b1": ParamDesc((cfg.d_model,), ("bias",)),
+        "w2": ParamDesc((cfg.d_model, cfg.d_model), ("embed", None)),
+        "b2": ParamDesc((cfg.d_model,), ("bias",)),
+    }
+    return d
+
+
+def project(params, image_embeds: jax.Array, dtype) -> jax.Array:
+    p = params["projector"]
+    h = jnp.einsum("bnv,vd->bnd", image_embeds.astype(dtype), p["w1"].astype(dtype))
+    h = jax.nn.gelu((h + p["b1"].astype(dtype)).astype(jnp.float32),
+                    approximate=True).astype(dtype)
+    return jnp.einsum("bnd,de->bne", h, p["w2"].astype(dtype)) + p["b2"].astype(dtype)
+
+
+def hidden_forward(params, batch, cfg: ModelConfig, *, remat=True,
+                   constrain=lambda t, spec: t):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    img = project(params, batch["image_embeds"], dtype)
+    return transformer.hidden_forward(
+        params, batch["tokens"], cfg, extra_embeds=img, remat=remat,
+        constrain=constrain)
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq: int,
+            *, constrain=lambda t, spec: t):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    img = project(params, batch["image_embeds"], dtype)
+    return transformer.prefill(params, batch["tokens"], cfg, max_seq,
+                               extra_embeds=img, constrain=constrain)

@@ -1,0 +1,145 @@
+"""Serving engine: batched prefill + decode with EXTENT-approximate KV writes.
+
+The KV cache is the serving system's LLC: the highest-volume, error-tolerant
+write stream (the paper's Fig. 13 analogue — decode writes one fresh KV
+entry per layer per token, forever). EXTENT integration exploits a clean
+identity: applying ``approx_write(old_cache, new_cache)`` after a decode
+step is *exactly* the paper's write semantics —
+
+  * untouched slots are bit-identical -> CMP redundant-write elimination:
+    zero energy, zero error risk;
+  * the one freshly-written slot per layer flips bits -> pays level energy
+    and carries the level WER.
+
+So the engine needs no hooks inside the models: it diffs cache trees.
+Priority policy: K at MID (errors perturb attention patterns), V at LOW
+(errors only perturb the payload), recurrent/conv states EXACT (errors
+persist in the recurrence — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.approx_store import approx_write_with_stats
+from repro.core.energy_model import StepEnergyMeter
+from repro.core.extent_table import QualityController
+from repro.core.priority import Priority, kv_cache_policy
+from repro.models import ModelApi, get_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int = 256
+    max_new_tokens: int = 32
+    extent_enabled: bool = True
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+
+
+def _tag_cache(cache: Any) -> Any:
+    """Priority tree for a cache pytree via the KV policy."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: kv_cache_policy(p, l), cache)
+
+
+def _extent_cache_write(key, old_cache, new_cache, tags):
+    """Diff-write the whole cache through the approximate store; returns
+    (stored_cache, aggregated WriteStats-like dict)."""
+    flat_old, treedef = jax.tree.flatten(old_cache)
+    flat_new = treedef.flatten_up_to(new_cache)
+    flat_tag = treedef.flatten_up_to(tags)
+    stored, agg = [], {"energy_pj": 0.0, "bits_written": 0, "bit_errors": 0,
+                       "bits_total": 0}
+    for i, (o, n, t) in enumerate(zip(flat_old, flat_new, flat_tag)):
+        if jnp.issubdtype(n.dtype, jnp.floating) and t != Priority.EXACT:
+            s, st = approx_write_with_stats(jax.random.fold_in(key, i),
+                                            o, n, t)
+            agg["energy_pj"] += float(st.energy_pj)
+            agg["bits_written"] += int(st.bits_written)
+            agg["bit_errors"] += int(st.bit_errors)
+            agg["bits_total"] += int(st.bits_total)
+            stored.append(s)
+        else:
+            stored.append(n)  # EXACT fast path (recurrent states, ints)
+    return treedef.unflatten(stored), agg
+
+
+class ServingEngine:
+    """Batched autoregressive serving over any registered architecture."""
+
+    def __init__(self, cfg: ModelConfig, serve_cfg: ServeConfig,
+                 params: Optional[Any] = None):
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        self.api: ModelApi = get_model(cfg)
+        key = jax.random.PRNGKey(serve_cfg.seed)
+        self.params = params if params is not None else self.api.init(key)
+        self.meter = StepEnergyMeter()
+        self.controller = QualityController()
+        self._decode_jit = jax.jit(
+            lambda p, tok, cache, pos: self.api.decode_step(
+                p, tok, cache, pos, self.scfg.max_seq))
+        self._prefill_jit = jax.jit(
+            lambda p, batch: self.api.prefill(p, batch, self.scfg.max_seq))
+
+    # ------------------------------------------------------------- sampling
+    def _sample(self, key, logits: jax.Array) -> jax.Array:
+        if self.scfg.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------------------ generation
+    def generate(self, batch: Dict[str, jax.Array],
+                 max_new_tokens: Optional[int] = None
+                 ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Prefill `batch` then decode greedily. Returns (tokens (B, T_new),
+        report{energy, errors, tokens/s-shape stats})."""
+        mnt = max_new_tokens or self.scfg.max_new_tokens
+        key = jax.random.PRNGKey(self.scfg.seed + 1)
+        logits, cache = self._prefill_jit(self.params, batch)
+        if self.scfg.extent_enabled:
+            tags = _tag_cache(cache)
+            zero = jax.tree.map(jnp.zeros_like, cache)
+            key, k2 = jax.random.split(key)
+            cache, agg = _extent_cache_write(k2, zero, cache, tags)
+            self._account("kv_prefill", agg)
+        else:
+            tags = None
+
+        B = logits.shape[0]
+        prompt_len = batch["tokens"].shape[1] + (
+            self.cfg.num_image_tokens if self.cfg.family == "vlm" else 0)
+        outs: List[jax.Array] = []
+        tok = self._sample(key, logits)
+        outs.append(tok)
+        pos = jnp.asarray(prompt_len, jnp.int32)
+        for step in range(mnt - 1):
+            key, k1, k2 = jax.random.split(key, 3)
+            logits, new_cache = self._decode_jit(self.params, tok, cache, pos)
+            if self.scfg.extent_enabled:
+                new_cache, agg = _extent_cache_write(k1, cache, new_cache,
+                                                     tags)
+                self._account("kv_decode", agg)
+            cache = new_cache
+            tok = self._sample(k2, logits)
+            outs.append(tok)
+            pos = pos + 1
+        report = self.meter.summary()
+        return jnp.stack(outs, axis=1), report
+
+    def _account(self, stream: str, agg: Dict[str, float]) -> None:
+        s = self.meter.streams.setdefault(stream, {
+            "energy_pj": 0.0, "bits_written": 0, "bits_total": 0,
+            "bit_errors": 0, "latency_ns": 0.0})
+        s["energy_pj"] += agg["energy_pj"]
+        s["bits_written"] += agg["bits_written"]
+        s["bits_total"] += agg["bits_total"]
+        s["bit_errors"] += agg["bit_errors"]

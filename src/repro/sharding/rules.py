@@ -1,0 +1,132 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Every parameter/activation/cache dim carries a *logical* axis name; one
+rules table maps names to mesh axes. Assignments are divisibility-checked
+against actual dim sizes at constraint time and fall back to replication —
+this is what lets a single strategy cover 40-head / 20-head / 10-head
+attention, batch=1 long-context decode, and vocab sizes that don't divide
+the model axis, on the fixed (data, model) production mesh.
+
+Strategy (single knob for the §Perf hillclimb):
+  * batch               -> (pod?, data)      data parallel
+  * embed (d_model)     -> data              FSDP weight sharding
+  * mlp / vocab / heads -> model             tensor parallel
+  * kv_seq (cache ctx)  -> model             context-parallel KV (flash-decode
+                                             style) — covers GQA head counts
+                                             that don't divide the TP axis
+  * expert              -> model             expert parallel
+  * exp_cap             -> data              MoE capacity sharded over DP
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+def default_rules(mesh: Mesh) -> Dict[str, Axis]:
+    dp: Axis = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return {
+        "batch": dp,
+        "vocab": "model",
+        "embed": "data",
+        "heads": "model",
+        "kv_heads": None,     # GQA counts rarely divide TP; kv_seq carries it
+        "kv_seq": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "expert": "model",
+        "expert_mlp": None,   # serve_moe_2d shards this over data
+        "exp_cap": "data",
+        "expert_logits": None,
+        "ssm_heads": "model",
+        "ssm_state2": None,
+        # RG-LRU gate matrices are (R, R): input dim rides `mlp` (row-parallel,
+        # XLA inserts the partial-sum all-reduce); output dim must therefore
+        # stay replicated — mapping both to `model` is an invalid dup spec.
+        "rnn_gate": None,
+        "vision": None,
+        "layers": None,
+        "norm_scale": None,
+        "bias": None,
+        "conv": None,
+    }
+
+
+def strategy_rules(mesh: Mesh, strategy: str = "baseline") -> Dict[str, Axis]:
+    """Named rule variants for the §Perf hillclimb (validated by real
+    .lower().compile() runs via dryrun.py --rules):
+
+      baseline       FSDP params over data + TP over model
+      serve_tp_only  params resident (TP-sharded only): kills the per-token
+                     all-gather in decode; batch still DP over data
+    """
+    rules = default_rules(mesh)
+    if strategy == "baseline":
+        return rules
+    if strategy == "serve_tp_only":
+        rules["embed"] = None  # params no longer sharded over the data axis
+        return rules
+    if strategy == "serve_moe_2d":
+        # decode residency for big MoE: dense weights TP-resident, expert
+        # FFNs 2D-sharded (expert x expert_mlp) -> no per-token all-gather
+        # AND per-device bytes fall ~dp-fold for the expert bulk; the
+        # row-parallel expert einsum all-reduces only (E, cap, D) outputs.
+        rules["embed"] = None
+        rules["expert_mlp"] = "data"
+        return rules
+    raise KeyError(f"unknown rules strategy {strategy!r}")
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return int(np.prod([mesh.shape[a] for a in axis]))
+
+
+def spec_for(
+    mesh: Mesh,
+    rules: Dict[str, Axis],
+    logical: Sequence[Optional[str]],
+    shape: Optional[Sequence[int]] = None,
+) -> P:
+    """Build a PartitionSpec; drop any assignment that doesn't divide the
+    corresponding dim (fallback to replication)."""
+    entries = []
+    for i, name in enumerate(logical):
+        ax = rules.get(name) if name is not None else None
+        if ax is not None and shape is not None:
+            if shape[i] % _axis_size(mesh, ax) != 0:
+                ax = None
+        entries.append(ax)
+    return P(*entries)
+
+
+def make_constrain(mesh: Mesh, rules: Dict[str, Axis]):
+    """Returns constrain(t, logical_axes) for use inside jitted model code."""
+
+    def constrain(t: jax.Array, logical: Sequence[Optional[str]]):
+        spec = spec_for(mesh, rules, logical, t.shape)
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def tree_shardings(mesh: Mesh, rules: Dict[str, Axis], axes_tree: Any,
+                   shapes_tree: Any) -> Any:
+    """Tree of logical-axes tuples + tree of shapes -> tree of NamedSharding."""
+
+    def one(axes, shape):
+        return NamedSharding(mesh, spec_for(mesh, rules, axes, shape))
+
+    return jax.tree.map(
+        one, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )

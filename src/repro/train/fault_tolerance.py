@@ -1,0 +1,164 @@
+"""Failure detection, straggler mitigation, elastic re-mesh.
+
+Control-plane components for 1000+-node operation. They are host-side and
+deliberately simple-state (everything reconstructible from a checkpoint +
+the device list), because at fleet scale the control plane itself must be
+restartable:
+
+  * HeartbeatMonitor — per-host liveness with monotonic deadlines; the
+    launcher polls `dead_hosts()` each step and triggers re-mesh on change.
+  * StragglerMonitor — per-step wall-time EWMA + robust z-score; flags
+    hosts/steps slower than `threshold` x median. Policy hooks decide:
+    log-only, drop-microbatch (skip the slow host's microbatch this step),
+    or evict (treat as failed -> re-mesh without it).
+  * elastic re-mesh — given the surviving device set, build the largest
+    (data, model) mesh that preserves the model axis (TP degree is a model
+    property; DP shrinks), then re-lay checkpoint state onto it.
+
+The multi-pod story: pod failure = losing 256 devices at once; the same
+path handles it because meshes are rebuilt from the flat device list.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+# ---------------------------------------------------------------------------
+# failure detection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    timeout_s: float = 60.0
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        self._last: Dict[str, float] = {}
+
+    def beat(self, host: str, at: Optional[float] = None) -> None:
+        self._last[host] = self.clock() if at is None else at
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[str]:
+        now = self.clock() if now is None else now
+        return sorted(h for h, t in self._last.items()
+                      if now - t > self.timeout_s)
+
+    def alive_hosts(self, now: Optional[float] = None) -> List[str]:
+        now = self.clock() if now is None else now
+        return sorted(h for h, t in self._last.items()
+                      if now - t <= self.timeout_s)
+
+
+# ---------------------------------------------------------------------------
+# straggler mitigation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Flags steps/hosts whose time exceeds threshold x rolling median."""
+    threshold: float = 1.8
+    window: int = 32
+
+    def __post_init__(self):
+        self._times: Dict[str, collections.deque] = {}
+        self.flags: List[Tuple[str, int, float]] = []  # (host, step, ratio)
+
+    def record(self, host: str, step: int, seconds: float) -> bool:
+        dq = self._times.setdefault(
+            host, collections.deque(maxlen=self.window))
+        all_times = [t for d in self._times.values() for t in d]
+        dq.append(seconds)
+        if len(all_times) < 8:
+            return False
+        med = float(np.median(all_times))
+        ratio = seconds / max(med, 1e-9)
+        if ratio > self.threshold:
+            self.flags.append((host, step, ratio))
+            return True
+        return False
+
+    def chronic(self, min_flags: int = 3) -> List[str]:
+        """Hosts flagged repeatedly -> candidates for eviction."""
+        counts = collections.Counter(h for h, _, _ in self.flags)
+        return sorted(h for h, c in counts.items() if c >= min_flags)
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh
+# ---------------------------------------------------------------------------
+
+def best_elastic_mesh(devices: Sequence, model_parallel: int,
+                      axis_names: Tuple[str, str] = ("data", "model")
+                      ) -> Mesh:
+    """Largest (data, model_parallel) mesh over the surviving devices.
+
+    TP degree is preserved (weights are laid out for it); DP absorbs the
+    loss — with d devices we run floor(d / model_parallel) DP ranks and
+    idle the remainder (reported, never silent).
+    """
+    n = len(devices)
+    dp = n // model_parallel
+    if dp < 1:
+        raise RuntimeError(
+            f"cannot keep model_parallel={model_parallel} with {n} devices")
+    used = dp * model_parallel
+    arr = np.asarray(devices[:used]).reshape(dp, model_parallel)
+    return Mesh(arr, axis_names)
+
+
+def remesh_report(old_n: int, new_mesh: Mesh) -> Dict[str, Any]:
+    new_n = new_mesh.devices.size
+    return {
+        "old_devices": old_n,
+        "new_devices": int(new_n),
+        "idle_devices": old_n - int(new_n) if old_n > new_n else 0,
+        "new_shape": dict(zip(new_mesh.axis_names,
+                              new_mesh.devices.shape)),
+        "dp_degree": int(new_mesh.devices.shape[0]),
+    }
+
+
+def reshard_state(state: Any, shardings: Any) -> Any:
+    """Re-lay a (host or device) pytree onto new shardings — the re-mesh
+    data path. With checkpointed state this composes as
+    ``ckpt.restore(state_like, shardings=new_shardings)``."""
+    flat, treedef = jax.tree.flatten(state)
+    sh_flat = treedef.flatten_up_to(shardings)
+    return treedef.unflatten(
+        [jax.device_put(np.asarray(jax.device_get(x)), s)
+         for x, s in zip(flat, sh_flat)])
+
+
+# ---------------------------------------------------------------------------
+# orchestration: the recovery loop the launcher runs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RecoveryPolicy:
+    heartbeat: HeartbeatMonitor
+    stragglers: StragglerMonitor
+    model_parallel: int
+    evict_chronic_stragglers: bool = True
+
+    def plan(self, devices_by_host: Dict[str, Sequence]) -> Dict[str, Any]:
+        """Decide the surviving device set. Returns {action, devices, ...};
+        action in {none, remesh}."""
+        dead = set(self.heartbeat.dead_hosts())
+        if self.evict_chronic_stragglers:
+            dead |= set(self.stragglers.chronic())
+        if not dead:
+            return {"action": "none"}
+        survivors = [d for h, ds in sorted(devices_by_host.items())
+                     if h not in dead for d in ds]
+        mesh = best_elastic_mesh(survivors, self.model_parallel)
+        return {"action": "remesh", "dead_hosts": sorted(dead),
+                "mesh": mesh,
+                "report": remesh_report(
+                    sum(len(d) for d in devices_by_host.values()), mesh)}

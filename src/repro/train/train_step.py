@@ -1,0 +1,83 @@
+"""Train step: chunked cross-entropy + AdamW, distribution-agnostic.
+
+The loss is computed by scanning vocabulary projections over sequence
+chunks with remat — full (B, S, V) float32 logits never materialize (at
+256k vocab x 1M tokens that tensor would be ~1 PB). Labels == IGNORE are
+masked (VLM image prefixes, padding).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelApi
+from repro.train import optimizer as opt
+
+IGNORE = -1
+LB_LOSS_COEF = 0.01
+
+
+def chunked_ce_loss(api: ModelApi, params, h: jax.Array, labels: jax.Array,
+                    chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Mean CE over positions with label != IGNORE. h: (B,S,D)."""
+    B, S, D = h.shape
+    C = min(chunk, S)
+    if S % C:
+        C = S
+    n = S // C
+
+    def body(carry, i):
+        loss_sum, count = carry
+        h_c = jax.lax.dynamic_slice_in_dim(h, i * C, C, axis=1)
+        y_c = jax.lax.dynamic_slice_in_dim(labels, i * C, C, axis=1)
+        logits = api.logits(params, h_c).astype(jnp.float32)  # (B,C,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.clip(y_c, 0)[..., None], axis=-1)[..., 0]
+        mask = (y_c != IGNORE).astype(jnp.float32)
+        loss_sum = loss_sum + jnp.sum((lse - ll) * mask)
+        count = count + jnp.sum(mask)
+        return (loss_sum, count), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(n))
+    return loss_sum / jnp.maximum(count, 1.0), count
+
+
+def loss_fn(api: ModelApi, params, batch, *, constrain, loss_chunk=256,
+            remat=True):
+    h, aux = api.forward_hidden(params, batch, remat=remat,
+                                constrain=constrain)
+    loss, count = chunked_ce_loss(api, params, h, batch["labels"], loss_chunk)
+    total = loss
+    if "lb_loss" in aux:
+        total = total + LB_LOSS_COEF * aux["lb_loss"]
+    return total, {"ce_loss": loss, "tokens": count, **aux}
+
+
+def make_train_step(api: ModelApi, opt_cfg: opt.AdamWConfig, *,
+                    constrain=lambda t, s: t, loss_chunk: int = 256,
+                    grad_transform=None, remat=True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). `grad_transform` hooks gradient compression / cross-pod
+    reduction policies (see repro.train.compression); `remat` in
+    {True, 'selective', False} selects the activation-checkpoint policy."""
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: loss_fn(api, p, batch, constrain=constrain,
+                              loss_chunk=loss_chunk, remat=remat),
+            has_aux=True)(params)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params2, opt_state2, om = opt.update(opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, **{k: v for k, v in aux.items()
+                                    if v is not None}, **om}
+        return params2, opt_state2, metrics
+
+    return train_step

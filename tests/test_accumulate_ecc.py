@@ -1,0 +1,102 @@
+"""Gradient accumulation equivalence + ECC comparison model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ecc
+from repro.core.priority import Priority
+from repro.models import get_model
+from repro.train import compression as comp
+from repro.train import data as data_mod
+from repro.train import optimizer as opt
+from repro.train.accumulate import AccumConfig, make_accum_train_step
+from repro.train.train_step import make_train_step
+
+
+class TestAccumulation:
+    def test_microbatched_matches_full_batch(self):
+        """Mean-of-microbatch-grads must equal the full-batch grad (the
+        losses are token-means over equal-size shards). Compared at the
+        GRADIENT level — AdamW's rsqrt on near-zero second moments amplifies
+        f32 accumulation-order noise beyond any honest param tolerance."""
+        from repro.train.accumulate import split_batch
+        from repro.train.train_step import loss_fn
+        cfg = get_config("qwen2.5-3b").reduced()
+        api = get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        dcfg = data_mod.DataConfig(cfg.vocab_size, 16, 8, seed=3)
+        batch = data_mod.make_batch(dcfg, 0)
+
+        gfn = jax.jit(jax.grad(
+            lambda p, b: loss_fn(api, p, b, constrain=lambda t, s: t)[0]))
+        g_full = gfn(params, batch)
+        mbs = split_batch(batch, 4)
+        g_acc = jax.tree.map(jnp.zeros_like, params)
+        for i in range(4):
+            mb = {k: v[i] for k, v in mbs.items()}
+            g_acc = jax.tree.map(lambda a, b: a + b / 4, g_acc,
+                                 gfn(params, mb))
+        flat_f = jnp.concatenate([x.ravel().astype(jnp.float32)
+                                  for x in jax.tree.leaves(g_full)])
+        flat_a = jnp.concatenate([x.ravel().astype(jnp.float32)
+                                  for x in jax.tree.leaves(g_acc)])
+        rel = float(jnp.linalg.norm(flat_f - flat_a)
+                    / jnp.linalg.norm(flat_f))
+        assert rel < 1e-2, rel  # f32 accumulation-order noise only
+
+    def test_accum_step_loss_matches_full(self):
+        cfg = get_config("qwen2.5-3b").reduced()
+        api = get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        dcfg = data_mod.DataConfig(cfg.vocab_size, 16, 8, seed=3)
+        batch = data_mod.make_batch(dcfg, 0)
+        full = jax.jit(make_train_step(api, ocfg))
+        accum = jax.jit(make_accum_train_step(
+            api, ocfg, AccumConfig(num_microbatches=4)))
+        _, _, m1 = full(params, opt.init(params), batch)
+        _, _, _, m2 = accum(params, opt.init(params), None, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=2e-5)
+
+    def test_accum_with_compression_runs(self):
+        cfg = get_config("qwen2.5-3b").reduced()
+        api = get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+        step = jax.jit(make_accum_train_step(
+            api, ocfg, AccumConfig(num_microbatches=2,
+                                   compression=comp.CompressionConfig())))
+        dcfg = data_mod.DataConfig(cfg.vocab_size, 16, 4, seed=3)
+        ef = comp.init_state(params)
+        p, s, ef, m = step(params, opt.init(params), ef,
+                           data_mod.make_batch(dcfg, 0))
+        assert np.isfinite(float(m["loss"]))
+
+
+class TestECC:
+    def test_residual_failure_formula(self):
+        # p=0: perfect; p=1: certain failure
+        assert ecc.residual_word_failure(0.0) == 0.0
+        assert ecc.residual_word_failure(1.0) == pytest.approx(1.0)
+        # small p: ~ C(72,2) p^2
+        p = 1e-4
+        expect = 72 * 71 / 2 * p ** 2
+        assert ecc.residual_word_failure(p) == pytest.approx(expect, rel=0.05)
+
+    def test_ecc_corrects_but_costs(self):
+        """The paper's argument: at approximate levels, ECC reduces failures
+        by orders of magnitude BUT costs latency + storage + energy."""
+        cmp = ecc.compare(Priority.MID)
+        assert cmp["ecc"]["post_ecc_word_fail"] < cmp["extent"]["post_word_fail"]
+        assert cmp["ecc"]["latency_ns"] > cmp["extent"]["latency_ns"]
+        assert cmp["ecc"]["storage_overhead"] > cmp["extent"]["storage_overhead"]
+        assert cmp["ecc"]["energy_pj_word"] > cmp["extent"]["energy_pj_word"]
+
+    def test_exact_level_needs_no_ecc(self):
+        # exact level raw WER ~3e-8 -> 64-bit word failure ~2e-6: already at
+        # the reliability class where the paper argues ECC is unnecessary
+        cmp = ecc.compare(Priority.EXACT)
+        assert cmp["extent"]["post_word_fail"] < 1e-5

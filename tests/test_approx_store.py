@@ -1,0 +1,161 @@
+"""Approximate-store semantics: CMP skip, failure retention, accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import approx_store as aps
+from repro.core.priority import Priority, uint_type
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape).astype(dtype)
+
+
+class TestExactWrites:
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32, jnp.float16])
+    def test_exact_is_lossless(self, dtype):
+        k = jax.random.PRNGKey(0)
+        old = _rand(jax.random.PRNGKey(1), (64, 32), dtype)
+        new = _rand(jax.random.PRNGKey(2), (64, 32), dtype)
+        stored, st = aps.approx_write_with_stats(k, old, new, Priority.EXACT)
+        assert bool(jnp.all(stored == new))
+        assert int(st.bit_errors) == 0
+
+
+class TestRedundantWriteElimination:
+    def test_identical_write_is_free(self):
+        k = jax.random.PRNGKey(0)
+        x = _rand(jax.random.PRNGKey(1), (128,), jnp.bfloat16)
+        stored, st = aps.approx_write_with_stats(k, x, x, Priority.LOW)
+        assert float(st.energy_pj) == 0.0
+        assert int(st.bits_written) == 0
+        assert bool(jnp.all(stored == x))
+
+    def test_partial_overlap_pays_only_flips(self):
+        k = jax.random.PRNGKey(0)
+        old = jnp.zeros((64,), jnp.float32)
+        new = old.at[:8].set(1.0)
+        _, st = aps.approx_write_with_stats(k, old, new, Priority.EXACT)
+        # exactly 8 elements changed; 1.0f = 0x3F800000 flips 7 bits/element
+        assert int(st.bits_written) == 8 * bin(0x3F800000).count("1")
+
+
+class TestFailureSemantics:
+    def test_failed_bits_retain_old_value(self):
+        """An incomplete write leaves the cell in its previous state: every
+        stored bit equals either the old or the new bit."""
+        k = jax.random.PRNGKey(3)
+        old = _rand(jax.random.PRNGKey(4), (256,), jnp.bfloat16)
+        new = _rand(jax.random.PRNGKey(5), (256,), jnp.bfloat16)
+        stored, st = aps.approx_write_with_stats(k, old, new, Priority.LOW)
+        ut = uint_type(jnp.bfloat16)
+        o = jax.lax.bitcast_convert_type(old, ut)
+        n = jax.lax.bitcast_convert_type(new, ut)
+        s = jax.lax.bitcast_convert_type(stored, ut)
+        # s must agree with o wherever it disagrees with n, and vice versa
+        assert bool(jnp.all((s ^ n) & (s ^ o) == 0))
+        assert int(st.bit_errors) > 0  # LOW level on random data must err
+
+    def test_realized_ber_tracks_level_wer(self):
+        """Empirical error rate on 0->1 flips ~ calibrated wer01 (LOW)."""
+        from repro.core import write_driver
+        k = jax.random.PRNGKey(6)
+        old = jnp.zeros((4096,), jnp.uint32)
+        new = jnp.full((4096,), 0xFFFFFFFF, jnp.uint32)
+        stored, st = aps.approx_write_with_stats(
+            k, old, new, Priority.LOW, per_bit_levels=False)
+        ber = float(st.bit_errors) / float(st.bits_written)
+        wer01 = write_driver.default_driver()[0].wer_0to1
+        np.testing.assert_allclose(ber, wer01, rtol=0.1)
+
+    def test_bitplane_protection(self):
+        """With per-bit levels, exponent/sign never corrupt: stored/new
+        decode to values whose binade matches (no catastrophic errors)."""
+        k = jax.random.PRNGKey(7)
+        old = jnp.zeros((10_000,), jnp.float32)
+        new = jnp.ones((10_000,), jnp.float32) * 1.5
+        stored, _ = aps.approx_write_with_stats(k, old, new, Priority.LOW)
+        err = jnp.abs(stored - new)
+        # mantissa-only failures: worst case is the mantissa MSB = 0.5 ulp of
+        # the binade (|err| <= 0.5 here); an exponent strike would give >= 1.5
+        assert float(jnp.max(err)) <= 0.5 + 1e-6, "exponent must never corrupt"
+
+
+class TestStatsAccounting:
+    def test_direction_split(self):
+        k = jax.random.PRNGKey(8)
+        old = jnp.zeros((100,), jnp.uint32)
+        new = jnp.full((100,), 0x0000FFFF, jnp.uint32)
+        _, st = aps.approx_write_with_stats(k, old, new, Priority.EXACT,
+                                            per_bit_levels=False)
+        assert int(st.flips_0to1) == 1600 and int(st.flips_1to0) == 0
+        _, st2 = aps.approx_write_with_stats(k, new, old, Priority.EXACT,
+                                             per_bit_levels=False)
+        assert int(st2.flips_1to0) == 1600 and int(st2.flips_0to1) == 0
+
+    def test_writing_ones_costs_more(self):
+        """Paper: 'logic-one' writes cost ~2.5x 'logic-zero' writes."""
+        k = jax.random.PRNGKey(9)
+        z, o = jnp.zeros((100,), jnp.uint32), jnp.full((100,), -1, jnp.uint32)
+        _, up = aps.approx_write_with_stats(k, z, o, Priority.EXACT,
+                                            per_bit_levels=False)
+        _, dn = aps.approx_write_with_stats(k, o, z, Priority.EXACT,
+                                            per_bit_levels=False)
+        ratio = float(up.energy_pj) / float(dn.energy_pj)
+        np.testing.assert_allclose(ratio, 2.5, rtol=0.02)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 300),
+    level=st.sampled_from([Priority.LOW, Priority.MID, Priority.HIGH,
+                           Priority.EXACT]),
+)
+def test_property_stored_bits_from_old_or_new(seed, n, level):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    old = jax.random.normal(k1, (n,)).astype(jnp.bfloat16)
+    new = jax.random.normal(k2, (n,)).astype(jnp.bfloat16)
+    stored, st = aps.approx_write_with_stats(k3, old, new, level)
+    ut = uint_type(jnp.bfloat16)
+    o = jax.lax.bitcast_convert_type(old, ut)
+    nw = jax.lax.bitcast_convert_type(new, ut)
+    s = jax.lax.bitcast_convert_type(stored, ut)
+    assert bool(jnp.all((s ^ nw) & (s ^ o) == 0))
+    assert int(st.bit_errors) <= int(st.bits_written)
+    assert float(st.energy_pj) >= 0.0
+
+
+class TestSoftErrors:
+    def test_ber_scale(self):
+        k = jax.random.PRNGKey(10)
+        x = jnp.ones((20_000,), jnp.float32)
+        y = aps.inject_soft_errors(k, x, 1e-3, protect_exponent=False)
+        frac = float(jnp.mean((y != x).astype(jnp.float32)))
+        # 32 bits/element, ~1 - (1-1e-3)^32 ~ 3.1% of elements struck
+        np.testing.assert_allclose(frac, 1 - (1 - 1e-3) ** 32, rtol=0.15)
+
+    def test_protection_bounds_damage(self):
+        k = jax.random.PRNGKey(11)
+        x = jnp.ones((20_000,), jnp.float32)
+        y = aps.inject_soft_errors(k, x, 1e-3, protect_exponent=True)
+        assert float(jnp.max(jnp.abs(y - x))) < 1.0  # mantissa-only
+        y2 = aps.inject_soft_errors(k, x, 1e-3, protect_exponent=False)
+        assert float(jnp.max(jnp.abs(y2 - x))) > 1.0  # exponent strikes
+
+
+class TestApproxStoreWrapper:
+    def test_cumulative_accounting(self):
+        store = aps.ApproxStore()
+        k = jax.random.PRNGKey(12)
+        x = jnp.ones((64,), jnp.float32)
+        store, _ = store.write(k, "w", x, Priority.EXACT)
+        e1 = store.energy_pj
+        store, _ = store.write(k, "w", x, Priority.EXACT)  # redundant
+        assert store.energy_pj == e1
+        store, got = store.write(k, "w", x * 2, Priority.EXACT)
+        assert store.energy_pj > e1
+        assert bool(jnp.all(store.read("w") == got))

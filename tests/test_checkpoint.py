@@ -1,0 +1,123 @@
+"""Checkpointer: atomicity, pruning, async, EXTENT approximate saves,
+elastic restore."""
+import json
+import os
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.priority import Priority, checkpoint_policy
+from repro.train.checkpoint import COMPLETE, Checkpointer
+
+
+def _state(key, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "params": {"w": jax.random.normal(k1, (16, 8)).astype(dtype),
+                   "b": jnp.zeros((8,), dtype)},
+        "opt": {"m": jax.random.normal(k2, (16, 8)),
+                "step": jnp.asarray(3, jnp.int32)},
+    }
+
+
+class TestRoundtrip:
+    def test_save_restore(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=False)
+        state = _state(jax.random.PRNGKey(0))
+        ck.save(10, state, extra={"data_step": 10})
+        got, extra = ck.restore(jax.eval_shape(lambda: state))
+        assert extra == {"data_step": 10}
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bf16_roundtrip(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=False)
+        state = {"w": jnp.asarray([1.5, -2.25, 0.0], jnp.bfloat16)}
+        ck.save(1, state)
+        got, _ = ck.restore(jax.eval_shape(lambda: state))
+        assert got["w"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(got["w"], np.float32),
+                                      [1.5, -2.25, 0.0])
+
+    def test_async_save(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=True)
+        state = _state(jax.random.PRNGKey(1))
+        ck.save(5, state)
+        ck.wait()
+        assert ck.latest_step() == 5
+
+
+class TestDurability:
+    def test_torn_checkpoint_is_skipped(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=False)
+        state = _state(jax.random.PRNGKey(0))
+        ck.save(1, state)
+        # simulate a crash mid-write of step 2: dir exists, no COMPLETE
+        torn = tmp_path / "step_000000002"
+        torn.mkdir()
+        (torn / "manifest.json").write_text("{}")
+        assert ck.latest_step() == 1
+        got, _ = ck.restore(jax.eval_shape(lambda: state))
+        assert got is not None
+
+    def test_prune_keeps_last_k(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep_last=2, async_save=False)
+        state = _state(jax.random.PRNGKey(0))
+        for s in (1, 2, 3, 4):
+            ck.save(s, state)
+        steps = sorted(int(d.name.split("_")[1])
+                       for d in tmp_path.iterdir()
+                       if d.name.startswith("step_"))
+        assert steps == [3, 4]
+
+    def test_restore_without_checkpoint_raises(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        with pytest.raises(FileNotFoundError):
+            ck.restore({"x": jnp.zeros(())})
+
+
+class TestExtentCheckpoints:
+    def test_policy_weights_exact_moments_approx(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=False,
+                          extent_policy=lambda p, l: (
+                              Priority.LOW if "opt" in str(p[0])
+                              else Priority.EXACT))
+        state = _state(jax.random.PRNGKey(2))
+        ck.save(1, state)
+        rep = ck.last_save_report
+        assert rep["energy_pj"] > 0
+        got, _ = ck.restore(jax.eval_shape(lambda: state))
+        np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                      np.asarray(state["params"]["w"]))
+        m_err = np.max(np.abs(np.asarray(got["opt"]["m"])
+                              - np.asarray(state["opt"]["m"])))
+        assert 0 < m_err < 1.0, "moments approximate but bounded"
+
+    def test_delta_elimination_skips_unchanged(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=False,
+                          extent_policy=lambda p, l: Priority.MID)
+        state = _state(jax.random.PRNGKey(3))
+        ck.save(1, state)
+        e1 = ck.last_save_report["energy_pj"]
+        ck.save(2, state)  # nothing changed
+        rep = ck.last_save_report
+        assert rep["skipped_leaves"] > 0
+        assert rep["energy_pj"] == 0.0
+        assert e1 > 0
+
+
+class TestElasticRestore:
+    def test_restore_with_shardings(self, tmp_path):
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        ck = Checkpointer(str(tmp_path), async_save=False)
+        state = _state(jax.random.PRNGKey(4))
+        ck.save(1, state)
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+        got, _ = ck.restore(jax.eval_shape(lambda: state), shardings=sh)
+        assert got["params"]["w"].sharding == NamedSharding(mesh, P())

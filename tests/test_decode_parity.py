@@ -1,0 +1,109 @@
+"""Serving-path correctness: prefill + decode_step must reproduce the
+full-sequence forward logits token by token (per family, reduced configs).
+
+This is the strongest integration invariant in the system: it exercises KV
+ring buffers, sliding windows, SSM state handoff, RG-LRU scan vs. 1-step
+parity, and whisper's cross-attention caches against the training path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import get_model
+
+# one representative per family + the windowed/softcap variants
+PARITY_ARCHS = [
+    "qwen2.5-3b",          # dense GQA + qkv bias
+    "gemma2-9b",           # local/global alternation + softcaps + post-norms
+    "h2o-danube-1.8b",     # sliding-window
+    "llama4-scout-17b-a16e",  # MoE top-1
+    "mamba2-2.7b",         # SSD
+    "recurrentgemma-2b",   # RG-LRU hybrid
+    "whisper-large-v3",    # enc-dec
+    "llava-next-mistral-7b",  # VLM prefix
+]
+
+B, S_PROMPT, S_DECODE = 2, 12, 6
+
+
+def _batches(cfg, key):
+    k1, k2 = jax.random.split(key)
+    total = S_PROMPT + S_DECODE
+    if cfg.family == "audio":
+        frames = jax.random.normal(k1, (B, 24, cfg.d_model), jnp.float32)
+        toks = jax.random.randint(k2, (B, total), 0, cfg.vocab_size)
+        return ({"frames": frames, "tokens": toks},
+                {"frames": frames, "tokens": toks[:, :S_PROMPT]}, toks)
+    if cfg.family == "vlm":
+        img = jax.random.normal(
+            k1, (B, cfg.num_image_tokens, cfg.vision_dim), jnp.float32)
+        toks = jax.random.randint(k2, (B, total), 0, cfg.vocab_size)
+        return ({"image_embeds": img, "tokens": toks},
+                {"image_embeds": img, "tokens": toks[:, :S_PROMPT]}, toks)
+    toks = jax.random.randint(k2, (B, total), 0, cfg.vocab_size)
+    return ({"tokens": toks}, {"tokens": toks[:, :S_PROMPT]}, toks)
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    full_batch, prompt_batch, toks = _batches(cfg, jax.random.PRNGKey(1))
+    total = S_PROMPT + S_DECODE
+    max_seq = total + (cfg.num_image_tokens if cfg.family == "vlm" else 0)
+
+    # reference: full forward logits at each position
+    h, _ = api.forward_hidden(params, full_batch, remat=False)
+    ref_logits = api.logits(params, h)  # (B, S_total(, +img), V)
+
+    # serving: prefill the prompt, then decode token by token
+    last, cache = api.prefill(params, prompt_batch, max_seq)
+    img_off = cfg.num_image_tokens if cfg.family == "vlm" else 0
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(ref_logits[:, img_off + S_PROMPT - 1]),
+        rtol=2e-2, atol=2e-2, err_msg=f"{arch}: prefill last-logit mismatch")
+
+    pos = S_PROMPT + img_off
+    for t in range(S_PROMPT, total):
+        logits, cache = api.decode_step(
+            params, toks[:, t], cache, jnp.asarray(pos, jnp.int32), max_seq)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(ref_logits[:, img_off + t]),
+            rtol=2e-2, atol=2e-2,
+            err_msg=f"{arch}: decode mismatch at t={t}")
+        pos += 1
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-2.7b"])
+def test_greedy_continuation_agrees(arch):
+    """Greedy argmax tokens from the serving path == from repeated forward."""
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S_PROMPT), 0,
+                              cfg.vocab_size)
+    max_seq = S_PROMPT + S_DECODE
+
+    last, cache = api.prefill(params, {"tokens": toks}, max_seq)
+    serve_toks = [jnp.argmax(last, -1).astype(jnp.int32)]
+    pos = S_PROMPT
+    for _ in range(S_DECODE - 1):
+        logits, cache = api.decode_step(
+            params, serve_toks[-1], cache, jnp.asarray(pos, jnp.int32),
+            max_seq)
+        serve_toks.append(jnp.argmax(logits, -1).astype(jnp.int32))
+        pos += 1
+    serve_toks = jnp.stack(serve_toks, 1)
+
+    cur = toks
+    fwd_toks = []
+    for _ in range(S_DECODE):
+        h, _ = api.forward_hidden(params, {"tokens": cur}, remat=False)
+        nxt = jnp.argmax(api.logits(params, h[:, -1:]), -1)[:, 0].astype(jnp.int32)
+        fwd_toks.append(nxt)
+        cur = jnp.concatenate([cur, nxt[:, None]], 1)
+    fwd_toks = jnp.stack(fwd_toks, 1)
+    np.testing.assert_array_equal(np.asarray(serve_toks), np.asarray(fwd_toks))

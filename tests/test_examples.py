@@ -1,0 +1,25 @@
+"""Examples are part of the public API surface: smoke-run them in-process
+(subprocess would re-pay jax init per example)."""
+import runpy
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("script,argv", [
+    ("examples/quickstart.py", []),
+    ("examples/image_store_psnr.py", []),
+    ("examples/serve_approx_kv.py", ["--new-tokens", "4", "--batch", "2"]),
+])
+def test_example_runs(script, argv, monkeypatch):
+    monkeypatch.setattr(sys, "argv", [script] + argv)
+    runpy.run_path(script, run_name="__main__")
+
+
+@pytest.mark.slow
+def test_train_example_short(monkeypatch, tmp_path):
+    monkeypatch.setattr(sys, "argv", [
+        "examples/train_lm_extent.py", "--steps", "40", "--dim", "128",
+        "--seq", "64", "--batch", "4", "--ckpt-dir", str(tmp_path)])
+    runpy.run_path("examples/train_lm_extent.py", run_name="__main__")

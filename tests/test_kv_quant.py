@@ -1,0 +1,63 @@
+"""kv_quant kernel: sweeps vs oracle + quantized-store semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.priority import Priority
+from repro.kernels.kv_quant import kv_dequant, kv_quant_store
+
+SHAPES = [(64, 128), (4, 100, 2, 16), (513,), (2, 2), (128, 256)]
+DTYPES = [jnp.bfloat16, jnp.float32]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_kernel_matches_ref(shape, dtype):
+    key = jax.random.PRNGKey(hash((shape, str(dtype))) % 2**31)
+    kv = jax.random.normal(jax.random.PRNGKey(1), shape).astype(dtype)
+    qk, sk, stk = kv_quant_store(key, kv, use_kernel=True)
+    qr, sr, st_r = kv_quant_store(key, kv, use_kernel=False)
+    assert qk.shape == shape and qk.dtype == jnp.int8
+    assert bool(jnp.all(qk == qr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    assert int(stk["errors"]) == int(st_r["errors"])
+
+
+def test_exact_level_is_pure_quantization():
+    key = jax.random.PRNGKey(0)
+    kv = jax.random.normal(jax.random.PRNGKey(1), (64, 128)) * 3.0
+    q, s, st = kv_quant_store(key, kv, level=Priority.EXACT)
+    assert int(st["errors"]) == 0
+    deq = kv_dequant(q, s, out_dtype=jnp.float32)
+    # int8 symmetric quantization: |err| <= scale/2 per block
+    err = jnp.abs(deq - kv)
+    assert float(err.max()) <= float(s.max()) * 0.5 + 1e-5
+
+
+def test_mid_level_error_near_quant_floor():
+    key = jax.random.PRNGKey(2)
+    kv = jax.random.normal(jax.random.PRNGKey(3), (256, 256)).astype(jnp.bfloat16)
+    qe, se, _ = kv_quant_store(key, kv, level=Priority.EXACT)
+    qm, sm, stm = kv_quant_store(key, kv, level=Priority.MID)
+    ref32 = kv.astype(jnp.float32)
+    rel_e = float(jnp.mean(jnp.abs(kv_dequant(qe, se, out_dtype=jnp.float32)
+                                   - ref32)) / jnp.mean(jnp.abs(ref32)))
+    rel_m = float(jnp.mean(jnp.abs(kv_dequant(qm, sm, out_dtype=jnp.float32)
+                                   - ref32)) / jnp.mean(jnp.abs(ref32)))
+    assert int(stm["errors"]) > 0
+    assert rel_m < rel_e * 2.0, "MID store stays near the quantization floor"
+
+
+def test_bytes_saved_accounting():
+    kv = jnp.zeros((100,), jnp.bfloat16)
+    _, _, st = kv_quant_store(jax.random.PRNGKey(0), kv)
+    assert int(st["bytes_saved"]) == 100  # 2B -> 1B per element
+
+
+def test_dequant_roundtrip_shape_dtype():
+    kv = jax.random.normal(jax.random.PRNGKey(0), (3, 7, 5))
+    q, s, _ = kv_quant_store(jax.random.PRNGKey(1), kv,
+                             level=Priority.EXACT)
+    deq = kv_dequant(q, s)
+    assert deq.shape == kv.shape and deq.dtype == jnp.bfloat16

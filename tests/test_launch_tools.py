@@ -1,0 +1,107 @@
+"""Dry-run internals + roofline model unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, all_cells, get_config
+from repro.launch import roofline as rl
+from repro.launch.dryrun import _collective_bytes, input_specs
+from repro.models import get_model
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_every_cell_has_specs(self, arch):
+        for shape in SHAPES:
+            specs = input_specs(arch, shape)
+            assert "tokens" in specs or "frames" in specs
+            for v in specs.values():
+                assert isinstance(v, jax.ShapeDtypeStruct)
+                assert v.shape[0] == SHAPES[shape].global_batch
+
+    def test_cell_count(self):
+        cells = list(all_cells())
+        assert len(cells) == 34  # 40 assigned − 6 documented long_500k skips
+
+
+class TestCollectiveParser:
+    HLO = """
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}
+  %ag = bf16[64]{0} all-gather(%y), replica_groups=[2,8]<=[16]
+  %tup = (f32[16]{0}, f32[16]{0}) all-to-all(%a, %b), replica_groups={{0,1}}
+"""
+
+    def test_parses_kinds_and_bytes(self):
+        out = _collective_bytes(self.HLO, 16)
+        assert out["all-reduce"]["count"] == 1
+        assert out["all-reduce"]["result_bytes"] == 128 * 256 * 4
+        # ring all-reduce wire = 2*(g-1)/g * bytes, g=4
+        np.testing.assert_allclose(out["all-reduce"]["wire_bytes"],
+                                   2 * 3 / 4 * 128 * 256 * 4)
+        assert out["all-gather"]["result_bytes"] == 64 * 2
+        assert out["all-to-all"]["result_bytes"] == 2 * 16 * 4
+
+    def test_empty_hlo(self):
+        assert _collective_bytes("ENTRY main { ROOT %r = f32[] }", 8) == {}
+
+
+class TestRooflineModel:
+    def test_terms_positive_for_all_cells(self):
+        for arch, shape in all_cells():
+            r = rl.analyze(arch, shape)
+            assert r.compute_s > 0 and r.memory_s > 0, (arch, shape)
+            assert r.collective_s >= 0
+            assert 0 < r.useful_ratio <= 1.2, (arch, shape, r.useful_ratio)
+            assert r.bottleneck in ("compute", "memory", "collective")
+
+    def test_train_flops_close_to_6nd(self):
+        """Dense train cells: analytic total within [6ND, 10ND] (attention
+        + remat overhead on top of the matmul floor)."""
+        for arch in ("qwen2.5-3b", "mistral-nemo-12b"):
+            r = rl.analyze(arch, "train_4k")
+            assert 1.0 <= r.total_flops / r.model_flops <= 1.8, arch
+
+    def test_moe_uses_active_params(self):
+        r = rl.analyze("llama4-scout-17b-a16e", "train_4k")
+        api = get_model(get_config("llama4-scout-17b-a16e"))
+        n_act, n_tot = api.active_params_per_token(), api.num_params()
+        assert n_act < 0.3 * n_tot
+        # MODEL_FLOPS built from active params
+        T = 4096 * 256
+        np.testing.assert_allclose(r.model_flops, 6 * n_act * T, rtol=1e-6)
+
+    def test_decode_memory_includes_kv(self):
+        base = rl.analyze("qwen2.5-3b", "decode_32k")
+        kvq = rl.analyze("qwen2.5-3b", "decode_32k",
+                         rl.STRATEGIES["serve_tp_only_kvq8"])
+        assert kvq.memory_s < base.memory_s
+
+    def test_strategies_change_collectives(self):
+        base = rl.analyze("mamba2-2.7b", "train_4k")
+        wide = rl.analyze("mamba2-2.7b", "train_4k",
+                          rl.STRATEGIES["dp64_tp4"])
+        assert wide.collective_s < 0.5 * base.collective_s
+
+    def test_windowed_attention_cheaper(self):
+        """h2o-danube (SWA-4096) must pay less attention flops than a full-
+        attention model of equal shape at 32k prefill."""
+        import dataclasses
+        cfg = get_config("h2o-danube-1.8b")
+        full = dataclasses.replace(cfg, window_pattern=(0,))
+        shp = SHAPES["prefill_32k"]
+        swa_fl = rl.cell_flops(cfg, shp)["total"]
+        full_fl = rl.cell_flops(full, shp)["total"]
+        assert swa_fl < full_fl
+
+
+class TestStrategyRules:
+    def test_all_named_strategies_resolve(self):
+        from repro.launch.mesh import make_host_mesh
+        from repro.sharding.rules import strategy_rules
+        mesh = make_host_mesh()
+        for name in ("baseline", "serve_tp_only", "serve_moe_2d"):
+            rules = strategy_rules(mesh, name)
+            assert "embed" in rules
+        with pytest.raises(KeyError):
+            strategy_rules(mesh, "nope")

@@ -1,0 +1,102 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU; asserts output shapes and finiteness (no NaNs/infs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.models import get_model
+from repro.train import optimizer as opt
+from repro.train.train_step import IGNORE, make_train_step
+
+SMOKE_B, SMOKE_S = 2, 32
+
+
+def _smoke_batch(cfg, key):
+    k1, k2 = jax.random.split(key)
+    if cfg.family == "audio":
+        dec = 16
+        return {
+            "frames": jax.random.normal(k1, (SMOKE_B, SMOKE_S, cfg.d_model),
+                                        jnp.float32),
+            "tokens": jax.random.randint(k2, (SMOKE_B, dec), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k2, (SMOKE_B, dec), 0, cfg.vocab_size),
+        }
+    if cfg.family == "vlm":
+        n_txt = SMOKE_S - cfg.num_image_tokens
+        return {
+            "image_embeds": jax.random.normal(
+                k1, (SMOKE_B, cfg.num_image_tokens, cfg.vision_dim), jnp.float32),
+            "tokens": jax.random.randint(k2, (SMOKE_B, n_txt), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k2, (SMOKE_B, SMOKE_S), 0, cfg.vocab_size),
+        }
+    toks = jax.random.randint(k2, (SMOKE_B, SMOKE_S), 0, cfg.vocab_size)
+    labels = jnp.concatenate(
+        [toks[:, 1:], jnp.full((SMOKE_B, 1), IGNORE, jnp.int32)], 1)
+    return {"tokens": toks, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+    h, aux = api.forward_hidden(params, batch, remat=False)
+    S_total = batch["labels"].shape[1]
+    assert h.shape == (SMOKE_B, S_total, cfg.d_model), (arch, h.shape)
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32)))), arch
+    logits = api.logits(params, h[:, :4])
+    assert logits.shape == (SMOKE_B, 4, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(api, ocfg))
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+    params2, state2, metrics = step(params, state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    assert int(state2.step) == 1
+    # parameters actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_positive_and_consistent(arch):
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    n = api.num_params()
+    a = api.active_params_per_token()
+    assert n > 0 and 0 < a <= n
+    if cfg.num_experts:
+        assert a < n, "MoE must have fewer active than total params"
+
+
+def test_full_config_param_counts_sane():
+    """Full (non-reduced) parameter counts are in the right ballpark."""
+    expect = {
+        "gemma2-9b": (8e9, 12e9),
+        "mistral-nemo-12b": (11e9, 14e9),
+        "h2o-danube-1.8b": (1.4e9, 2.2e9),
+        "qwen2.5-3b": (2.7e9, 3.7e9),
+        "llama4-scout-17b-a16e": (90e9, 120e9),   # total (16 experts)
+        "dbrx-132b": (120e9, 140e9),
+        "whisper-large-v3": (1.2e9, 2.0e9),
+        "mamba2-2.7b": (2.2e9, 3.1e9),
+        "recurrentgemma-2b": (2.2e9, 3.2e9),
+        "llava-next-mistral-7b": (6.5e9, 8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_model(get_config(arch)).num_params()
+        assert lo <= n <= hi, (arch, f"{n:.3e}")

@@ -1,0 +1,77 @@
+"""MTJ device-model tests (paper Table 3, Eq. 4-6, Fig. 6/7 + s-LLGS)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mtj
+
+
+class TestTable3Calibration:
+    def test_critical_current_at_300k(self):
+        ic = float(mtj.critical_current(mtj.DEFAULT_MTJ, 300.0))
+        np.testing.assert_allclose(ic, 200e-6, rtol=1e-5)
+
+    def test_resistances(self):
+        rp, rap = mtj.resistances(mtj.DEFAULT_MTJ, 300.0)
+        np.testing.assert_allclose(float(rp), 4.2e3, rtol=1e-6)
+        # R_AP = R_P (1 + TMR) with TMR(300K) = 200%
+        np.testing.assert_allclose(float(rap), 4.2e3 * 3.0, rtol=1e-3)
+
+
+class TestFig6Thermal:
+    def test_tmr_falls_with_temperature(self):
+        ts = np.linspace(250, 450, 20)
+        tmr = np.asarray(mtj.tmr_of_t(mtj.DEFAULT_MTJ, jnp.asarray(ts)))
+        assert np.all(np.diff(tmr) < 0)
+
+    def test_tmr_falls_with_bias(self):
+        t0 = float(mtj.tmr_of_t(mtj.DEFAULT_MTJ, 300.0, 0.0))
+        t1 = float(mtj.tmr_of_t(mtj.DEFAULT_MTJ, 300.0, 0.5))
+        assert t1 < t0
+
+    def test_delta_falls_with_temperature(self):
+        d_hot = float(mtj.delta_of_t(mtj.DEFAULT_MTJ, 400.0))
+        d_cold = float(mtj.delta_of_t(mtj.DEFAULT_MTJ, 300.0))
+        assert d_hot < d_cold
+
+
+class TestFig7SwitchingVoltage:
+    def test_faster_switching_needs_more_voltage(self):
+        v_fast = float(mtj.switching_voltage(mtj.DEFAULT_MTJ, 2e-9))
+        v_slow = float(mtj.switching_voltage(mtj.DEFAULT_MTJ, 20e-9))
+        assert v_fast > v_slow
+
+    def test_hotter_cell_needs_less_voltage(self):
+        """Fig. 7: at fixed switching time, voltage falls as T rises."""
+        v300 = float(mtj.switching_voltage(mtj.DEFAULT_MTJ, 5e-9, 300.0))
+        v400 = float(mtj.switching_voltage(mtj.DEFAULT_MTJ, 5e-9, 400.0))
+        assert v400 < v300
+
+
+class TestEq5SwitchingTime:
+    def test_time_falls_with_current(self):
+        i = np.linspace(250e-6, 600e-6, 10)
+        t = np.asarray(jax.vmap(
+            lambda ii: mtj.switching_time(mtj.DEFAULT_MTJ, ii))(jnp.asarray(i)))
+        assert np.all(np.diff(t) < 0)
+
+
+class TestLLGS:
+    def test_overdrive_switches_underdrive_does_not(self):
+        key = jax.random.PRNGKey(0)
+        _, sw_hi = mtj.llgs_switch(key, mtj.DEFAULT_MTJ, 500e-6, 10e-9)
+        _, sw_lo = mtj.llgs_switch(key, mtj.DEFAULT_MTJ, 20e-6, 10e-9)
+        assert bool(sw_hi) and not bool(sw_lo)
+
+    def test_monte_carlo_wer_monotone(self):
+        key = jax.random.PRNGKey(1)
+        w_lo = float(mtj.monte_carlo_wer(key, mtj.DEFAULT_MTJ, 260e-6, n=64))
+        w_hi = float(mtj.monte_carlo_wer(key, mtj.DEFAULT_MTJ, 500e-6, n=64))
+        assert w_hi <= w_lo
+
+    def test_trajectory_is_bounded(self):
+        traj, _ = mtj.llgs_switch(jax.random.PRNGKey(2), mtj.DEFAULT_MTJ,
+                                  400e-6, 5e-9)
+        t = np.asarray(traj)
+        assert np.all((t > 0) & (t < np.pi)) and np.all(np.isfinite(t))

@@ -1,0 +1,97 @@
+"""Sharding rules: divisibility fallback, dup-axis regressions, full-tree
+spec construction for every architecture."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import get_model
+from repro.sharding.rules import (default_rules, make_constrain, spec_for,
+                                  tree_shardings)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+class TestSpecFor:
+    def test_basic_mapping(self, mesh):
+        rules = default_rules(mesh)
+        spec = spec_for(mesh, rules, ("batch", None, "mlp"), (8, 4, 128))
+        assert spec == P(("data",), None, "model")
+
+    def test_divisibility_fallback(self):
+        """Dims not divisible by the axis size fall back to replication."""
+        devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
+        mesh = Mesh(devs, ("data", "model"))
+        rules = dict(default_rules(mesh))
+        # fake a 16-wide model axis by checking the arithmetic directly
+        from repro.sharding.rules import _axis_size
+        assert _axis_size(mesh, "model") == 1
+        spec = spec_for(mesh, rules, ("heads",), (10,))
+        assert spec == P("model")  # 10 % 1 == 0 -> allowed on host mesh
+
+    def test_none_logical_axis(self, mesh):
+        rules = default_rules(mesh)
+        assert spec_for(mesh, rules, (None, None), (2, 2)) == P(None, None)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_all_param_shardings_construct(mesh, arch):
+    """Regression for the dup-axis class of bugs (rglru gates, MoE experts,
+    VLM projector): NamedSharding raises on duplicate mesh axes even on a
+    1x1 mesh, so constructing every leaf spec is a real validation."""
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    rules = default_rules(mesh)
+    shardings = tree_shardings(mesh, rules, api.param_axes(),
+                               api.param_shapes())
+    leaves = jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
+    assert len(leaves) == len(jax.tree.leaves(
+        api.param_shapes(),
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(i, int) for i in x)))
+    assert all(isinstance(s, NamedSharding) for s in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cache_shardings_construct(mesh, arch):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(2, 16))
+    template = api.cache_axes()
+    flat_sds, treedef = jax.tree.flatten(cache)
+    flat_ax = treedef.flatten_up_to(template)
+    rules = default_rules(mesh)
+    for sds, ax in zip(flat_sds, flat_ax):
+        spec = spec_for(mesh, rules, ax, sds.shape)
+        NamedSharding(mesh, spec)  # must not raise
+
+
+def test_constrain_is_identity_on_host_mesh(mesh):
+    rules = default_rules(mesh)
+    constrain = make_constrain(mesh, rules)
+    x = jnp.ones((4, 8))
+    with mesh:
+        y = jax.jit(lambda t: constrain(t, ("batch", "mlp")))(x)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_ring_positions_property():
+    """Ring-buffer slot arithmetic: slot i holds absolute position p with
+    p % C == i, p <= pos, and p > pos - C (the newest C positions)."""
+    from repro.models.attention import ring_positions
+    for C in (4, 7, 16):
+        for pos in (0, 3, 15, 64, 65):
+            kp = np.asarray(ring_positions(C, jnp.asarray(pos)))
+            for i, p in enumerate(kp):
+                assert p % C == i or p < 0
+                assert p <= pos
+                assert p > pos - C
+            # the just-written slot holds pos itself
+            assert kp[pos % C] == pos

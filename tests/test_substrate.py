@@ -1,0 +1,224 @@
+"""Data pipeline, compression, fault tolerance, extent table, cache sim,
+energy model — unit tests for the framework substrate."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cache_sim, energy_model
+from repro.core.extent_table import ExtentTable, QualityController
+from repro.core.priority import Priority
+from repro.train import compression as comp
+from repro.train import data as data_mod
+from repro.train import fault_tolerance as ft
+from repro.train.train_step import IGNORE
+
+
+class TestData:
+    CFG = data_mod.DataConfig(vocab_size=128, seq_len=16, global_batch=4,
+                              seed=7)
+
+    def test_deterministic(self):
+        a = data_mod.make_batch(self.CFG, 3)
+        b = data_mod.make_batch(self.CFG, 3)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+
+    def test_steps_differ(self):
+        a = data_mod.make_batch(self.CFG, 0)
+        b = data_mod.make_batch(self.CFG, 1)
+        assert not np.array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+    def test_labels_are_shifted_tokens(self):
+        b = data_mod.make_batch(self.CFG, 0)
+        np.testing.assert_array_equal(np.asarray(b["labels"][:, :-1]),
+                                      np.asarray(b["tokens"][:, 1:]))
+        assert np.all(np.asarray(b["labels"][:, -1]) == IGNORE)
+
+    def test_iterator_resume(self):
+        it = data_mod.DataIterator(self.CFG)
+        next(it), next(it)
+        s = it.state_dict()
+        b3 = next(it)
+        it2 = data_mod.DataIterator(self.CFG)
+        it2.load_state_dict(s)
+        b3b = next(it2)
+        np.testing.assert_array_equal(np.asarray(b3["tokens"]),
+                                      np.asarray(b3b["tokens"]))
+
+    def test_tokens_in_vocab(self):
+        b = data_mod.make_batch(self.CFG, 0)
+        t = np.asarray(b["tokens"])
+        assert t.min() >= 0 and t.max() < self.CFG.vocab_size
+
+
+class TestCompression:
+    def test_int8_range_and_scale(self):
+        g = jax.random.normal(jax.random.PRNGKey(0), (64,)) * 5
+        q, s = comp.quantize(g, 8)
+        assert q.dtype == jnp.int8
+        err = jnp.abs(comp.dequantize(q, s) - g)
+        assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_reduces_bias(self):
+        """With EF, the *accumulated* applied gradient converges to the
+        accumulated true gradient (residual stays bounded)."""
+        cfg = comp.CompressionConfig(bits=8)
+        key = jax.random.PRNGKey(1)
+        g_true = {"w": jax.random.normal(key, (32,)) * 1e-3}
+        ef = comp.init_state(g_true)
+        applied = jnp.zeros((32,))
+        for i in range(50):
+            out, ef = comp.compress_grads(g_true, ef, cfg)
+            applied = applied + out["w"]
+        total_true = 50 * g_true["w"]
+        rel = float(jnp.linalg.norm(applied - total_true)
+                    / jnp.linalg.norm(total_true))
+        assert rel < 0.02, f"EF bias too large: {rel}"
+
+    def test_disable_passthrough(self):
+        cfg = comp.CompressionConfig(enable=False)
+        g = {"w": jnp.ones((4,))}
+        out, ef = comp.compress_grads(g, comp.init_state(g), cfg)
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.ones(4))
+
+    def test_wire_savings(self):
+        g = {"w": jnp.ones((100,), jnp.float32)}
+        assert comp.wire_bytes_saved(g, comp.CompressionConfig()) == 300
+
+
+class TestFaultTolerance:
+    def test_heartbeat(self):
+        t = [0.0]
+        hb = ft.HeartbeatMonitor(timeout_s=10, clock=lambda: t[0])
+        hb.beat("h0"); hb.beat("h1")
+        t[0] = 5.0
+        hb.beat("h1")
+        t[0] = 12.0
+        assert hb.dead_hosts() == ["h0"]
+        assert hb.alive_hosts() == ["h1"]
+
+    def test_straggler_flags_slow_host(self):
+        sm = ft.StragglerMonitor(threshold=1.5, window=16)
+        for step in range(20):
+            sm.record("fast0", step, 1.0)
+            sm.record("fast1", step, 1.05)
+            slow = sm.record("slow", step, 2.2)
+        assert sm.chronic(min_flags=3) == ["slow"]
+
+    def test_elastic_mesh_preserves_tp(self):
+        devs = list(range(64))  # stand-in device objects
+        mesh = ft.best_elastic_mesh(devs, model_parallel=16)
+        assert dict(zip(mesh.axis_names, mesh.devices.shape)) == {
+            "data": 4, "model": 16}
+        mesh2 = ft.best_elastic_mesh(devs[:50], model_parallel=16)
+        rep = ft.remesh_report(64, mesh2)
+        assert rep["dp_degree"] == 3 and rep["idle_devices"] == 16
+
+    def test_elastic_mesh_too_small_raises(self):
+        with pytest.raises(RuntimeError):
+            ft.best_elastic_mesh(list(range(8)), model_parallel=16)
+
+    def test_recovery_plan(self):
+        t = [0.0]
+        hb = ft.HeartbeatMonitor(timeout_s=10, clock=lambda: t[0])
+        sm = ft.StragglerMonitor()
+        hosts = {f"h{i}": list(range(i * 8, (i + 1) * 8)) for i in range(4)}
+        for h in hosts:
+            hb.beat(h)
+        pol = ft.RecoveryPolicy(hb, sm, model_parallel=8)
+        assert pol.plan(hosts)["action"] == "none"
+        t[0] = 20.0
+        for h in list(hosts)[1:]:
+            hb.beat(h)
+        plan = pol.plan(hosts)
+        assert plan["action"] == "remesh"
+        assert plan["dead_hosts"] == ["h0"]
+        assert plan["report"]["new_devices"] == 24
+
+
+class TestExtentTable:
+    def test_lru_eviction(self):
+        t = ExtentTable(capacity=2)
+        t.update("a", Priority.LOW)
+        t.update("b", Priority.MID)
+        t.update("c", Priority.HIGH)  # evicts a
+        assert t.evictions == 1
+        assert t.lookup("a") == Priority.EXACT  # miss -> default
+        assert t.lookup("c") == Priority.HIGH
+
+    def test_hit_rate(self):
+        t = ExtentTable()
+        t.update("x", Priority.LOW)
+        for _ in range(9):
+            t.lookup("x")
+        t.lookup("y")
+        assert abs(t.hit_rate - 0.9) < 1e-9
+
+    def test_controller_stream_defaults(self):
+        qc = QualityController()
+        assert qc.quality_for("kv_v", "blk0") == Priority.LOW
+        qc.tag("kv_v", "blk1", Priority.EXACT)
+        assert qc.quality_for("kv_v", "blk1") == Priority.EXACT
+
+
+class TestCacheSim:
+    def test_fig13_mixes_are_distributions(self):
+        for w, m in cache_sim.FIG13_WORKLOADS.items():
+            assert abs(sum(m.values()) - 1.0) < 1e-6, w
+
+    def test_expensive_share_near_80pct(self):
+        shares = [cache_sim.mix_from_fig13(w).expensive_share
+                  for w in cache_sim.FIG13_WORKLOADS]
+        assert 0.7 < float(np.mean(shares)) < 0.9  # paper: "on average 80%"
+
+    def test_fig14_scheme_ordering(self):
+        for row in cache_sim.fig14_normalized_energy().values():
+            assert row["extent"] < row["cast"] < row["quark"] < row["basic"]
+            assert row["basic"] == 1.0
+
+    def test_trace_mix_measures_real_writes(self):
+        old = jnp.zeros((64,), jnp.uint32)
+        new = jnp.full((64,), 0xFF, jnp.uint32)
+        m = cache_sim.trace_transition_mix(old, new)
+        np.testing.assert_allclose(m.t01, 8 / 32, rtol=1e-6)
+        np.testing.assert_allclose(m.t00, 24 / 32, rtol=1e-6)
+
+    def test_wer_for_mix_positive(self):
+        m = cache_sim.mix_from_fig13("jpeg")
+        assert 0 < cache_sim.wer_for_mix(m) < 0.1
+
+
+class TestEnergyModelMC:
+    def test_monte_carlo_runs_and_is_sane(self):
+        out = energy_model.monte_carlo_variation(jax.random.PRNGKey(0), n=200)
+        assert out["energy_full_pj"]["std"] > 0
+        assert out["energy_approx_pj"]["mean"] < out["energy_full_pj"]["mean"]
+
+    def test_fig15_approx_variation_smaller(self):
+        """Paper Fig. 15: approximated-write energy spread sits below the
+        completed-write spread."""
+        out = energy_model.monte_carlo_variation(jax.random.PRNGKey(1), n=300)
+        assert (out["energy_approx_pj"]["p95"]
+                < out["energy_full_pj"]["p95"])
+
+    def test_fig16_voltage_sensitivity(self):
+        sweep = energy_model.voltage_sweep(jax.random.PRNGKey(2),
+                                           sigmas=(0.0, 0.05), n=100)
+        assert (sweep[0.05]["energy_full_pj"]["std"]
+                > sweep[0.0]["energy_full_pj"]["std"])
+
+    def test_meter_summary(self):
+        from repro.core.approx_store import approx_write_with_stats
+        m = energy_model.StepEnergyMeter()
+        _, st = approx_write_with_stats(
+            jax.random.PRNGKey(0), jnp.zeros((8,), jnp.float32),
+            jnp.ones((8,), jnp.float32), Priority.EXACT)
+        m.add("kv", st)
+        s = m.summary()
+        assert s["total"]["energy_pj"] > 0
+        assert 0 <= s["total"]["write_skip_rate"] <= 1

@@ -1,0 +1,128 @@
+"""End-to-end training integration: loss goes down; EXTENT checkpointing,
+gradient compression and fault-tolerant restart compose with the loop."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.priority import Priority
+from repro.models import get_model
+from repro.train import compression as comp
+from repro.train import data as data_mod
+from repro.train import optimizer as opt
+from repro.train.checkpoint import Checkpointer
+from repro.train.train_step import loss_fn, make_train_step
+
+STEPS = 30
+
+
+def _setup(arch="qwen2.5-3b", seed=0):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=STEPS,
+                           weight_decay=0.0)
+    state = opt.init(params)
+    dcfg = data_mod.DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                               global_batch=8, seed=7)
+    return cfg, api, params, ocfg, state, dcfg
+
+
+@pytest.mark.slow
+def test_loss_decreases():
+    cfg, api, params, ocfg, state, dcfg = _setup()
+    step = jax.jit(make_train_step(api, ocfg))
+    losses = []
+    for i in range(STEPS):
+        batch = data_mod.make_batch(dcfg, i)
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first - 0.2, (first, last)
+
+
+@pytest.mark.slow
+def test_compressed_training_tracks_uncompressed():
+    cfg, api, params, ocfg, state, dcfg = _setup()
+    ccfg = comp.CompressionConfig(bits=8)
+    ef = comp.init_state(params)
+
+    base_step = make_train_step(api, ocfg)
+
+    def compressed_step(params, state, ef, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: loss_fn(api, p, batch, constrain=lambda t, s: t),
+            has_aux=True)(params)
+        grads, ef = comp.compress_grads(grads, ef, ccfg)
+        params, state, om = opt.update(ocfg, grads, state, params)
+        return params, state, ef, loss
+
+    cstep = jax.jit(compressed_step)
+    bstep = jax.jit(base_step)
+    p2, s2 = params, state
+    losses_c, losses_b = [], []
+    for i in range(STEPS):
+        batch = data_mod.make_batch(dcfg, i)
+        params, state, ef, lc = cstep(params, state, ef, batch)
+        p2, s2, m = bstep(p2, s2, batch)
+        losses_c.append(float(lc))
+        losses_b.append(float(m["loss"]))
+    # compressed final loss within 10% of uncompressed
+    assert np.mean(losses_c[-5:]) < np.mean(losses_b[-5:]) * 1.10
+
+
+@pytest.mark.slow
+def test_checkpoint_restart_resumes_exactly(tmp_path):
+    """Kill-and-restart: restored run must produce bit-identical metrics."""
+    cfg, api, params, ocfg, state, dcfg = _setup()
+    step = jax.jit(make_train_step(api, ocfg))
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    it = data_mod.DataIterator(dcfg)
+
+    # run 10 steps, checkpoint at 5
+    mid_state = None
+    for i in range(10):
+        batch = next(it)
+        params, state, m = step(params, state, batch)
+        if i == 4:
+            ck.save(5, {"params": params, "opt": state},
+                    extra=it.state_dict())
+    loss_10 = float(m["loss"])
+
+    # "crash" -> restore and replay 5..9
+    like = jax.eval_shape(lambda: {"params": params, "opt": state})
+    restored, extra = ck.restore(like)
+    it2 = data_mod.DataIterator(dcfg)
+    it2.load_state_dict(extra)
+    p, s = restored["params"], restored["opt"]
+    for i in range(5):
+        batch = next(it2)
+        p, s, m2 = step(p, s, batch)
+    assert float(m2["loss"]) == pytest.approx(loss_10, rel=1e-6)
+
+
+@pytest.mark.slow
+def test_extent_checkpoint_training_still_converges(tmp_path):
+    """Approximate (LOW moments) checkpoint round-trip mid-training must not
+    destabilize the run — the paper's accuracy-vs-energy tradeoff claim."""
+    cfg, api, params, ocfg, state, dcfg = _setup()
+    step = jax.jit(make_train_step(api, ocfg))
+    ck = Checkpointer(str(tmp_path), async_save=False,
+                      extent_policy=lambda p, l: (
+                          Priority.LOW if "'m'" in str(p[0]) or
+                          "'v'" in str(p[0]) else Priority.EXACT))
+    losses = []
+    for i in range(STEPS):
+        batch = data_mod.make_batch(dcfg, i)
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+        if i == STEPS // 2:  # roundtrip through approximate NVM mid-run
+            ck.save(i, {"params": params, "opt": state})
+            got, _ = ck.restore(
+                jax.eval_shape(lambda: {"params": params, "opt": state}))
+            params, state = got["params"], got["opt"]
+            assert ck.last_save_report["energy_pj"] > 0
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2

@@ -1,0 +1,106 @@
+"""Unit + property tests for the WER equations (paper Eq. 1-3, 14-15)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import wer
+
+
+class TestEq1:
+    def test_range(self):
+        t = jnp.asarray([1e-10, 1e-9, 5e-9, 1e-8, 2e-8])
+        w = wer.wer_bit(t, 1.5, 60.0)
+        assert jnp.all((w >= 0) & (w <= 1))
+
+    def test_monotone_in_pulse_width(self):
+        ts = np.geomspace(1e-10, 3e-8, 25)
+        w = np.asarray(wer.wer_bit(jnp.asarray(ts), 1.4, 60.0))
+        assert np.all(np.diff(w) <= 1e-9), "WER must fall as pulse widens"
+
+    def test_monotone_in_overdrive(self):
+        i = np.linspace(1.05, 2.5, 40)
+        w = np.asarray(wer.wer_bit(1e-8, jnp.asarray(i), 60.0))
+        assert np.all(np.diff(w) <= 1e-9), "WER must fall as current rises"
+
+    def test_subcritical_never_switches(self):
+        assert float(wer.wer_bit(1e-8, 0.9, 60.0)) == 1.0
+        assert float(wer.wer_bit(1e-8, 1.0, 60.0)) == 1.0
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        t_ns=st.floats(0.1, 50.0),
+        i_rel=st.floats(1.01, 3.0),
+        delta=st.floats(20.0, 90.0),
+    )
+    def test_valid_probability_everywhere(self, t_ns, i_rel, delta):
+        w = float(wer.wer_bit(t_ns * 1e-9, i_rel, delta))
+        assert 0.0 <= w <= 1.0 and np.isfinite(w)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        t_ns=st.floats(1.0, 20.0),
+        i_rel=st.floats(1.1, 2.5),
+        d1=st.floats(20.0, 50.0),
+        d2=st.floats(50.0, 90.0),
+    )
+    def test_higher_delta_harder_to_switch(self, t_ns, i_rel, d1, d2):
+        w1 = float(wer.wer_bit(t_ns * 1e-9, i_rel, d1))
+        w2 = float(wer.wer_bit(t_ns * 1e-9, i_rel, d2))
+        assert w2 >= w1 - 1e-7
+
+
+class TestEq2Consistency:
+    def test_same_shape_as_eq1(self):
+        """Eq. 2 writes the same law with the LLG rate constant spelled out;
+        both must agree on the monotonicities and limiting behaviour."""
+        ts = np.geomspace(1e-10, 3e-8, 20)
+        w2 = np.asarray(wer.wer_thermal(jnp.asarray(ts), 1.4, 60.0))
+        assert np.all(np.diff(w2) <= 1e-9)
+        assert 0.0 <= w2.min() and w2.max() <= 1.0
+
+
+class TestEq3:
+    def test_exponential_incomplete_write(self):
+        p = wer.wer_exponential(jnp.asarray([0.0, 1e-8, 1e-7]), 1e-8)
+        np.testing.assert_allclose(
+            np.asarray(p), [1.0, np.exp(-1.0), np.exp(-10.0)], rtol=1e-5)
+
+
+class TestEq14_15:
+    def test_switching_time_explodes_below_vc(self):
+        tau_low = float(wer.switching_time(60.0, 0.5))
+        tau_at = float(wer.switching_time(60.0, 1.0))
+        assert tau_low > 1e3 * tau_at
+
+    def test_psw_increases_with_pulse_and_voltage(self):
+        p1 = float(wer.switching_probability(1e-9, 60.0, 1.1))
+        p2 = float(wer.switching_probability(5e-9, 60.0, 1.1))
+        p3 = float(wer.switching_probability(1e-9, 60.0, 1.5))
+        assert p2 >= p1 and p3 >= p1
+
+    def test_thermal_assist(self):
+        """Paper's thermal argument: lower Delta (hotter die) -> higher
+        switching probability at fixed sub/near-critical drive."""
+        hot = float(wer.switching_probability(5e-9, 40.0, 0.98))
+        cold = float(wer.switching_probability(5e-9, 70.0, 0.98))
+        assert hot > cold
+
+
+class TestDirectionAsymmetry:
+    def test_p2ap_harder(self):
+        w_01 = float(wer.wer_from_level(1e-8, 1.4, 60.0, True))
+        w_10 = float(wer.wer_from_level(1e-8, 1.4, 60.0, False))
+        assert w_01 > w_10, "P->AP (write 1) must be the weak direction"
+
+
+class TestSelfTermination:
+    def test_pulse_fraction_bounds(self):
+        f = float(wer.expected_pulse_fraction(1e-8, 1.8, 60.0))
+        assert 0.0 < f < 1.0
+
+    def test_stronger_drive_terminates_earlier(self):
+        f_lo = float(wer.expected_pulse_fraction(1e-8, 1.2, 60.0))
+        f_hi = float(wer.expected_pulse_fraction(1e-8, 2.0, 60.0))
+        assert f_hi < f_lo

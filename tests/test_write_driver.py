@@ -1,0 +1,95 @@
+"""Write-driver calibration: the paper's Table 1 + headline claims."""
+import numpy as np
+import pytest
+
+from repro.core import cache_sim, write_driver
+from repro.core.priority import Priority
+
+# the paper's evaluation level mix (cache_sim default)
+LEVEL_MIX = {int(Priority.EXACT): 0.35, int(Priority.HIGH): 0.15,
+             int(Priority.MID): 0.20, int(Priority.LOW): 0.30}
+
+
+def _fig13_avg():
+    mixes = [cache_sim.mix_from_fig13(w) for w in cache_sim.FIG13_WORKLOADS]
+    return (float(np.mean([m.t01 for m in mixes])),
+            float(np.mean([m.t10 for m in mixes])))
+
+
+class TestLevelOrdering:
+    def test_wer_strictly_improves_with_priority(self):
+        levels = sorted(write_driver.default_driver(), key=lambda l: l.code)
+        w01 = [l.wer_0to1 for l in levels]
+        w10 = [l.wer_1to0 for l in levels]
+        assert all(a > b for a, b in zip(w01, w01[1:]))
+        assert all(a >= b for a, b in zip(w10, w10[1:]))
+
+    def test_energy_rises_with_priority_modestly(self):
+        """Higher overdrive costs more per unit time but terminates earlier;
+        the *static* energy ordering must hold within each direction."""
+        levels = sorted(write_driver.default_driver(), key=lambda l: l.code)
+        assert levels[-1].wer_0to1 < 1e-6, "exact level must be ~error-free"
+        assert levels[0].wer_0to1 > 1e-3, "low level must actually approximate"
+
+    def test_p2ap_costs_more(self):
+        for l in write_driver.default_driver():
+            assert l.e_0to1_pj > l.e_1to0_pj
+
+
+class TestTable1Reproduction:
+    def test_extent_word_energy(self):
+        t01, t10 = _fig13_avg()
+        levels = write_driver.default_driver()
+        e = 0.0
+        for code, frac in LEVEL_MIX.items():
+            lvl = next(l for l in levels if l.code == code)
+            e += frac * write_driver.WORD_BITS * (
+                t01 * lvl.e_0to1_pj + t10 * lvl.e_1to0_pj)
+        np.testing.assert_allclose(e, 337.2, rtol=0.01), \
+            "Table 1 EXTENT energy row"
+
+    def test_extent_word_latency(self):
+        levels = write_driver.default_driver()
+        lat = write_driver.word_latency_ns(
+            levels, {c: f for c, f in LEVEL_MIX.items()})
+        np.testing.assert_allclose(lat, 6.9, rtol=0.02), \
+            "Table 1 EXTENT latency row"
+
+    def test_headline_energy_saving_vs_ranjan(self):
+        """Paper abstract: 33.04% lower write energy than [18] (503.6 pJ)."""
+        t01, t10 = _fig13_avg()
+        levels = write_driver.default_driver()
+        e = sum(frac * write_driver.WORD_BITS *
+                (t01 * next(l for l in levels if l.code == c).e_0to1_pj +
+                 t10 * next(l for l in levels if l.code == c).e_1to0_pj)
+                for c, frac in LEVEL_MIX.items())
+        saving = 1.0 - e / write_driver.TABLE1["ranjan_dac15"]["energy_pj"]
+        np.testing.assert_allclose(saving, 0.3304, atol=0.005)
+
+    def test_headline_latency_saving_vs_quark(self):
+        """Paper abstract: 5.47% lower latency than [21] (7.3 ns)."""
+        levels = write_driver.default_driver()
+        lat = write_driver.word_latency_ns(levels, LEVEL_MIX)
+        saving = 1.0 - lat / write_driver.TABLE1["quark_islped17"]["latency_ns"]
+        np.testing.assert_allclose(saving, 0.0547, atol=0.005)
+
+    def test_area_overhead_row(self):
+        t1 = write_driver.TABLE1
+        overhead = t1["extent"]["area_mm2"] / t1["cast_tcad20"]["area_mm2"] - 1
+        np.testing.assert_allclose(overhead, 0.037, atol=0.003)
+
+
+class TestSelfTermination:
+    def test_self_termination_saves_energy(self):
+        on = write_driver.default_driver(
+            write_driver.DriverConfig(self_terminate=True))
+        off = write_driver.default_driver(
+            write_driver.DriverConfig(self_terminate=False))
+        for a, b in zip(on, off):
+            assert a.e_0to1_pj < b.e_0to1_pj
+            assert a.e_1to0_pj < b.e_1to0_pj
+
+    def test_level_table_shapes(self):
+        t = write_driver.level_table()
+        for k in ("wer01", "wer10", "e01", "e10", "lat"):
+            assert t[k].shape == (4,)
