@@ -5,6 +5,13 @@
 Serves a reduced-config model with the production engine, comparing exact
 vs. approximate KV storage: token agreement, realized write-energy savings
 vs. the basic (non-approximate) STT-RAM cell, and the CMP skip rate.
+
+The approximate write is fused into the jitted decode step (one compiled
+call per token, stats accumulated on device, synced once per generate).
+``--use-kernel`` routes it through the Pallas kernel instead of the
+pure-jnp lane reference — on CPU hosts the kernel executes through the
+Pallas interpreter (slow, correctness-mode); on TPU pair it with
+``--no-interpret``.
 """
 import argparse
 
@@ -22,6 +29,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="Pallas kernel write path (default: jnp lane ref)")
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="run the Pallas kernel natively (TPU hosts)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -46,7 +57,9 @@ def main():
 
     eng_a = ServingEngine(cfg, ServeConfig(max_seq=max_seq,
                                            max_new_tokens=args.new_tokens,
-                                           extent_enabled=True))
+                                           extent_enabled=True,
+                                           use_kernel=args.use_kernel,
+                                           interpret=not args.no_interpret))
     toks_a, report = eng_a.generate(prompt)
 
     agree = float(jnp.mean((toks_x == toks_a).astype(jnp.float32)))

@@ -117,7 +117,8 @@ def approx_write_with_stats(
         energy_pj=energy,
         latency_ns=jnp.max(lat_used),
         bits_written=jnp.sum(flip, dtype=jnp.int32),
-        bits_total=jnp.asarray(old_u.size * nbits, jnp.int32),
+        # f32, not i32: tensors of >=2^31 bits would overflow at trace time
+        bits_total=jnp.asarray(float(old_u.size * nbits), jnp.float32),
         bit_errors=jnp.sum(fail, dtype=jnp.int32),
         flips_0to1=jnp.sum(to_ap, dtype=jnp.int32),
         flips_1to0=jnp.sum(to_p, dtype=jnp.int32),
@@ -127,6 +128,45 @@ def approx_write_with_stats(
 
 def approx_write(key, old, new, level, table=None, **kw) -> jax.Array:
     return approx_write_with_stats(key, old, new, level, table, **kw)[0]
+
+
+def approx_write_lanes(
+    key: jax.Array,
+    old: jax.Array,
+    new: jax.Array,
+    level: Priority | int,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+    vectors: Optional[Tuple[jax.Array, ...]] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Lane-packed EXTENT write, safe to tree-map over a cache pytree
+    *inside* jit.
+
+    Unlike ``approx_write_with_stats`` (the eager bit-unpacked oracle, which
+    draws one f32 uniform per (element, bit) and so materializes a 16-32x
+    amplified intermediate), this routes through the fused path in
+    ``repro.kernels.extent_write``: uint32 lane packing (two 16-bit elements
+    per lane), counter-based RNG, per-block stat reductions. Same bit-plane
+    priority policy and the same driver energy table — flip counts and
+    energy agree with the oracle exactly; realized error counts differ only
+    by the RNG stream.
+
+    Returns (stored, stats{energy_pj f32, flips01, flips10, errors,
+    bits_written, bits_total  — all 0-d device arrays}). No host syncs:
+    callers accumulate the stats on device and transfer once per batch of
+    writes. ``use_kernel`` selects the Pallas kernel (``interpret=True`` for
+    correctness-mode execution on CPU hosts) versus the pure-jnp lane ref.
+    Callers that map over many tensors (the serve engine) pass
+    pre-resolved per-tensor ``vectors`` (see
+    ``kernels.extent_write.level_vectors``) so priorities are plain array
+    operands, not retrace triggers.
+    """
+    from repro.kernels.extent_write import ops as _xops
+    level = Priority.coerce(level)
+    return _xops.extent_write(key, old, new, level=level,
+                              use_kernel=use_kernel, interpret=interpret,
+                              vectors=vectors)
 
 
 # ---------------------------------------------------------------------------

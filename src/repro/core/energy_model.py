@@ -30,6 +30,26 @@ from repro.core.priority import Priority
 # step-level accounting
 # ---------------------------------------------------------------------------
 
+#: device-resident write-stat accumulator layout: the jitted serve/train
+#: write paths carry one 0-d array per key and add into it every step, so
+#: the ledger crosses to the host exactly once per generate()/step batch.
+DEVICE_STAT_KEYS = ("energy_pj", "flips01", "flips10", "errors")
+
+
+def zero_device_stats() -> Dict[str, jax.Array]:
+    """Fresh all-zero device accumulator (energy f32, counters i32)."""
+    return {"energy_pj": jnp.zeros((), jnp.float32),
+            "flips01": jnp.zeros((), jnp.int32),
+            "flips10": jnp.zeros((), jnp.int32),
+            "errors": jnp.zeros((), jnp.int32)}
+
+
+def add_device_stats(acc: Dict[str, jax.Array],
+                     stats: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """acc + stats over DEVICE_STAT_KEYS, staying on device (jit-safe)."""
+    return {k: acc[k] + stats[k] for k in DEVICE_STAT_KEYS}
+
+
 @dataclasses.dataclass
 class StepEnergyMeter:
     """Accumulates write energy per named stream over one step (host side)."""
@@ -44,6 +64,22 @@ class StepEnergyMeter:
         s["bits_total"] += int(stats.bits_total)
         s["bit_errors"] += int(stats.bit_errors)
         s["latency_ns"] = max(s["latency_ns"], float(stats.latency_ns))
+
+    def add_stream(self, stream: str, host_stats: Dict[str, Any],
+                   bits_total: int = 0, latency_ns: float = 0.0) -> None:
+        """Fold one already-synced device accumulator (see
+        ``zero_device_stats``) into a named stream. ``bits_total`` is shape
+        metadata, so callers pass it host-side instead of burning a device
+        counter on a statically-known quantity."""
+        s = self.streams.setdefault(stream, {
+            "energy_pj": 0.0, "bits_written": 0, "bits_total": 0,
+            "bit_errors": 0, "latency_ns": 0.0})
+        s["energy_pj"] += float(host_stats["energy_pj"])
+        s["bits_written"] += int(host_stats["flips01"]) + int(
+            host_stats["flips10"])
+        s["bits_total"] += int(bits_total)
+        s["bit_errors"] += int(host_stats["errors"])
+        s["latency_ns"] = max(s["latency_ns"], float(latency_ns))
 
     def summary(self) -> Dict[str, Any]:
         tot = {k: sum(s[k] for s in self.streams.values())

@@ -60,6 +60,10 @@ class MTJParams:
 
 DEFAULT_MTJ = MTJParams()
 
+# AP->P effective-overdrive multiplier vs. P->AP at equal drive current
+# (spin-torque efficiency asymmetry; see llgs_switch)
+AP_TO_P_OVERDRIVE = 1.3
+
 
 # ---------------------------------------------------------------------------
 # Eq. 6: temperature/bias-dependent spin-torque efficiency factor g(T)
@@ -180,6 +184,12 @@ def llgs_switch(
     delta = delta_of_t(p, t)
     ic = critical_current(p, t)
     over = i_write / ic
+    if not to_ap:
+        # AP->P transitions see the full spin torque (electrons flow pinned->
+        # free): ~1.3x effective overdrive vs the weak P->AP direction (the
+        # paper's "logic-one costs 2.5x logic-zero" energy split is the
+        # driver-level face of the same asymmetry).
+        over = over * AP_TO_P_OVERDRIVE
     # natural precession rate scale (1/tau0-like); alpha*gamma*mu0*Hk
     rate = p.alpha * GAMMA * MU_0 * p.h_k
     # thermal agitation per sqrt(dt), in radians
@@ -200,17 +210,16 @@ def llgs_switch(
     noise = jax.random.normal(key, (n_steps,), jnp.float32)
     _, traj = jax.lax.scan(body, jnp.asarray(theta_init, jnp.float32), noise)
     switched = traj[-1] > (0.5 * jnp.pi)
-    if not to_ap:
-        # AP->P transitions see the full spin torque (electrons flow pinned->
-        # free): model as ~1.3x effective overdrive (paper: P->AP is the slow
-        # direction, 2.5x energy) — reflected upstream in the driver table.
-        pass
     return traj, switched
 
 
 def monte_carlo_wer(key: jax.Array, p: MTJParams, i_write, t_pulse=10e-9,
-                    n: int = 256, t: float = 300.0) -> jax.Array:
-    """Empirical WER over n independent s-LLGS runs (paper uses 64/1e3)."""
+                    n: int = 256, t: float = 300.0,
+                    to_ap: bool = True) -> jax.Array:
+    """Empirical WER over n independent s-LLGS runs (paper uses 64/1e3).
+    ``to_ap`` selects the transition direction: P->AP (True, the weak-torque
+    direction) or AP->P (False, ~1.3x effective overdrive, lower WER)."""
     keys = jax.random.split(key, n)
-    _, sw = jax.vmap(lambda k: llgs_switch(k, p, i_write, t_pulse, t=t))(keys)
+    _, sw = jax.vmap(
+        lambda k: llgs_switch(k, p, i_write, t_pulse, t=t, to_ap=to_ap))(keys)
     return 1.0 - jnp.mean(sw.astype(jnp.float32))

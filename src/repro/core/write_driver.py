@@ -75,9 +75,11 @@ class DriverConfig:
     # mix reproduces Table 1's EXTENT row: 337.2 pJ/word (test_write_driver).
     e_bit_full_pj: float = 1046.0 / WORD_BITS * 2.5889
     # fixed circuit latency (row/col decode + CMP sense + driver turn-on)
-    # added to the pulse-occupancy term; calibrated so the mix-weighted
-    # EXTENT latency reproduces Table 1's 6.9 ns.
-    t_overhead_ns: float = 3.0
+    # added to the pulse-occupancy term; calibrated so the slowest used
+    # driver (the LOW bank — weakest overdrive, latest CMP termination)
+    # reproduces Table 1's 6.9 ns word latency under the max-over-used
+    # semantics of word_latency_ns.
+    t_overhead_ns: float = 0.67418
 
 
 # the four levels: lower priority -> lower rail / weaker driver bank ->
@@ -173,7 +175,10 @@ def word_energy_pj(levels: Tuple[LevelSpec, ...], level_mix: Dict[int, float],
 
 def word_latency_ns(levels: Tuple[LevelSpec, ...],
                     level_mix: Dict[int, float]) -> float:
-    """Expected write latency = mix-weighted level latency (word bits are
-    written in parallel; the slowest *used* driver bounds the word)."""
-    return sum(frac * next(l for l in levels if l.code == code).latency_ns
-               for code, frac in level_mix.items())
+    """Word write latency: bits are written in parallel by per-level driver
+    banks, so the slowest *used* driver (mix fraction > 0) bounds the word —
+    a max, not a mix-weighted average. Lower-priority banks terminate later
+    (weaker overdrive), so any word containing LOW bits is LOW-bound."""
+    used = [next(l for l in levels if l.code == code)
+            for code, frac in level_mix.items() if frac > 0]
+    return max((l.latency_ns for l in used), default=0.0)

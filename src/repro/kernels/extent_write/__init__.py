@@ -1,3 +1,3 @@
-from repro.kernels.extent_write.ops import extent_write  # noqa: F401
+from repro.kernels.extent_write.ops import extent_write, level_vectors  # noqa: F401
 from repro.kernels.extent_write.kernel import extent_write_kernel  # noqa: F401
 from repro.kernels.extent_write.ref import extent_write_ref  # noqa: F401

@@ -20,7 +20,11 @@ Layout: operands are bitcast to uint32 lanes *outside* the kernel (ops.py):
 uint32 is the native VPU lane width; bf16 tensors pack pairs of elements
 into one lane, f32 maps 1:1. Block shape defaults to (256, 512) lanes =
 512 KiB per uint32 buffer — 3 buffers (old/new/stored) plus unrolled f32
-temporaries stay well under the 16 MiB VMEM budget.
+temporaries stay well under the 16 MiB VMEM budget. The RNG hashes the
+*flat* lane index (row * cols_total + col), so results are invariant to
+how ops.py partitions the lane vector into a (rows, cols) grid — small
+tensors get right-sized grids instead of full-block padding, bit-identical
+to any other partition.
 """
 from __future__ import annotations
 

@@ -22,27 +22,39 @@ from repro.kernels.extent_write import ref as R
 
 
 @functools.lru_cache(maxsize=64)
-def _level_vectors(dtype, level: Priority,
-                   cfg: Optional[write_driver.DriverConfig] = None):
+def level_vectors(dtype, level: Priority,
+                  cfg: Optional[write_driver.DriverConfig] = None):
     """Per-bit-plane (thr01, thr10, e01, e10) for one element dtype, with the
     bit-plane priority policy applied, then widened to the uint32 lane
-    layout (2x16-bit elements per lane for 16-bit dtypes)."""
-    table = write_driver.level_table(cfg or write_driver.DriverConfig())
-    codes = bitplane_priorities(dtype, Priority.coerce(level))  # (ebits,)
-    wer01 = np.asarray(table["wer01"])[codes]
-    wer10 = np.asarray(table["wer10"])[codes]
-    e01 = np.asarray(table["e01"])[codes]
-    e10 = np.asarray(table["e10"])[codes]
-    ebits = codes.shape[0]
-    if ebits == 16:  # two elements per uint32 lane: repeat the bit pattern
-        wer01 = np.concatenate([wer01, wer01])
-        wer10 = np.concatenate([wer10, wer10])
-        e01 = np.concatenate([e01, e01])
-        e10 = np.concatenate([e10, e10])
-    to_thr = lambda w: (np.clip(w, 0.0, 1.0) * 2**32).astype(np.uint64).clip(
-        0, 2**32 - 1).astype(np.uint32)
-    return (jnp.asarray(to_thr(wer01)), jnp.asarray(to_thr(wer10)),
-            jnp.asarray(e01, jnp.float32), jnp.asarray(e10, jnp.float32))
+    layout (2x16-bit elements per lane for 16-bit dtypes).
+
+    Public so jit-resident callers (serve engine, approx_store's lane path)
+    can resolve a tensor's priority to driver vectors once, outside the
+    traced region: the vectors are plain arrays, so changing a tensor's
+    priority swaps constants without retracing the write computation.
+    The driver calibration is Python-float code, so it is forced to
+    compile-time evaluation — safe to call (via lru_cache, once) even while
+    tracing an enclosing jit."""
+    with jax.ensure_compile_time_eval():
+        table = write_driver.level_table(cfg or write_driver.DriverConfig())
+        codes = bitplane_priorities(dtype, Priority.coerce(level))  # (ebits,)
+        wer01 = np.asarray(table["wer01"])[codes]
+        wer10 = np.asarray(table["wer10"])[codes]
+        e01 = np.asarray(table["e01"])[codes]
+        e10 = np.asarray(table["e10"])[codes]
+        ebits = codes.shape[0]
+        if ebits == 16:  # two elements per uint32 lane: repeat the bit pattern
+            wer01 = np.concatenate([wer01, wer01])
+            wer10 = np.concatenate([wer10, wer10])
+            e01 = np.concatenate([e01, e01])
+            e10 = np.concatenate([e10, e10])
+        to_thr = lambda w: (np.clip(w, 0.0, 1.0) * 2**32).astype(
+            np.uint64).clip(0, 2**32 - 1).astype(np.uint32)
+        return (jnp.asarray(to_thr(wer01)), jnp.asarray(to_thr(wer10)),
+                jnp.asarray(e01, jnp.float32), jnp.asarray(e10, jnp.float32))
+
+
+_level_vectors = level_vectors  # backwards-compatible alias
 
 
 def _to_lanes(x: jax.Array) -> Tuple[jax.Array, int]:
@@ -79,15 +91,26 @@ def extent_write(
     block: Tuple[int, int] = K.DEFAULT_BLOCK,
     use_kernel: bool = True,
     interpret: bool = True,
+    vectors: Optional[Tuple[jax.Array, jax.Array, jax.Array, jax.Array]] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """EXTENT approximate write of ``new`` over ``old`` (same shape/dtype).
 
-    Returns (stored, stats{energy_pj, flips01, flips10, errors}).
+    Returns (stored, stats{energy_pj, flips01, flips10, errors,
+    bits_written, bits_total}). ``bits_total`` counts only real element
+    bits — padding lanes added to reach block multiples are excluded, so
+    partial blocks account exactly like full ones.
+
     The driver level table is resolved eagerly (it is Python-float
-    calibration code); the data path below is jitted.
+    calibration code); the data path below is jitted. Callers already
+    inside a jit trace may pass precomputed ``vectors`` (see
+    ``level_vectors``) to route per-tensor priorities without touching the
+    level table: the vectors are ordinary operands, so two tensors at
+    different priorities share one compiled computation.
     """
     assert old.shape == new.shape and old.dtype == new.dtype
-    thr01, thr10, e01, e10 = _level_vectors(old.dtype, Priority.coerce(level))
+    if vectors is None:
+        vectors = level_vectors(old.dtype, Priority.coerce(level))
+    thr01, thr10, e01, e10 = vectors
     return _extent_write_jit(key, old, new, thr01, thr10, e01, e10,
                              block=block, use_kernel=use_kernel,
                              interpret=interpret)
@@ -105,19 +128,32 @@ def _extent_write_jit(
     old_u, _ = _to_lanes(old)
     new_u, _ = _to_lanes(new)
     n_lanes = old_u.size
-    bc = block[0] * block[1]
-    pad = (-n_lanes) % bc
+
+    # The counter RNG hashes the *flat* lane index, so the (rows, cols)
+    # layout is free to follow the tensor instead of the other way around:
+    # results are bit-identical for any block partition, and small tensors
+    # (a serving cache leaf is a few thousand lanes) must not pay a full
+    # (256 x 512)-lane pad — only the rows are padded, to the row-block.
+    if use_kernel:
+        cols = block[1]
+        rows_used = max(1, -(-n_lanes // cols))
+        block_r = min(block[0], rows_used)
+        rows = -(-rows_used // block_r) * block_r
+    else:
+        # pure-jnp ref: no grid constraints at all, one row, zero pad
+        cols = n_lanes if n_lanes else 1
+        rows = 1
+    pad = rows * cols - n_lanes
     # padding lanes: old == new == 0 -> no flips, no energy, no failures
-    old_p = jnp.concatenate([old_u, jnp.zeros((pad,), jnp.uint32)])
-    new_p = jnp.concatenate([new_u, jnp.zeros((pad,), jnp.uint32)])
-    rows = old_p.size // block[1]
-    old2 = old_p.reshape(rows, block[1])
-    new2 = new_p.reshape(rows, block[1])
+    old2 = jnp.concatenate(
+        [old_u, jnp.zeros((pad,), jnp.uint32)]).reshape(rows, cols)
+    new2 = jnp.concatenate(
+        [new_u, jnp.zeros((pad,), jnp.uint32)]).reshape(rows, cols)
 
     if use_kernel:
         stored2, energy, f01, f10, err = K.extent_write_kernel(
             old2, new2, seed, thr01, thr10, e01, e10,
-            nbits=nbits, block=(min(block[0], rows), block[1]),
+            nbits=nbits, block=(min(block[0], rows), cols),
             interpret=interpret)
         stats = {"energy_pj": jnp.sum(energy),
                  "flips01": jnp.sum(f01), "flips10": jnp.sum(f10),
@@ -125,6 +161,15 @@ def _extent_write_jit(
     else:
         stored2, stats = R.extent_write_ref(
             old2, new2, seed, thr01, thr10, e01, e10, nbits=nbits)
+
+    # partial-block accounting: padding lanes are (0 -> 0) writes, so they
+    # contribute no flips/energy/errors above; bits_total likewise counts
+    # only the real element bits, never the pad. f32 (not i32): a >=256 MiB
+    # tensor holds >=2^31 bits, which would overflow at trace time.
+    stats = dict(stats)
+    stats["bits_written"] = stats["flips01"] + stats["flips10"]
+    stats["bits_total"] = jnp.asarray(
+        float(old.size * jnp.dtype(old.dtype).itemsize * 8), jnp.float32)
 
     stored_u = stored2.reshape(-1)[:n_lanes]
     stored = _from_lanes(stored_u, old.shape, old.dtype)

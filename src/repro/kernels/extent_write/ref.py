@@ -12,7 +12,18 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.extent_write.kernel import uniform_bits
+from repro.kernels.extent_write.kernel import _hash_u32, _K_BIT, _K_ELEM
+
+
+def _uniform_bits_all(seed: jax.Array, elem: jax.Array,
+                      nbits: int) -> jax.Array:
+    """(R, C, nbits) counter-RNG draws — the vectorized form of the
+    kernel's per-bit-plane ``uniform_bits``, bit-identical by construction
+    (same hash over (seed, flat element index, bit plane))."""
+    bits = jnp.arange(nbits, dtype=jnp.uint32)
+    h = (elem.astype(jnp.uint32)[..., None] * _K_ELEM
+         ^ (bits * _K_BIT) ^ seed.astype(jnp.uint32))
+    return _hash_u32(h)
 
 
 def extent_write_ref(
@@ -36,8 +47,7 @@ def extent_write_ref(
     flip = (diff[..., None] & mask) != 0                  # (R,C,nbits)
     to_ap = flip & ((new_u32[..., None] & mask) != 0)
 
-    u = jnp.stack(
-        [uniform_bits(seed[0], elem, b) for b in range(nbits)], axis=-1)
+    u = _uniform_bits_all(seed[0], elem, nbits)
     thr = jnp.where(to_ap, thr01, thr10)
     fail = flip & (u < thr)
 

@@ -15,21 +15,34 @@ So the engine needs no hooks inside the models: it diffs cache trees.
 Priority policy: K at MID (errors perturb attention patterns), V at LOW
 (errors only perturb the payload), recurrent/conv states EXACT (errors
 persist in the recurrence — DESIGN.md §4).
+
+The write is **jit-resident**: one compiled step fuses
+``decode -> cache diff-write -> sampling -> stats accumulation``, with the
+diff-write routed through the lane-packed path in
+``repro.kernels.extent_write`` (``ServeConfig.use_kernel`` selects the
+Pallas kernel vs. the pure-jnp lane reference; ``interpret`` runs the
+kernel through the Pallas interpreter on CPU hosts). Per-write stats are
+pytree *outputs* of the compiled step, accumulated into 0-d device arrays
+and synced to the ``StepEnergyMeter`` exactly once per ``generate()`` —
+the token loop performs zero device->host transfers. The per-leaf driver
+vectors (priority -> thresholds/energies) are resolved once at engine
+construction, so per-tensor priorities never retrace the step.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.approx_store import approx_write_with_stats
-from repro.core.energy_model import StepEnergyMeter
+from repro.core.approx_store import approx_write_lanes, approx_write_with_stats
+from repro.core.energy_model import (StepEnergyMeter, add_device_stats,
+                                     zero_device_stats)
 from repro.core.extent_table import QualityController
-from repro.core.priority import Priority, kv_cache_policy
+from repro.core.priority import Priority, bits_of, kv_cache_policy
+from repro.kernels.extent_write import level_vectors
 from repro.models import ModelApi, get_model
 
 
@@ -41,6 +54,13 @@ class ServeConfig:
     greedy: bool = True
     temperature: float = 1.0
     seed: int = 0
+    # EXTENT write-path backend: the Pallas kernel (use_kernel=True) or the
+    # pure-jnp lane reference. On CPU hosts the kernel only runs through the
+    # Pallas interpreter (interpret=True, correctness-mode); the lane ref is
+    # the fast jit-resident default there. On TPU set use_kernel=True,
+    # interpret=False.
+    use_kernel: bool = False
+    interpret: bool = True
 
 
 def _tag_cache(cache: Any) -> Any:
@@ -49,16 +69,34 @@ def _tag_cache(cache: Any) -> Any:
         lambda p, l: kv_cache_policy(p, l), cache)
 
 
-def _extent_cache_write(key, old_cache, new_cache, tags):
-    """Diff-write the whole cache through the approximate store; returns
-    (stored_cache, aggregated WriteStats-like dict)."""
+def _is_approx_leaf(leaf, tag: Priority) -> bool:
+    """Floating leaves below EXACT go through the approximate driver
+    (the seed engine's condition — every float width)."""
+    return (jnp.issubdtype(leaf.dtype, jnp.floating)
+            and tag != Priority.EXACT)
+
+
+def _has_lane_packing(leaf) -> bool:
+    """The lane-packed kernel path covers 2/4-byte elements; other float
+    widths fall back to the bit-unpacked write, still inside jit."""
+    return jnp.dtype(leaf.dtype).itemsize in (2, 4)
+
+
+def eager_extent_cache_write(key, old_cache, new_cache, tags):
+    """Eager oracle for the fused cache write (the seed engine's data path).
+
+    Diffs the whole cache through ``approx_write_with_stats`` leaf by leaf
+    with host-synced Python accumulation. Kept as the reference the
+    benchmarks validate the jit-resident path against — never called from
+    the serving loop.
+    """
     flat_old, treedef = jax.tree.flatten(old_cache)
     flat_new = treedef.flatten_up_to(new_cache)
     flat_tag = treedef.flatten_up_to(tags)
     stored, agg = [], {"energy_pj": 0.0, "bits_written": 0, "bit_errors": 0,
                        "bits_total": 0}
     for i, (o, n, t) in enumerate(zip(flat_old, flat_new, flat_tag)):
-        if jnp.issubdtype(n.dtype, jnp.floating) and t != Priority.EXACT:
+        if _is_approx_leaf(n, t):  # every float width, as the seed did
             s, st = approx_write_with_stats(jax.random.fold_in(key, i),
                                             o, n, t)
             agg["energy_pj"] += float(st.energy_pj)
@@ -88,6 +126,94 @@ class ServingEngine:
                 p, tok, cache, pos, self.scfg.max_seq))
         self._prefill_jit = jax.jit(
             lambda p, batch: self.api.prefill(p, batch, self.scfg.max_seq))
+        # per-leaf write plan: cache *structure* (not shapes) fixes which
+        # leaves are approximate and at which driver level, so it is
+        # resolved once here from an abstract cache and closed over by the
+        # fused step — priorities become compile-time constants, never
+        # retrace triggers.
+        cache_sds = jax.eval_shape(lambda: self.api.init_cache(
+            1, self.scfg.max_seq))
+        tags = _tag_cache(cache_sds)
+        flat_sds, treedef = jax.tree.flatten(cache_sds)
+        flat_tags = treedef.flatten_up_to(tags)
+        self.cache_tags = tags
+        self._leaf_levels: List[Optional[Priority]] = [
+            t if _is_approx_leaf(l, t) else None
+            for l, t in zip(flat_sds, flat_tags)]
+        # priority -> (thr01, thr10, e01, e10) driver vectors, resolved
+        # here (eagerly, outside any trace) and passed into the fused step
+        # as plain operands. None -> no lane packing for that float width;
+        # the fused step degrades to the bit-unpacked write for that leaf
+        # (still jit-resident, just without the 16-32x traffic saving).
+        self._leaf_vectors = [
+            level_vectors(l.dtype, lvl)
+            if lvl is not None and _has_lane_packing(l) else None
+            for l, lvl in zip(flat_sds, self._leaf_levels)]
+        self._step_fused = jax.jit(self._make_fused_step())
+        self._prefill_fused = jax.jit(self._make_fused_prefill())
+
+    # ---------------------------------------------------------- fused steps
+    def _write_cache(self, key, old_cache, new_cache):
+        """Jit-resident diff-write of the whole cache tree; returns
+        (stored_cache, device stats dict). Traced only."""
+        flat_old, treedef = jax.tree.flatten(old_cache)
+        flat_new = treedef.flatten_up_to(new_cache)
+        stored = []
+        acc = zero_device_stats()
+        for i, (o, n, lvl) in enumerate(zip(flat_old, flat_new,
+                                            self._leaf_levels)):
+            if lvl is None:
+                stored.append(n)  # EXACT fast path (recurrent states, ints)
+                continue
+            if self._leaf_vectors[i] is not None:
+                s, st = approx_write_lanes(
+                    jax.random.fold_in(key, i), o, n, lvl,
+                    use_kernel=self.scfg.use_kernel,
+                    interpret=self.scfg.interpret,
+                    vectors=self._leaf_vectors[i])
+            else:
+                # float widths without lane packing (f64/f8): bit-unpacked
+                # write, jit-resident all the same
+                s, w = approx_write_with_stats(
+                    jax.random.fold_in(key, i), o, n, lvl)
+                st = {"energy_pj": w.energy_pj, "flips01": w.flips_0to1,
+                      "flips10": w.flips_1to0, "errors": w.bit_errors}
+            stored.append(s)
+            acc = add_device_stats(acc, st)
+        return treedef.unflatten(stored), acc
+
+    def _make_fused_step(self):
+        def step(params, tok, cache, pos, key, acc):
+            key, k_write, k_sample = jax.random.split(key, 3)
+            logits, new_cache = self.api.decode_step(
+                params, tok, cache, pos, self.scfg.max_seq)
+            if self.scfg.extent_enabled:
+                new_cache, st = self._write_cache(k_write, cache, new_cache)
+                acc = add_device_stats(acc, st)
+            tok2 = self._sample(k_sample, logits)
+            return tok2, new_cache, pos + 1, key, acc
+        return step
+
+    def _make_fused_prefill(self):
+        def prefill(params, batch, key):
+            key, k_write, k_sample = jax.random.split(key, 3)
+            logits, cache = self.api.prefill(params, batch,
+                                             self.scfg.max_seq)
+            acc = zero_device_stats()
+            if self.scfg.extent_enabled:
+                zero = jax.tree.map(jnp.zeros_like, cache)
+                cache, acc = self._write_cache(k_write, zero, cache)
+            tok = self._sample(k_sample, logits)
+            return tok, cache, key, acc
+        return prefill
+
+    def _approx_cache_bits(self, cache) -> int:
+        """Total bits of the approximate (non-EXACT floating) cache leaves —
+        static shape metadata, no device access."""
+        flat = jax.tree.leaves(cache)
+        return sum(l.size * bits_of(l.dtype)
+                   for l, lvl in zip(flat, self._leaf_levels)
+                   if lvl is not None)
 
     # ------------------------------------------------------------- sampling
     def _sample(self, key, logits: jax.Array) -> jax.Array:
@@ -98,48 +224,46 @@ class ServingEngine:
 
     # ------------------------------------------------------------ generation
     def generate(self, batch: Dict[str, jax.Array],
-                 max_new_tokens: Optional[int] = None
+                 max_new_tokens: Optional[int] = None, *,
+                 sync_stats: bool = True
                  ) -> Tuple[jax.Array, Dict[str, Any]]:
         """Prefill `batch` then decode greedily. Returns (tokens (B, T_new),
-        report{energy, errors, tokens/s-shape stats})."""
+        report{energy, errors, tokens/s-shape stats}).
+
+        The token loop issues exactly one compiled call per step and keeps
+        every carried value (token, cache, position, RNG key, stat
+        accumulator) on device; the accumulated stats cross to the host
+        once, after the last token. With ``sync_stats=False`` even that
+        transfer is skipped and the raw device accumulators are returned
+        under ``report["device_stats"]`` (used by the no-transfer test and
+        by callers batching many generates before accounting).
+        """
         mnt = max_new_tokens or self.scfg.max_new_tokens
         key = jax.random.PRNGKey(self.scfg.seed + 1)
-        logits, cache = self._prefill_jit(self.params, batch)
-        if self.scfg.extent_enabled:
-            tags = _tag_cache(cache)
-            zero = jax.tree.map(jnp.zeros_like, cache)
-            key, k2 = jax.random.split(key)
-            cache, agg = _extent_cache_write(k2, zero, cache, tags)
-            self._account("kv_prefill", agg)
-        else:
-            tags = None
-
-        B = logits.shape[0]
         prompt_len = batch["tokens"].shape[1] + (
             self.cfg.num_image_tokens if self.cfg.family == "vlm" else 0)
-        outs: List[jax.Array] = []
-        tok = self._sample(key, logits)
-        outs.append(tok)
-        pos = jnp.asarray(prompt_len, jnp.int32)
-        for step in range(mnt - 1):
-            key, k1, k2 = jax.random.split(key, 3)
-            logits, new_cache = self._decode_jit(self.params, tok, cache, pos)
-            if self.scfg.extent_enabled:
-                new_cache, agg = _extent_cache_write(k1, cache, new_cache,
-                                                     tags)
-                self._account("kv_decode", agg)
-            cache = new_cache
-            tok = self._sample(k2, logits)
-            outs.append(tok)
-            pos = pos + 1
-        report = self.meter.summary()
-        return jnp.stack(outs, axis=1), report
 
-    def _account(self, stream: str, agg: Dict[str, float]) -> None:
-        s = self.meter.streams.setdefault(stream, {
-            "energy_pj": 0.0, "bits_written": 0, "bits_total": 0,
-            "bit_errors": 0, "latency_ns": 0.0})
-        s["energy_pj"] += agg["energy_pj"]
-        s["bits_written"] += agg["bits_written"]
-        s["bits_total"] += agg["bits_total"]
-        s["bit_errors"] += agg["bit_errors"]
+        tok, cache, key, pre_acc = self._prefill_fused(self.params, batch,
+                                                       key)
+        outs: List[jax.Array] = [tok]
+        pos = jnp.asarray(prompt_len, jnp.int32)
+        acc = zero_device_stats()
+        for _ in range(mnt - 1):
+            tok, cache, pos, key, acc = self._step_fused(
+                self.params, tok, cache, pos, key, acc)
+            outs.append(tok)
+        tokens = jnp.stack(outs, axis=1)
+
+        step_bits = self._approx_cache_bits(cache)
+        if not sync_stats:
+            return tokens, {"device_stats": {"kv_prefill": pre_acc,
+                                             "kv_decode": acc},
+                            "bits_total": {"kv_prefill": step_bits,
+                                           "kv_decode": (mnt - 1) * step_bits}}
+        if self.scfg.extent_enabled:
+            pre_host, dec_host = jax.device_get((pre_acc, acc))
+            self.meter.add_stream("kv_prefill", pre_host,
+                                  bits_total=step_bits)
+            self.meter.add_stream("kv_decode", dec_host,
+                                  bits_total=(mnt - 1) * step_bits)
+        return tokens, self.meter.summary()

@@ -1,0 +1,68 @@
+"""Deterministic stand-in for the slice of the hypothesis API this suite
+uses, imported only when the real package is absent (the declared test
+extra in pyproject.toml installs hypothesis; a bare environment must still
+*collect and run* every module).
+
+Not a property-based tester: each ``@given`` test simply runs over
+``max_examples`` pseudo-random draws seeded from the test name, so results
+are reproducible across processes and no example database is involved.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from types import SimpleNamespace
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+
+strategies = SimpleNamespace(integers=_integers, floats=_floats,
+                             sampled_from=_sampled_from)
+
+_DEFAULT_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            n = getattr(run, "_max_examples", _DEFAULT_EXAMPLES)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                r = random.Random((base << 20) | i)
+                drawn = {k: s.draw(r) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+        run._max_examples = _DEFAULT_EXAMPLES
+        # drawn parameters are filled here, not by pytest fixtures — hide
+        # them from the collected signature (as hypothesis itself does)
+        sig = inspect.signature(fn)
+        run.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        del run.__wrapped__
+        return run
+    return deco

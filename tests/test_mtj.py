@@ -75,3 +75,28 @@ class TestLLGS:
                                   400e-6, 5e-9)
         t = np.asarray(traj)
         assert np.all((t > 0) & (t < np.pi)) and np.all(np.isfinite(t))
+
+
+class TestDirectionAsymmetry:
+    """AP->P sees ~1.3x effective overdrive (full spin torque): it must
+    switch faster and fail less than P->AP at equal drive current."""
+
+    def test_ap_to_p_has_lower_wer(self):
+        key = jax.random.PRNGKey(5)
+        w_p2ap = float(mtj.monte_carlo_wer(key, mtj.DEFAULT_MTJ, 260e-6,
+                                           n=96, to_ap=True))
+        w_ap2p = float(mtj.monte_carlo_wer(key, mtj.DEFAULT_MTJ, 260e-6,
+                                           n=96, to_ap=False))
+        assert w_ap2p < w_p2ap
+
+    def test_ap_to_p_switches_faster(self):
+        """Same drive current, same thermal-noise draw: AP->P must cross
+        theta = pi/2 strictly earlier than P->AP."""
+        key = jax.random.PRNGKey(7)
+        t_p2ap, s1 = mtj.llgs_switch(key, mtj.DEFAULT_MTJ, 500e-6, 10e-9,
+                                     to_ap=True)
+        t_ap2p, s2 = mtj.llgs_switch(key, mtj.DEFAULT_MTJ, 500e-6, 10e-9,
+                                     to_ap=False)
+        assert bool(s1) and bool(s2)
+        cross = lambda tr: int(np.argmax(np.asarray(tr) > np.pi / 2))
+        assert cross(t_ap2p) < cross(t_p2ap)
