@@ -1,15 +1,24 @@
 """ML-system energy evaluation (beyond-paper Fig. 14 analogue): KV-cache
 serving write energy, EXTENT vs. the exact basic cell, across architecture
-families — plus the fused-write validation the engine refactor demands:
+families — plus the validation the serving-stack refactors demand:
 
-  * **wall-clock**: the jit-resident decode loop (cache diff-write fused
-    into the compiled step, stats accumulated on device) vs. the seed
-    engine's eager loop (per-leaf ``approx_write_with_stats`` with
-    ``float()``/``int()`` host syncs per token). Reports the speedup.
-  * **parity**: both write paths applied to the *identical* sequence of
-    (old, new) cache pairs. Flip counts and energy are RNG-independent, so
-    they must match to float tolerance; realized error rates agree within
-    sampling noise.
+  * **wall-clock (fused vs eager)**: the scan-resident decode burst (one
+    compiled call for the whole token loop, cache diff-write fused in,
+    stats accumulated on device) vs. the seed engine's eager loop (per-leaf
+    ``approx_write_with_stats`` with ``float()``/``int()`` host syncs per
+    token). Reports the speedup.
+  * **parity (fused vs eager)**: both write paths applied to the
+    *identical* sequence of (old, new) cache pairs. Flip counts and energy
+    are RNG-independent, so they must match to float tolerance; realized
+    error rates agree within sampling noise.
+  * **continuous vs sequential (mixed arrivals)**: a staggered arrival
+    stream served by the slot-pool scheduler vs. one ``generate()`` per
+    request — decode throughput (tokens/s) and the energy ledger.
+  * **lockstep parity (continuous vs monolithic)**: the same requests
+    admitted as one full-pool group must reproduce the monolithic batch's
+    EXTENT energy/flip/error stats BIT-EXACTLY under the same RNG key (the
+    flat-lane-index layout invariance the slot pool is built on), with the
+    ExtentTable stats present in the serve report.
 
 Streams compared per generated token batch:
   basic    every KV bit pays the full static pulse (no CMP, no skip),
@@ -25,22 +34,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.energy_model import exact_baseline_energy_pj
+from repro.core.energy_model import (exact_baseline_energy_pj,
+                                     zero_device_stats, zero_slot_stats)
 from repro.core.priority import Priority
 from repro.kernels.kv_quant import kv_dequant, kv_quant_store
-from repro.serve import ServeConfig, ServingEngine
+from repro.serve import (ContinuousScheduler, ServeConfig, ServingEngine,
+                         synthetic_requests)
 from repro.serve.engine import _tag_cache, eager_extent_cache_write
 
 
-def _decode_pairs(eng: ServingEngine, prompt, n_steps: int):
+def _raw_jits(eng: ServingEngine):
+    """Prefill/decode WITHOUT the fused extent write — the seed engine's
+    separate compilation units, rebuilt here for the eager baseline."""
+    prefill = jax.jit(lambda p, b: eng.api.prefill(p, b, eng.scfg.max_seq))
+    decode = jax.jit(lambda p, t, c, pos: eng.api.decode_step(
+        p, t, c, pos, eng.scfg.max_seq))
+    return prefill, decode
+
+
+def _decode_pairs(eng: ServingEngine, prompt, n_steps: int, jits=None):
     """Capture the decode-time (old_cache, new_cache) write stream of an
     exact trajectory — the common input both write paths are scored on."""
-    logits, cache = eng._prefill_jit(eng.params, prompt)
+    prefill, decode = jits if jits is not None else _raw_jits(eng)
+    logits, cache = prefill(eng.params, prompt)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     pos = jnp.asarray(prompt["tokens"].shape[1], jnp.int32)
     pairs = []
     for _ in range(n_steps):
-        logits, new_cache = eng._decode_jit(eng.params, tok, cache, pos)
+        logits, new_cache = decode(eng.params, tok, cache, pos)
         pairs.append((cache, new_cache))
         cache = new_cache
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -48,9 +69,12 @@ def _decode_pairs(eng: ServingEngine, prompt, n_steps: int):
     return pairs
 
 
-def _eager_loop(eng: ServingEngine, logits, cache, tags, pos, new_tokens: int):
+def _eager_loop(eng: ServingEngine, decode, logits, cache, tags, pos,
+                new_tokens: int):
     """The seed engine's decode-loop data path, reproduced: separate decode
-    jit, then an eager host-synced per-leaf approximate write every token.
+    jit (passed in — jax.jit caches per wrapper object, so the SAME jit
+    must serve warm-up and timed runs or the timer pays a recompile),
+    then an eager host-synced per-leaf approximate write every token.
     Prefill happens at the caller so timers cover only the loop."""
     key = jax.random.PRNGKey(eng.scfg.seed + 1)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -58,7 +82,7 @@ def _eager_loop(eng: ServingEngine, logits, cache, tags, pos, new_tokens: int):
            "bits_total": 0}
     for _ in range(new_tokens - 1):
         key, k1 = jax.random.split(key)
-        logits, new_cache = eng._decode_jit(eng.params, tok, cache, pos)
+        logits, new_cache = decode(eng.params, tok, cache, pos)
         new_cache, a = eager_extent_cache_write(k1, cache, new_cache, tags)
         for k in agg:
             agg[k] += a[k]
@@ -70,42 +94,48 @@ def _eager_loop(eng: ServingEngine, logits, cache, tags, pos, new_tokens: int):
 
 
 def compare_fused_vs_eager(arch: str = "qwen2.5-3b", new_tokens: int = 8):
-    """Wall-clock + stats parity of the fused write path vs. the eager
+    """Wall-clock + stats parity of the scan-resident burst vs. the eager
     oracle. Returns a dict with speedup and relative stat errors."""
     cfg = get_config(arch).reduced()
     prompt = {"tokens": jax.random.randint(
         jax.random.PRNGKey(0), (2, 12), 0, cfg.vocab_size)}
     eng = ServingEngine(cfg, ServeConfig(max_seq=32,
                                          max_new_tokens=new_tokens))
+    vectors = eng.vectors_for_floor(Priority.LOW)
 
     # -- wall-clock: warm both paths once, then time ONLY the decode loops
     # (prefill + its whole-cache write and the final stats sync excluded on
     # both sides, so the two timers cover the identical workload:
-    # new_tokens-1 decode+write+sample steps)
+    # new_tokens-1 decode+write+sample steps). The fused side is ONE
+    # compiled call: the lax.scan burst.
     eng.generate(prompt)
-    from repro.core.energy_model import zero_device_stats
+    B = prompt["tokens"].shape[0]
     key = jax.random.PRNGKey(eng.scfg.seed + 1)
-    tok, cache0, key, _ = eng._prefill_fused(eng.params, prompt, key)
-    pos0 = jnp.asarray(prompt["tokens"].shape[1], jnp.int32)
+    tok, cache0, key, _ = eng._prefill_fused(eng.params, prompt, key, vectors)
+    pos0 = jnp.full((B,), prompt["tokens"].shape[1], jnp.int32)
+    active = jnp.ones((B,), bool)
     t0 = time.perf_counter()
-    cache, pos, acc = cache0, pos0, zero_device_stats()
-    for _ in range(new_tokens - 1):
-        tok, cache, pos, key, acc = eng._step_fused(
-            eng.params, tok, cache, pos, key, acc)
-    jax.block_until_ready((tok, acc))
+    out = eng._burst(eng.params, tok, cache0, pos0, key,
+                     zero_device_stats(), zero_slot_stats(B), active,
+                     vectors, n=new_tokens - 1)
+    jax.block_until_ready(out)
     t_fused = time.perf_counter() - t0
 
-    logits_e, cache_e = eng._prefill_jit(eng.params, prompt)
+    jits = _raw_jits(eng)
+    prefill, decode = jits
+    logits_e, cache_e = prefill(eng.params, prompt)
     tags_e = _tag_cache(cache_e)
-    _eager_loop(eng, logits_e, cache_e, tags_e, pos0, new_tokens=2)  # warm
+    pos_s = jnp.asarray(prompt["tokens"].shape[1], jnp.int32)
+    _eager_loop(eng, decode, logits_e, cache_e, tags_e, pos_s,
+                new_tokens=2)  # warm: same jit object serves the timed run
     t0 = time.perf_counter()
-    _eager_loop(eng, logits_e, cache_e, tags_e, pos0, new_tokens)
+    _eager_loop(eng, decode, logits_e, cache_e, tags_e, pos_s, new_tokens)
     t_eager = time.perf_counter() - t0
 
     # -- parity on an identical write stream
-    pairs = _decode_pairs(eng, prompt, n_steps=new_tokens - 1)
+    pairs = _decode_pairs(eng, prompt, n_steps=new_tokens - 1, jits=jits)
     tags = _tag_cache(pairs[0][0])
-    write_jit = jax.jit(lambda k, o, n: eng._write_cache(k, o, n))
+    write_jit = jax.jit(lambda k, o, n: eng._write_cache(k, o, n, vectors))
     e_fused = e_eager = 0.0
     err_fused = err_eager = flips = 0
     for i, (old, new) in enumerate(pairs):
@@ -129,6 +159,99 @@ def compare_fused_vs_eager(arch: str = "qwen2.5-3b", new_tokens: int = 8):
         "ber_eager": err_eager / max(flips, 1),
         "errors_rel_err": (abs(err_fused - err_eager)
                            / max(err_eager, 1)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: mixed arrivals + lockstep bit-parity
+# ---------------------------------------------------------------------------
+
+def continuous_vs_sequential(arch: str = "qwen2.5-3b", n_requests: int = 16,
+                             capacity: int = 8, prompt_len: int = 10,
+                             new_tokens: int = 32, arrival_every: int = 1,
+                             reps: int = 3):
+    """Mixed-arrival scenario: a staggered request stream served by the
+    slot-pool scheduler vs. one monolithic ``generate()`` per request
+    (batch=1, arrival order — the no-continuous-batching server, itself
+    scan-resident so the comparison isolates *batching*, not dispatch).
+    Both sides are warmed once (the compile pass), then timed
+    best-of-``reps`` with the two paths INTERLEAVED, which cancels load
+    drift on noisy shared hosts. Reports decode throughput for both and
+    the continuous/sequential ratio — the batching win comes from decode
+    being weight-bound: a pool-wide step costs far less than ``capacity``
+    single-row steps (the column-scoped extent write keeps the modeled
+    write stream O(token), so it does not erode the batching win)."""
+    cfg = get_config(arch).reduced()
+    max_seq = prompt_len + new_tokens + 2
+    scfg = ServeConfig(max_seq=max_seq, max_new_tokens=new_tokens)
+    reqs = synthetic_requests(cfg, n_requests, prompt_len=prompt_len,
+                              new_tokens=new_tokens,
+                              arrival_every=arrival_every, seed=3)
+    total_tokens = sum(r.new_tokens for r in reqs)
+
+    # warm both paths: compiles admission shapes + every burst length the
+    # stream produces on the continuous side, prefill+burst on the other
+    eng_c = ServingEngine(cfg, scfg)
+    report = ContinuousScheduler(eng_c, capacity=capacity).run(reqs)
+    eng_s = ServingEngine(cfg, scfg)
+    eng_s.generate(reqs[0].prompt, max_new_tokens=reqs[0].new_tokens)
+
+    t_cont = t_seq = 1e9
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        report = ContinuousScheduler(eng_c, capacity=capacity).run(reqs)
+        t_cont = min(t_cont, time.perf_counter() - t0)
+        # sequential: batch=1 per request, back-to-back (arrival gaps
+        # ignored — the most favorable sequential timing)
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng_s.generate(r.prompt, max_new_tokens=r.new_tokens)
+        t_seq = min(t_seq, time.perf_counter() - t0)
+
+    return {
+        "arch": arch,
+        "requests": n_requests,
+        "capacity": capacity,
+        "arrival_every_steps": arrival_every,
+        "total_tokens": total_tokens,
+        "continuous_s": round(t_cont, 3),
+        "sequential_s": round(t_seq, 3),
+        "continuous_tok_per_s": round(total_tokens / max(t_cont, 1e-9), 1),
+        "sequential_tok_per_s": round(total_tokens / max(t_seq, 1e-9), 1),
+        "throughput_ratio_x": round(t_seq / max(t_cont, 1e-9), 2),
+        "bursts": report["bursts"],
+        "mean_latency_steps": sum(
+            r["latency_steps"] for r in report["requests"].values())
+        / n_requests,
+        "extent_table": report["extent_table"],
+    }
+
+
+def lockstep_parity(arch: str = "qwen2.5-3b", batch: int = 2,
+                    new_tokens: int = 6):
+    """Continuous scheduler with pool == batch, all requests admitted at
+    once, vs. the monolithic batch path — EXTENT stats must agree
+    bit-exactly under the same RNG key (flat-lane layout invariance)."""
+    cfg = get_config(arch).reduced()
+    scfg = ServeConfig(max_seq=32, max_new_tokens=new_tokens)
+    reqs = synthetic_requests(cfg, batch, prompt_len=10,
+                              new_tokens=new_tokens, arrival_every=0, seed=5)
+    batch_prompt = {k: jnp.concatenate([r.prompt[k] for r in reqs], axis=0)
+                    for k in reqs[0].prompt}
+
+    eng_m = ServingEngine(cfg, scfg)
+    _, rep_m = eng_m.generate(batch_prompt)
+    eng_c = ServingEngine(cfg, scfg)
+    rep_c = ContinuousScheduler(eng_c, capacity=batch).run(reqs)
+
+    keys = ("energy_pj", "bits_written", "bit_errors")
+    return {
+        "arch": arch,
+        "monolithic": {k: rep_m["total"][k] for k in keys},
+        "continuous": {k: rep_c["total"][k] for k in keys},
+        "bit_exact": all(rep_m["total"][k] == rep_c["total"][k]
+                         for k in keys),
+        "extent_table_in_report": rep_c["extent_table"],
     }
 
 
@@ -167,6 +290,8 @@ def run(archs=("qwen2.5-3b", "recurrentgemma-2b"), new_tokens: int = 8):
         / jnp.mean(jnp.abs(kv.astype(jnp.float32))))
     out["kv_quant_rel_err"] = rel
     out["fused_vs_eager"] = compare_fused_vs_eager(new_tokens=new_tokens)
+    out["continuous_vs_sequential"] = continuous_vs_sequential()
+    out["lockstep_parity"] = lockstep_parity()
     return out
 
 

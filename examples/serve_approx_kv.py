@@ -4,14 +4,18 @@
 
 Serves a reduced-config model with the production engine, comparing exact
 vs. approximate KV storage: token agreement, realized write-energy savings
-vs. the basic (non-approximate) STT-RAM cell, and the CMP skip rate.
+vs. the basic (non-approximate) STT-RAM cell, and the CMP skip rate —
+then replays the same traffic as a staggered arrival stream through the
+continuous-batching slot pool, with one request negotiating a HIGH quality
+floor through the EXTENT-table handshake (per-request energy/BER
+attribution in the serve report).
 
-The approximate write is fused into the jitted decode step (one compiled
-call per token, stats accumulated on device, synced once per generate).
-``--use-kernel`` routes it through the Pallas kernel instead of the
-pure-jnp lane reference — on CPU hosts the kernel executes through the
-Pallas interpreter (slow, correctness-mode); on TPU pair it with
-``--no-interpret``.
+The approximate write is fused into the jitted decode burst (one compiled
+``lax.scan`` call per decode span, stats accumulated on device, synced
+once per generate/scheduler event). ``--use-kernel`` routes it through the
+Pallas kernel instead of the pure-jnp lane reference — on CPU hosts the
+kernel executes through the Pallas interpreter (slow, correctness-mode);
+on TPU pair it with ``--no-interpret``.
 """
 import argparse
 
@@ -20,7 +24,9 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.energy_model import exact_baseline_energy_pj
-from repro.serve import ServeConfig, ServingEngine
+from repro.core.priority import Priority
+from repro.serve import (ContinuousScheduler, ServeConfig, ServingEngine,
+                         synthetic_requests)
 
 
 def main():
@@ -76,6 +82,33 @@ def main():
     for stream, s in report["streams"].items():
         print(f"  {stream:12s} E={s['energy_pj']/1e6:.3f} uJ "
               f"errors={s['bit_errors']}")
+
+    # ----- continuous batching: staggered arrivals through the slot pool,
+    # one application negotiating HIGH quality via the EXTENT table
+    print("\n-- continuous batching (slot pool, staggered arrivals) --")
+    eng_c = ServingEngine(cfg, ServeConfig(max_seq=max_seq,
+                                           max_new_tokens=args.new_tokens,
+                                           extent_enabled=True,
+                                           use_kernel=args.use_kernel,
+                                           interpret=not args.no_interpret))
+    reqs = synthetic_requests(
+        cfg, args.batch + 2, prompt_len=args.prompt_len,
+        new_tokens=args.new_tokens, arrival_every=max(2, args.new_tokens // 4),
+        app_ids=["chat", "legal", "chat"],
+        qualities=[None, Priority.HIGH, None])
+    sched = ContinuousScheduler(eng_c, capacity=args.batch)
+    rep = sched.run(reqs)
+    print(f"{len(rep['requests'])} requests, {rep['clock_steps']} steps, "
+          f"{rep['bursts']} compiled bursts, peak occupancy "
+          f"{rep['pool']['peak_occupancy']}/{rep['pool']['capacity']}")
+    for rid in sorted(rep["requests"]):
+        r = rep["requests"][rid]
+        print(f"  req {rid} app={str(r['app_id']):6s} q={r['quality']:5s} "
+              f"queued {r['queue_steps']:2d} latency {r['latency_steps']:3d} "
+              f"E={r['energy_pj']/1e3:7.1f} nJ BER={r['ber']:.2e}")
+    tbl = rep["extent_table"]
+    print(f"EXTENT table: {tbl['hits']} hits / {tbl['misses']} misses "
+          f"(hit rate {tbl['hit_rate']:.2f})")
 
 
 if __name__ == "__main__":

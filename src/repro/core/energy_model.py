@@ -50,6 +50,39 @@ def add_device_stats(acc: Dict[str, jax.Array],
     return {k: acc[k] + stats[k] for k in DEVICE_STAT_KEYS}
 
 
+#: per-slot attribution layout for the continuous-batching pool: one f32
+#: accumulator row per cache slot, so a request's share of the write-stream
+#: energy/flips/errors rides on device until the scheduler retires its slot.
+SLOT_STAT_KEYS = ("energy_pj", "flips", "errors")
+
+
+def zero_slot_stats(n_slots: int) -> Dict[str, jax.Array]:
+    """Fresh all-zero per-slot attribution accumulator ((n_slots,) f32)."""
+    return {k: jnp.zeros((n_slots,), jnp.float32) for k in SLOT_STAT_KEYS}
+
+
+def add_slot_stats(slot_acc: Dict[str, jax.Array],
+                   stats: Dict[str, jax.Array],
+                   active: jax.Array) -> Dict[str, jax.Array]:
+    """Attribute one write's device stats across the active slots (jit-safe).
+
+    The lane-packed write reduces stats globally per leaf, not per batch row,
+    so attribution splits each step's totals evenly over the slots that wrote
+    this step. For decode that split is exact in expectation: every active
+    slot stores one fresh KV entry per layer per step, so the approximate-bit
+    traffic per slot is identical; only the realized flip mix varies.
+    """
+    act = active.astype(jnp.float32)
+    share = act / jnp.maximum(jnp.sum(act), 1.0)
+    flips = (stats["flips01"] + stats["flips10"]).astype(jnp.float32)
+    return {
+        "energy_pj": slot_acc["energy_pj"] + share * stats["energy_pj"],
+        "flips": slot_acc["flips"] + share * flips,
+        "errors": slot_acc["errors"] + share * stats["errors"].astype(
+            jnp.float32),
+    }
+
+
 @dataclasses.dataclass
 class StepEnergyMeter:
     """Accumulates write energy per named stream over one step (host side)."""

@@ -80,6 +80,10 @@ class QualityController:
         default_factory=lambda: {
             "kv": Priority.MID,
             "kv_v": Priority.LOW,
+            # per-request serving hints: a miss imposes NO quality floor
+            # (LOW == "no constraint beyond the engine's static policy"),
+            # so unhinted traffic never perturbs the write plan.
+            "kv_request": Priority.LOW,
             "checkpoint_weights": Priority.EXACT,
             "checkpoint_moments": Priority.LOW,
             "activation": Priority.HIGH,
@@ -95,3 +99,17 @@ class QualityController:
             return self.table.lookup((stream, block))
         finally:
             self.table.default = prev_default
+
+    def resolve_request(self, block: Hashable, hint=None,
+                        stream: str = "kv_request") -> Priority:
+        """Admission-time handshake for one serving request.
+
+        A request carrying an explicit quality ``hint`` first tags its block
+        (the API ``priority_level`` command), then the write path resolves
+        through the table — so a later request from the same application
+        (same ``block``) inherits the cached quality as a table *hit* without
+        re-negotiating. Unhinted blocks resolve to the stream default.
+        """
+        if hint is not None:
+            self.tag(stream, block, hint)
+        return self.quality_for(stream, block)

@@ -1,12 +1,21 @@
 """Production serving launcher.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
-      --batch 4 --new-tokens 16 [--no-extent]
+Continuous batching over an arrival stream (the default):
 
-Runs the batched prefill+decode engine with EXTENT-approximate KV writes
-and prints the energy/accuracy report. ``--reduced`` for CPU hosts; on a
-pod the same engine runs under the production mesh with the serve_tp_only
-or serve_moe_2d residency strategies (see sharding/rules.py).
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+      --requests 6 --capacity 3 --arrival-every 2 --new-tokens 16 \
+      --quality chat=high [--no-extent] [--no-reduced]
+
+Monolithic one-batch mode (the pre-slot-pool engine path):
+
+  PYTHONPATH=src python -m repro.launch.serve --monolithic --batch 4
+
+``--reduced`` (on by default, ``--no-reduced`` to disable) shrinks the
+config for CPU hosts; on a pod the same engine runs under the production
+mesh with the serve_tp_only or serve_moe_2d residency strategies (see
+sharding/rules.py). ``--quality app=level`` tags an application block in
+the EXTENT table; requests cycling through that app inherit the level via
+the quality-controller handshake.
 """
 from __future__ import annotations
 
@@ -16,46 +25,107 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.serve import ServeConfig, ServingEngine
+from repro.core.priority import Priority
+from repro.serve import (ContinuousScheduler, ServeConfig, ServingEngine,
+                         synthetic_requests)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="monolithic-mode batch size")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--no-extent", action="store_true")
+    ap.add_argument("--monolithic", action="store_true",
+                    help="single fixed batch, no arrival stream")
+    # arrival-stream simulation
+    ap.add_argument("--requests", type=int, default=6,
+                    help="number of requests in the arrival stream")
+    ap.add_argument("--capacity", type=int, default=3,
+                    help="slot-pool capacity (concurrent requests)")
+    ap.add_argument("--arrival-every", type=int, default=2,
+                    help="decode steps between arrivals (0 = all at once)")
+    ap.add_argument("--apps", default="chat,summarize",
+                    help="comma-separated app ids cycled over requests "
+                         "('' = anonymous requests, no table traffic)")
+    ap.add_argument("--quality", action="append", default=[],
+                    metavar="APP=LEVEL",
+                    help="tag an app block (low/mid/high/exact); repeats")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    prompt = {"tokens": jax.random.randint(
-        jax.random.PRNGKey(0), (args.batch, args.prompt_len), 0,
-        cfg.vocab_size)}
-    if cfg.family == "vlm":
-        prompt["image_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(1),
-            (args.batch, cfg.num_image_tokens, cfg.vision_dim), jnp.float32)
-    if cfg.family == "audio":
-        prompt["frames"] = jax.random.normal(
-            jax.random.PRNGKey(1), (args.batch, 24, cfg.d_model), jnp.float32)
+
+    if args.monolithic:
+        prompt = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(0), (args.batch, args.prompt_len), 0,
+            cfg.vocab_size)}
+        if cfg.family == "vlm":
+            prompt["image_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(1),
+                (args.batch, cfg.num_image_tokens, cfg.vision_dim),
+                jnp.float32)
+        if cfg.family == "audio":
+            prompt["frames"] = jax.random.normal(
+                jax.random.PRNGKey(1), (args.batch, 24, cfg.d_model),
+                jnp.float32)
+        max_seq = args.prompt_len + args.new_tokens + (
+            cfg.num_image_tokens if cfg.family == "vlm" else 0)
+        eng = ServingEngine(cfg, ServeConfig(
+            max_seq=max_seq, max_new_tokens=args.new_tokens,
+            extent_enabled=not args.no_extent))
+        toks, report = eng.generate(prompt)
+        print(f"generated {toks.shape} tokens; first row: "
+              f"{[int(t) for t in toks[0][:8]]}...")
+        if not args.no_extent:
+            tot = report["total"]
+            print(f"KV write energy {tot['energy_pj']/1e6:.3f} uJ, "
+                  f"skip-rate {tot['write_skip_rate']:.3f}, "
+                  f"BER {tot['ber_realized']:.2e}")
+        return
+
+    # ----- continuous batching over a simulated arrival stream
     max_seq = args.prompt_len + args.new_tokens + (
         cfg.num_image_tokens if cfg.family == "vlm" else 0)
-
     eng = ServingEngine(cfg, ServeConfig(
         max_seq=max_seq, max_new_tokens=args.new_tokens,
         extent_enabled=not args.no_extent))
-    toks, report = eng.generate(prompt)
-    print(f"generated {toks.shape} tokens; first row: "
-          f"{[int(t) for t in toks[0][:8]]}...")
-    tot = report["total"]
+    apps = [a for a in args.apps.split(",") if a] or [None]
+    for spec in args.quality:
+        app, _, level = spec.partition("=")
+        eng.controller.tag("kv_request", app, Priority.coerce(level))
+    reqs = synthetic_requests(
+        cfg, args.requests, prompt_len=args.prompt_len,
+        new_tokens=args.new_tokens, arrival_every=args.arrival_every,
+        app_ids=apps)
+    sch = ContinuousScheduler(eng, capacity=args.capacity)
+    report = sch.run(reqs)
+
+    print(f"served {len(report['requests'])} requests in "
+          f"{report['clock_steps']} steps "
+          f"({report['bursts']} compiled decode bursts, pool "
+          f"{report['pool']['capacity']} slots, peak occupancy "
+          f"{report['pool']['peak_occupancy']})")
+    for rid in sorted(report["requests"]):
+        r = report["requests"][rid]
+        print(f"  req {rid} app={str(r['app_id']):10s} q={r['quality']:5s} "
+              f"arrived {r['arrival_step']:3d} queued {r['queue_steps']:2d} "
+              f"latency {r['latency_steps']:3d} tokens {r['n_tokens']:3d} "
+              f"E={r['energy_pj']/1e3:8.1f} nJ BER={r['ber']:.2e}")
     if not args.no_extent:
+        tot = report["total"]
+        tbl = report["extent_table"]
         print(f"KV write energy {tot['energy_pj']/1e6:.3f} uJ, "
               f"skip-rate {tot['write_skip_rate']:.3f}, "
               f"BER {tot['ber_realized']:.2e}")
+        print(f"EXTENT table: {tbl['hits']} hits / {tbl['misses']} misses "
+              f"(hit rate {tbl['hit_rate']:.2f}), "
+              f"{tbl['evictions']} evictions")
 
 
 if __name__ == "__main__":

@@ -149,17 +149,32 @@ def init_cache(n_layers: int, batch: int, capacity: int, kv_heads: int,
 
 def ring_positions(capacity: int, pos: jax.Array) -> jax.Array:
     """Absolute position stored in each slot of a capacity-C ring buffer when
-    the most recent write was at `pos`. Negative -> slot not yet written."""
+    the most recent write was at `pos`. Negative -> slot not yet written.
+    pos may be a scalar -> (C,), or per-row (B,) -> (B, C)."""
     i = jnp.arange(capacity)
-    return i + capacity * ((pos - i) // capacity)
+    p = pos[..., None] if pos.ndim else pos
+    return i + capacity * ((p - i) // capacity)
 
 
 def cache_update(cache_k, cache_v, k_new, v_new, pos: jax.Array):
-    """Write one token (B,1,K,h) at ring slot pos % C. Layer dim excluded."""
+    """Write one token (B,1,K,h) at ring slot pos % C. Layer dim excluded.
+
+    pos: scalar (whole batch at one position — monolithic decode) or (B,)
+    (per-row positions — continuous-batching slot pool). The vector path
+    writes via a one-hot select, so the stored bits are identical to the
+    dynamic-slice path when all rows share a position.
+    """
     C = cache_k.shape[1]
     slot = pos % C
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    if pos.ndim == 0:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot,
+                                                      axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot,
+                                                      axis=1)
+        return cache_k, cache_v
+    hit = (slot[:, None] == jnp.arange(C)[None, :])[..., None, None]  # (B,C,1,1)
+    cache_k = jnp.where(hit, k_new, cache_k)
+    cache_v = jnp.where(hit, v_new, cache_v)
     return cache_k, cache_v
 
 
@@ -167,17 +182,19 @@ def decode_attention(
     q: jax.Array,          # (B,1,H,h) — rope already applied
     cache_k: jax.Array,    # (B,C,K,h)
     cache_v: jax.Array,
-    pos: jax.Array,        # scalar: position of the token being decoded
+    pos: jax.Array,        # scalar or (B,): position of the token decoded
     *,
     window: int,
     softcap_val: float,
     dtype=jnp.bfloat16,
 ) -> jax.Array:
     C = cache_k.shape[1]
-    kp = ring_positions(C, pos)  # (C,)
-    d = pos - kp
+    kp = ring_positions(C, pos)           # (C,) or (B, C)
+    d = pos[..., None] - kp if pos.ndim else pos - kp
     mask = (kp >= 0) & (d >= 0) & (d < window)
-    mask = jnp.broadcast_to(mask[None, None, :], (q.shape[0], q.shape[1], C))
+    if mask.ndim == 1:
+        mask = mask[None, :]
+    mask = jnp.broadcast_to(mask[:, None, :], (q.shape[0], q.shape[1], C))
     return _sdpa_block(q, cache_k, cache_v, mask, q.shape[-1] ** -0.5,
                        softcap_val, dtype)
 

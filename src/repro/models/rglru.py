@@ -277,7 +277,8 @@ def decode_step(params, token, cache, pos, cfg: ModelConfig, max_seq: int,
     dtype = jnp.dtype(cfg.compute_dtype)
     B = token.shape[0]
     h = embed_tokens(params["embed"], token[:, None], cfg, dtype)
-    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    positions = (pos[:, None] if pos.ndim
+                 else jnp.broadcast_to(pos[None, None], (B, 1)))
     h, new_cache = _run_serving(params, h, cfg, positions, cache, pos, dtype,
                                 constrain)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)

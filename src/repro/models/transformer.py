@@ -215,13 +215,15 @@ def decode_step(
     *, constrain=lambda t, spec: t,
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One decode step. token: (B,) int32; pos: scalar int32 (position of the
-    new token). Returns (logits (B,V), updated caches)."""
+    new token) or (B,) int32 for per-row positions (continuous batching).
+    Returns (logits (B,V), updated caches)."""
     dtype = jnp.dtype(cfg.compute_dtype)
     B = token.shape[0]
     h = embed_tokens(params["embed"], token[:, None], cfg, dtype)  # (B,1,D)
     n_g, plen = _groups(cfg)
     spec = cache_spec(cfg, max_seq)
-    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    positions = (pos[:, None] if pos.ndim
+                 else jnp.broadcast_to(pos[None, None], (B, 1)))
 
     def group_body(h, xs):
         gp, cg = xs

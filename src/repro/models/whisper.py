@@ -225,10 +225,12 @@ def decode_step(params, token, cache, pos, cfg: ModelConfig, max_seq: int,
     import math as _m
     freqs = jnp.exp(-_m.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
                     / max(1, half - 1))
-    ang = pos.astype(jnp.float32) * freqs
-    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+    ang = pos.astype(jnp.float32)[..., None] * freqs  # (half,) or (B, half)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    pe = pe[:, None, :] if pos.ndim else pe[None, None, :]
     h = emb + pe.astype(dtype)
-    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    positions = (pos[:, None] if pos.ndim
+                 else jnp.broadcast_to(pos[None, None], (B, 1)))
 
     def body(h, xs):
         lp, c = xs

@@ -1,1 +1,4 @@
 from repro.serve.engine import ServeConfig, ServingEngine  # noqa: F401
+from repro.serve.scheduler import (ContinuousScheduler, Request,  # noqa: F401
+                                   synthetic_requests)
+from repro.serve.slots import SlotPool  # noqa: F401

@@ -16,17 +16,35 @@ Priority policy: K at MID (errors perturb attention patterns), V at LOW
 (errors only perturb the payload), recurrent/conv states EXACT (errors
 persist in the recurrence — DESIGN.md §4).
 
-The write is **jit-resident**: one compiled step fuses
-``decode -> cache diff-write -> sampling -> stats accumulation``, with the
-diff-write routed through the lane-packed path in
+The write is **jit-resident and scan-resident**: a decode *burst* of n
+tokens is ONE compiled call — ``jax.lax.scan`` over the fused
+``decode -> cache diff-write -> sampling -> stats accumulation`` step —
+with the diff-write routed through the lane-packed path in
 ``repro.kernels.extent_write`` (``ServeConfig.use_kernel`` selects the
 Pallas kernel vs. the pure-jnp lane reference; ``interpret`` runs the
 kernel through the Pallas interpreter on CPU hosts). Per-write stats are
-pytree *outputs* of the compiled step, accumulated into 0-d device arrays
+pytree *outputs* of the compiled burst, accumulated into 0-d device arrays
 and synced to the ``StepEnergyMeter`` exactly once per ``generate()`` —
-the token loop performs zero device->host transfers. The per-leaf driver
-vectors (priority -> thresholds/energies) are resolved once at engine
-construction, so per-tensor priorities never retrace the step.
+the token loop performs zero device->host transfers.
+
+Continuous batching rides on three extensions, all engineered so that the
+lockstep case (every slot admitted together, pool shape == batch shape)
+stays **bit-identical** to the monolithic path:
+
+  * per-slot ``pos`` vectors and an ``active`` mask in the burst — finished
+    or empty slots carry their cache rows through unchanged, so the CMP
+    diff write skips them at zero energy (``jnp.where`` with an all-true
+    mask is a bit-exact identity);
+  * per-leaf driver vectors are *operands* of the compiled burst, not
+    closed-over constants: the quality floor negotiated through the
+    ``ExtentTable`` can change between bursts without retracing (the
+    extent-write counter RNG hashes flat lane indices, so the write itself
+    is layout-invariant — see tests/test_extent_parity.py);
+  * admission prefills diff against the *current* pool rows (the freed
+    slot's stale bits), which is exactly the long-lived shared-cache
+    redundant-write-elimination the paper targets; ``generate()`` diffs
+    against zeros, and extracting zero rows from a fresh pool reproduces
+    it bit-for-bit.
 """
 from __future__ import annotations
 
@@ -39,11 +57,16 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.approx_store import approx_write_lanes, approx_write_with_stats
 from repro.core.energy_model import (StepEnergyMeter, add_device_stats,
-                                     zero_device_stats)
+                                     add_slot_stats, zero_device_stats,
+                                     zero_slot_stats)
 from repro.core.extent_table import QualityController
 from repro.core.priority import Priority, bits_of, kv_cache_policy
 from repro.kernels.extent_write import level_vectors
 from repro.models import ModelApi, get_model
+
+#: every family's cache leaves carry the request/slot dimension at axis 1
+#: (see ModelApi.cache_axes: ("layers", "batch", ...)).
+BATCH_AXIS = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +105,23 @@ def _has_lane_packing(leaf) -> bool:
     return jnp.dtype(leaf.dtype).itemsize in (2, 4)
 
 
+def _row_mask(active: jax.Array, ndim: int) -> jax.Array:
+    """(B,) bool -> broadcastable mask over a cache leaf with the slot
+    dimension at BATCH_AXIS."""
+    shape = [1] * ndim
+    shape[BATCH_AXIS] = active.shape[0]
+    return active.reshape(shape)
+
+
+def mask_rows(new_tree: Any, old_tree: Any, active: jax.Array) -> Any:
+    """Per-slot select: active rows take the new value, inactive rows keep
+    the old — the decode-burst guard that makes finished/empty slots free
+    under CMP (their rows never change, so the diff write skips them)."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(_row_mask(active, n.ndim), n, o),
+        new_tree, old_tree)
+
+
 def eager_extent_cache_write(key, old_cache, new_cache, tags):
     """Eager oracle for the fused cache write (the seed engine's data path).
 
@@ -110,7 +150,13 @@ def eager_extent_cache_write(key, old_cache, new_cache, tags):
 
 
 class ServingEngine:
-    """Batched autoregressive serving over any registered architecture."""
+    """Batched autoregressive serving over any registered architecture.
+
+    One engine instance owns the compiled executables (fused prefill /
+    admission / decode burst); both the monolithic ``generate()`` path and
+    the continuous-batching scheduler (serve/scheduler.py) drive the SAME
+    burst function, which is what makes their write streams bit-comparable.
+    """
 
     def __init__(self, cfg: ModelConfig, serve_cfg: ServeConfig,
                  params: Optional[Any] = None):
@@ -121,16 +167,12 @@ class ServingEngine:
         self.params = params if params is not None else self.api.init(key)
         self.meter = StepEnergyMeter()
         self.controller = QualityController()
-        self._decode_jit = jax.jit(
-            lambda p, tok, cache, pos: self.api.decode_step(
-                p, tok, cache, pos, self.scfg.max_seq))
-        self._prefill_jit = jax.jit(
-            lambda p, batch: self.api.prefill(p, batch, self.scfg.max_seq))
         # per-leaf write plan: cache *structure* (not shapes) fixes which
         # leaves are approximate and at which driver level, so it is
-        # resolved once here from an abstract cache and closed over by the
-        # fused step — priorities become compile-time constants, never
-        # retrace triggers.
+        # resolved once here from an abstract cache. The per-level driver
+        # vectors (thresholds/energies) become *operands* of the compiled
+        # steps — see vectors_for_floor — so a per-request quality floor
+        # swaps levels between bursts without ever retracing.
         cache_sds = jax.eval_shape(lambda: self.api.init_cache(
             1, self.scfg.max_seq))
         tags = _tag_cache(cache_sds)
@@ -140,22 +182,67 @@ class ServingEngine:
         self._leaf_levels: List[Optional[Priority]] = [
             t if _is_approx_leaf(l, t) else None
             for l, t in zip(flat_sds, flat_tags)]
-        # priority -> (thr01, thr10, e01, e10) driver vectors, resolved
-        # here (eagerly, outside any trace) and passed into the fused step
-        # as plain operands. None -> no lane packing for that float width;
-        # the fused step degrades to the bit-unpacked write for that leaf
-        # (still jit-resident, just without the 16-32x traffic saving).
-        self._leaf_vectors = [
-            level_vectors(l.dtype, lvl)
-            if lvl is not None and _has_lane_packing(l) else None
-            for l, lvl in zip(flat_sds, self._leaf_levels)]
-        self._step_fused = jax.jit(self._make_fused_step())
-        self._prefill_fused = jax.jit(self._make_fused_prefill())
+        # decode writes exactly one ring column per KV leaf per step, so
+        # the decode-time diff-write is *column-scoped*: leaves with a
+        # "kv_seq" axis gather the written column (per-slot pos % C), run
+        # the lane write on it, and scatter back — O(token bits) of RNG/
+        # threshold work instead of O(cache bits) per step. Leaves without
+        # a sequence axis (recurrent states — EXACT-pinned anyway) keep
+        # the full-tree diff. Accounting is unchanged: everything outside
+        # the column is bit-identical, i.e. zero flips/energy under CMP.
+        flat_axes = treedef.flatten_up_to(self.api.cache_axes())
+        self._leaf_seq_axis: List[Optional[int]] = [
+            ax.index("kv_seq")
+            if isinstance(ax, tuple) and "kv_seq" in ax else None
+            for ax in flat_axes]
+        # floor -> per-leaf (thr01, thr10, e01, e10) vector tuples, resolved
+        # eagerly (outside any trace; level_vectors is lru_cached driver
+        # calibration). Composition rule: effective level = max(static
+        # policy, requested floor) — hints RAISE fidelity above the KV
+        # policy, never lower it, and EXACT-pinned leaves (recurrent
+        # states) are not in the plan at all. None -> no lane packing for
+        # that float width; the fused write degrades to the bit-unpacked
+        # path at the static level (still jit-resident).
+        self._floor_vectors: Dict[Priority, Tuple] = {}
+        for floor in Priority:
+            self._floor_vectors[floor] = tuple(
+                level_vectors(l.dtype, max(lvl, floor))
+                if lvl is not None and _has_lane_packing(l) else None
+                for l, lvl in zip(flat_sds, self._leaf_levels))
+        self._prefill_fused = jax.jit(self._make_fused_prefill(
+            diff_old_rows=False))
+        self._admit_fused = jax.jit(self._make_fused_prefill(
+            diff_old_rows=True))
+        self._burst = jax.jit(self._make_burst(), static_argnames=("n",))
 
-    # ---------------------------------------------------------- fused steps
-    def _write_cache(self, key, old_cache, new_cache):
-        """Jit-resident diff-write of the whole cache tree; returns
-        (stored_cache, device stats dict). Traced only."""
+    # ------------------------------------------------------------ write plan
+    def vectors_for_floor(self, floor: Priority = Priority.LOW) -> Tuple:
+        """Per-leaf driver-vector operands for one quality floor (see
+        __init__). LOW is the identity floor: the static KV policy alone."""
+        return self._floor_vectors[Priority.coerce(floor)]
+
+    def _write_one_leaf(self, key, i: int, old, new, lvl, vectors):
+        """One leaf through the approximate driver: the lane-packed path
+        when driver vectors exist, else the bit-unpacked write at the
+        static level (f64/f8 — no lane packing), jit-resident either way.
+        The single place the per-leaf write protocol lives — both the
+        full-tree and the column-scoped diff writes call it."""
+        if vectors[i] is not None:
+            return approx_write_lanes(
+                jax.random.fold_in(key, i), old, new, lvl,
+                use_kernel=self.scfg.use_kernel,
+                interpret=self.scfg.interpret,
+                vectors=vectors[i])
+        s, w = approx_write_with_stats(
+            jax.random.fold_in(key, i), old, new, lvl)
+        return s, {"energy_pj": w.energy_pj, "flips01": w.flips_0to1,
+                   "flips10": w.flips_1to0, "errors": w.bit_errors}
+
+    def _write_cache(self, key, old_cache, new_cache, vectors):
+        """Jit-resident diff-write of a cache tree (full pool or an
+        admission group's rows); returns (stored_cache, device stats dict).
+        Traced only. ``vectors`` is a per-flat-leaf tuple of driver-vector
+        operands (or None), normally from ``vectors_for_floor``."""
         flat_old, treedef = jax.tree.flatten(old_cache)
         flat_new = treedef.flatten_up_to(new_cache)
         stored = []
@@ -165,47 +252,114 @@ class ServingEngine:
             if lvl is None:
                 stored.append(n)  # EXACT fast path (recurrent states, ints)
                 continue
-            if self._leaf_vectors[i] is not None:
-                s, st = approx_write_lanes(
-                    jax.random.fold_in(key, i), o, n, lvl,
-                    use_kernel=self.scfg.use_kernel,
-                    interpret=self.scfg.interpret,
-                    vectors=self._leaf_vectors[i])
-            else:
-                # float widths without lane packing (f64/f8): bit-unpacked
-                # write, jit-resident all the same
-                s, w = approx_write_with_stats(
-                    jax.random.fold_in(key, i), o, n, lvl)
-                st = {"energy_pj": w.energy_pj, "flips01": w.flips_0to1,
-                      "flips10": w.flips_1to0, "errors": w.bit_errors}
+            s, st = self._write_one_leaf(key, i, o, n, lvl, vectors)
             stored.append(s)
             acc = add_device_stats(acc, st)
         return treedef.unflatten(stored), acc
 
-    def _make_fused_step(self):
-        def step(params, tok, cache, pos, key, acc):
-            key, k_write, k_sample = jax.random.split(key, 3)
-            logits, new_cache = self.api.decode_step(
-                params, tok, cache, pos, self.scfg.max_seq)
-            if self.scfg.extent_enabled:
-                new_cache, st = self._write_cache(k_write, cache, new_cache)
+    def _write_cache_decode(self, key, old_cache, new_cache, pos, vectors):
+        """Column-scoped decode diff-write (see __init__): KV leaves write
+        only the ring column at ``pos % C`` (per slot), other approximate
+        leaves fall back to the full diff. Flip/energy stats are identical
+        to ``_write_cache`` — the rest of the cache is bit-unchanged after
+        a decode step, so CMP contributes exactly zero there — but the
+        per-step simulation cost drops from O(cache) to O(token) lane
+        work. Traced only; ``pos`` is the (B,) position vector."""
+        flat_old, treedef = jax.tree.flatten(old_cache)
+        flat_new = treedef.flatten_up_to(new_cache)
+        stored = []
+        acc = zero_device_stats()
+        for i, (o, n, lvl) in enumerate(zip(flat_old, flat_new,
+                                            self._leaf_levels)):
+            if lvl is None:
+                stored.append(n)
+                continue
+            ax = self._leaf_seq_axis[i]
+            if ax is None or vectors[i] is None:
+                s, st = self._write_one_leaf(key, i, o, n, lvl, vectors)
+                stored.append(s)
                 acc = add_device_stats(acc, st)
-            tok2 = self._sample(k_sample, logits)
-            return tok2, new_cache, pos + 1, key, acc
-        return step
+                continue
+            C = o.shape[ax]
+            ishape = [1] * o.ndim
+            ishape[BATCH_AXIS] = pos.shape[0]
+            idx = (pos % C).reshape(ishape)
+            gshape = o.shape[:ax] + (1,) + o.shape[ax + 1:]
+            idx_g = jnp.broadcast_to(idx, gshape)
+            o_col = jnp.take_along_axis(o, idx_g, axis=ax)
+            n_col = jnp.take_along_axis(n, idx_g, axis=ax)
+            s_col, st = self._write_one_leaf(key, i, o_col, n_col, lvl,
+                                             vectors)
+            hit = jax.lax.broadcasted_iota(jnp.int32, o.shape, ax) == idx
+            stored.append(jnp.where(hit, s_col, n))
+            acc = add_device_stats(acc, st)
+        return treedef.unflatten(stored), acc
 
-    def _make_fused_prefill(self):
-        def prefill(params, batch, key):
+    # ---------------------------------------------------------- fused steps
+    def _make_fused_prefill(self, diff_old_rows: bool):
+        """Fused prefill -> extent write -> first-token sample.
+
+        ``diff_old_rows=False`` (monolithic generate): the write diffs
+        against zeros — a cold cache. ``diff_old_rows=True`` (slot-pool
+        admission): the caller passes the pool's current rows for the
+        allocated slots, so the write pays only the bits that differ from
+        the evicted request's stale data — the long-lived-cache
+        redundant-write elimination the slot pool exists for.
+        """
+        def prefill(params, batch, old_rows, key, vectors):
             key, k_write, k_sample = jax.random.split(key, 3)
             logits, cache = self.api.prefill(params, batch,
                                              self.scfg.max_seq)
             acc = zero_device_stats()
             if self.scfg.extent_enabled:
-                zero = jax.tree.map(jnp.zeros_like, cache)
-                cache, acc = self._write_cache(k_write, zero, cache)
+                old = (old_rows if diff_old_rows
+                       else jax.tree.map(jnp.zeros_like, cache))
+                cache, acc = self._write_cache(k_write, old, cache, vectors)
             tok = self._sample(k_sample, logits)
             return tok, cache, key, acc
-        return prefill
+
+        if diff_old_rows:
+            return prefill
+        return lambda params, batch, key, vectors: prefill(
+            params, batch, None, key, vectors)
+
+    def _make_burst(self):
+        """A decode burst: ``n`` fused steps as ONE ``lax.scan`` call.
+
+        Carries (token, cache, per-slot pos, RNG key, global stat
+        accumulator, per-slot attribution accumulator); ``active`` is a
+        (B,) bool operand constant across the burst (the scheduler sizes
+        bursts so no slot completes mid-scan). Inactive rows keep their
+        cache bits, position and token — under an all-true mask every
+        guard is a bit-exact identity, so ``generate()`` and the lockstep
+        scheduler hit literally the same compiled computation.
+        """
+        def burst(params, tok, cache, pos, key, acc, slot_acc, active,
+                  vectors, *, n):
+            act_i = active.astype(jnp.int32)
+
+            def body(carry, _):
+                tok, cache, pos, key, acc, slot_acc = carry
+                key, k_write, k_sample = jax.random.split(key, 3)
+                logits, new_cache = self.api.decode_step(
+                    params, tok, cache, pos, self.scfg.max_seq)
+                new_cache = mask_rows(new_cache, cache, active)
+                if self.scfg.extent_enabled:
+                    new_cache, st = self._write_cache_decode(
+                        k_write, cache, new_cache, pos, vectors)
+                    acc = add_device_stats(acc, st)
+                    slot_acc = add_slot_stats(slot_acc, st, active)
+                tok2 = self._sample(k_sample, logits)
+                tok2 = jnp.where(active, tok2, tok)
+                return (tok2, new_cache, pos + act_i, key, acc,
+                        slot_acc), tok2
+
+            carry = (tok, cache, pos, key, acc, slot_acc)
+            (tok, cache, pos, key, acc, slot_acc), toks = jax.lax.scan(
+                body, carry, None, length=n)
+            return tok, cache, pos, key, acc, slot_acc, toks
+
+        return burst
 
     def _approx_cache_bits(self, cache) -> int:
         """Total bits of the approximate (non-EXACT floating) cache leaves —
@@ -215,6 +369,21 @@ class ServingEngine:
                    for l, lvl in zip(flat, self._leaf_levels)
                    if lvl is not None)
 
+    def decode_write_bits(self, cache) -> int:
+        """Approximate bits one decode step actually addresses: the written
+        ring column per KV leaf (the column-scoped write's traffic), plus
+        whole leaves for approximate leaves without a sequence axis. The
+        ``bits_total`` denominator for decode-stream skip rates."""
+        flat = jax.tree.leaves(cache)
+        total = 0
+        for l, lvl, ax in zip(flat, self._leaf_levels,
+                              self._leaf_seq_axis):
+            if lvl is None:
+                continue
+            sz = l.size if ax is None else l.size // l.shape[ax]
+            total += sz * bits_of(l.dtype)
+        return total
+
     # ------------------------------------------------------------- sampling
     def _sample(self, key, logits: jax.Array) -> jax.Array:
         if self.scfg.greedy:
@@ -223,47 +392,59 @@ class ServingEngine:
             key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
 
     # ------------------------------------------------------------ generation
+    def prompt_len(self, batch: Dict[str, jax.Array]) -> int:
+        """Decoder position of the first generated token for a prompt."""
+        return batch["tokens"].shape[1] + (
+            self.cfg.num_image_tokens if self.cfg.family == "vlm" else 0)
+
     def generate(self, batch: Dict[str, jax.Array],
                  max_new_tokens: Optional[int] = None, *,
                  sync_stats: bool = True
                  ) -> Tuple[jax.Array, Dict[str, Any]]:
-        """Prefill `batch` then decode greedily. Returns (tokens (B, T_new),
+        """Prefill `batch` then decode. Returns (tokens (B, T_new),
         report{energy, errors, tokens/s-shape stats}).
 
-        The token loop issues exactly one compiled call per step and keeps
-        every carried value (token, cache, position, RNG key, stat
-        accumulator) on device; the accumulated stats cross to the host
-        once, after the last token. With ``sync_stats=False`` even that
-        transfer is skipped and the raw device accumulators are returned
-        under ``report["device_stats"]`` (used by the no-transfer test and
-        by callers batching many generates before accounting).
+        The decode loop is ONE compiled call: a scan-resident burst of
+        ``mnt - 1`` fused steps, every carried value (token, cache,
+        positions, RNG key, stat accumulators) on device; the accumulated
+        stats cross to the host once, after the last token. With
+        ``sync_stats=False`` even that transfer is skipped and the raw
+        device accumulators are returned under ``report["device_stats"]``
+        (used by the no-transfer test and by callers batching many
+        generates before accounting).
         """
         mnt = max_new_tokens or self.scfg.max_new_tokens
         key = jax.random.PRNGKey(self.scfg.seed + 1)
-        prompt_len = batch["tokens"].shape[1] + (
-            self.cfg.num_image_tokens if self.cfg.family == "vlm" else 0)
+        B = batch["tokens"].shape[0]
+        vectors = self.vectors_for_floor(Priority.LOW)
 
         tok, cache, key, pre_acc = self._prefill_fused(self.params, batch,
-                                                       key)
-        outs: List[jax.Array] = [tok]
-        pos = jnp.asarray(prompt_len, jnp.int32)
+                                                       key, vectors)
+        pos = jnp.full((B,), self.prompt_len(batch), jnp.int32)
+        active = jnp.ones((B,), bool)
         acc = zero_device_stats()
-        for _ in range(mnt - 1):
-            tok, cache, pos, key, acc = self._step_fused(
-                self.params, tok, cache, pos, key, acc)
-            outs.append(tok)
-        tokens = jnp.stack(outs, axis=1)
+        slot_acc = zero_slot_stats(B)
+        if mnt > 1:
+            _, cache, pos, key, acc, slot_acc, toks = self._burst(
+                self.params, tok, cache, pos, key, acc, slot_acc, active,
+                vectors, n=mnt - 1)
+            tokens = jnp.concatenate([tok[:, None],
+                                      jnp.moveaxis(toks, 0, 1)], axis=1)
+        else:
+            tokens = tok[:, None]
 
-        step_bits = self._approx_cache_bits(cache)
+        prefill_bits = self._approx_cache_bits(cache)
+        step_bits = self.decode_write_bits(cache)
         if not sync_stats:
             return tokens, {"device_stats": {"kv_prefill": pre_acc,
                                              "kv_decode": acc},
-                            "bits_total": {"kv_prefill": step_bits,
+                            "slot_stats": slot_acc,
+                            "bits_total": {"kv_prefill": prefill_bits,
                                            "kv_decode": (mnt - 1) * step_bits}}
         if self.scfg.extent_enabled:
             pre_host, dec_host = jax.device_get((pre_acc, acc))
             self.meter.add_stream("kv_prefill", pre_host,
-                                  bits_total=step_bits)
+                                  bits_total=prefill_bits)
             self.meter.add_stream("kv_decode", dec_host,
                                   bits_total=(mnt - 1) * step_bits)
         return tokens, self.meter.summary()

@@ -1,0 +1,155 @@
+"""Slot-pool KV cache: a fixed-capacity pool of per-request cache rows.
+
+The pool owns ONE device-resident cache tree whose slot (batch) dimension is
+the pool capacity. Requests are admitted into free slots — new prefills land
+in rows other slots are still decoding through — and release their slot on
+completion. The free-list always hands out the lowest slot ids, so a group
+of requests admitted together occupies a contiguous prefix: admitting the
+whole pool at once reproduces the monolithic batch layout exactly, which is
+what the bit-parity contract with ``ServingEngine.generate`` rests on (the
+extent-write RNG hashes flat lane indices, so identical pool/batch shapes
+mean identical RNG lanes).
+
+Alongside the cache tree the pool carries the per-slot decode state the
+scan-resident burst needs — current token, position, and the per-slot
+energy/flip/error attribution accumulators — all on device between
+scheduler events. Slot *metadata* (which request occupies a slot, how many
+tokens it still owes) is host-side bookkeeping: admission and completion
+times are fully host-predictable, so the scheduler never reads device state
+to make a scheduling decision.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.energy_model import zero_slot_stats
+from repro.serve.engine import BATCH_AXIS
+
+
+@jax.jit
+def _extract_rows(tree: Any, idx: jax.Array) -> Any:
+    """Gather slot rows ``idx`` from every leaf along BATCH_AXIS."""
+    return jax.tree.map(lambda a: jnp.take(a, idx, axis=BATCH_AXIS), tree)
+
+
+@jax.jit
+def _admission_update(cache: Any, tok: jax.Array, pos: jax.Array,
+                      slot_acc: Dict[str, jax.Array],
+                      acc_prefill: Dict[str, jax.Array],
+                      rows: Any, tok_new: jax.Array, pos_new: jax.Array,
+                      idx: jax.Array, acc: Dict[str, jax.Array]):
+    """ALL device-side admission bookkeeping as ONE compiled call: insert
+    the stored rows, install first token + position, reset the admitted
+    slots' attribution ledgers to their (even) share of the admission
+    write, and fold the write into the running prefill-stream accumulator.
+    Eager ``.at[].set`` dispatches here used to dominate the scheduler's
+    event cost — keep any new per-admission device math inside this jit."""
+    cache = jax.tree.map(
+        lambda a, r: jnp.moveaxis(
+            jnp.moveaxis(a, BATCH_AXIS, 0).at[idx].set(
+                jnp.moveaxis(r, BATCH_AXIS, 0)), 0, BATCH_AXIS),
+        cache, rows)
+    tok = tok.at[idx].set(tok_new)
+    pos = pos.at[idx].set(pos_new)
+    admitted = jnp.zeros(tok.shape, bool).at[idx].set(True)
+    m = float(idx.shape[0])
+    share = {"energy_pj": acc["energy_pj"] / m,
+             "flips": (acc["flips01"] + acc["flips10"]).astype(
+                 jnp.float32) / m,
+             "errors": acc["errors"].astype(jnp.float32) / m}
+    slot_acc = {k: jnp.where(admitted, share[k], v)
+                for k, v in slot_acc.items()}
+    acc_prefill = {k: acc_prefill[k] + acc[k] for k in acc_prefill}
+    return cache, tok, pos, slot_acc, acc_prefill
+
+
+class SlotPool:
+    """Fixed-capacity pool of cache rows with free-list admission."""
+
+    def __init__(self, api, capacity: int, max_seq: int):
+        self.capacity = capacity
+        self.cache = api.init_cache(capacity, max_seq)
+        self.tok = jnp.zeros((capacity,), jnp.int32)
+        self.pos = jnp.zeros((capacity,), jnp.int32)
+        self.slot_acc = zero_slot_stats(capacity)
+        #: host metadata: the occupying request (scheduler-defined object)
+        self.slot_req: List[Optional[Any]] = [None] * capacity
+        self._free: List[int] = list(range(capacity))
+        heapq.heapify(self._free)
+        # occupancy telemetry for the serve report
+        self.admissions = 0
+        self.completions = 0
+        self.peak_occupancy = 0
+
+    # -------------------------------------------------------------- free list
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def occupied(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def busy(self) -> bool:
+        return len(self._free) < self.capacity
+
+    def alloc(self, n: int) -> List[int]:
+        """Claim the n lowest free slot ids (ascending — see module doc)."""
+        assert n <= len(self._free), (n, len(self._free))
+        ids = [heapq.heappop(self._free) for _ in range(n)]
+        return ids
+
+    def release(self, slot_ids: Sequence[int]) -> None:
+        """Return slots to the free list — pure host bookkeeping (the
+        attribution ledger is reset at the NEXT admission, inside the
+        single jitted admission update; a freed slot's stale ledger row is
+        never read). Cache rows keep their stale bits on purpose: the next
+        admission diffs against them (redundant-write elimination over a
+        long-lived shared cache)."""
+        for i in slot_ids:
+            assert self.slot_req[i] is not None, i
+            self.slot_req[i] = None
+            heapq.heappush(self._free, i)
+        self.completions += len(slot_ids)
+
+    # ------------------------------------------------------------ device rows
+    def extract_rows(self, slot_ids: Sequence[int]) -> Any:
+        """Current cache rows for ``slot_ids`` (the admission write's
+        ``old``: a freed slot's stale data, or zeros on a cold pool)."""
+        return _extract_rows(self.cache, jnp.asarray(list(slot_ids),
+                                                     jnp.int32))
+
+    def admit(self, slot_ids: Sequence[int], requests: Sequence[Any],
+              stored_rows: Any, first_tok: jax.Array,
+              pos0: Sequence[int], acc: Dict[str, jax.Array],
+              acc_prefill: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Install an admission group: stored (post-extent-write) cache
+        rows, first sampled token, the decode position of each slot, and
+        the group's write stats (per-slot attribution + prefill stream) —
+        one compiled call for all of it. Returns the updated prefill
+        accumulator."""
+        idx = jnp.asarray(list(slot_ids), jnp.int32)
+        (self.cache, self.tok, self.pos, self.slot_acc,
+         acc_prefill) = _admission_update(
+            self.cache, self.tok, self.pos, self.slot_acc, acc_prefill,
+            stored_rows, first_tok,
+            jnp.asarray(list(pos0), jnp.int32), idx, acc)
+        for i, r in zip(slot_ids, requests):
+            assert self.slot_req[i] is None, i
+            self.slot_req[i] = r
+        self.admissions += len(slot_ids)
+        self.peak_occupancy = max(self.peak_occupancy,
+                                  self.capacity - len(self._free))
+        return acc_prefill
+
+    def active_mask(self) -> jax.Array:
+        """(capacity,) bool device mask of occupied slots."""
+        return jnp.asarray([r is not None for r in self.slot_req], bool)
+
+    def stats(self) -> Dict[str, int]:
+        return {"capacity": self.capacity, "admissions": self.admissions,
+                "completions": self.completions,
+                "peak_occupancy": self.peak_occupancy,
+                "occupancy": self.capacity - len(self._free)}

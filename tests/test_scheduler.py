@@ -1,0 +1,178 @@
+"""Continuous-batching serving stack: slot pool, scheduler, per-request
+EXTENT quality control.
+
+The load-bearing invariant (ISSUE 2): admitting a full pool in one group
+and decoding in lockstep must reproduce the monolithic batch path
+BIT-EXACTLY — same RNG key schedule, same cache layout, same compiled
+burst — because the extent-write counter RNG hashes flat lane indices.
+Everything else (slot reuse, staggered arrivals, quality floors, table
+stats, attribution) is behavioral."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.priority import Priority
+from repro.serve import (ContinuousScheduler, Request, ServeConfig,
+                         ServingEngine, synthetic_requests)
+
+
+def _engine(arch="qwen2.5-3b", max_seq=32, mnt=6, **kw):
+    cfg = get_config(arch).reduced()
+    return cfg, ServingEngine(cfg, ServeConfig(max_seq=max_seq,
+                                               max_new_tokens=mnt, **kw))
+
+
+# ---------------------------------------------------------------------------
+# lockstep bit-parity with the monolithic batch path
+# ---------------------------------------------------------------------------
+
+def test_lockstep_bit_parity_with_monolithic_generate():
+    cfg, eng_m = _engine()
+    reqs = synthetic_requests(cfg, 2, prompt_len=10, new_tokens=6,
+                              arrival_every=0, seed=5)
+    batch = {"tokens": jnp.concatenate(
+        [r.prompt["tokens"] for r in reqs], axis=0)}
+    toks_m, rep_m = eng_m.generate(batch)
+
+    _, eng_c = _engine()
+    rep_c = ContinuousScheduler(eng_c, capacity=2).run(reqs)
+
+    # energy/flip stats AND realized errors agree bit-exactly: identical
+    # key schedule, identical flat-lane layout, identical compiled burst
+    for k in ("energy_pj", "bits_written", "bit_errors", "bits_total"):
+        assert rep_m["total"][k] == rep_c["total"][k], k
+    # token streams identical too (same sampled trajectory)
+    seq = np.asarray([rep_c["requests"][r.rid]["tokens"] for r in reqs])
+    np.testing.assert_array_equal(np.asarray(toks_m), seq)
+    # and the ExtentTable stats are present in the serve report
+    assert set(rep_c["extent_table"]) >= {"hits", "misses", "evictions",
+                                          "hit_rate"}
+
+
+# ---------------------------------------------------------------------------
+# continuous behavior: arrivals, slot reuse, reports
+# ---------------------------------------------------------------------------
+
+def test_staggered_arrivals_reuse_slots_and_report():
+    cfg, eng = _engine(max_seq=48, mnt=8)
+    reqs = synthetic_requests(cfg, 5, prompt_len=8, new_tokens=4,
+                              arrival_every=2, seed=1)
+    sch = ContinuousScheduler(eng, capacity=2)
+    rep = sch.run(reqs)
+
+    assert len(rep["requests"]) == 5
+    assert rep["pool"]["admissions"] == 5
+    assert rep["pool"]["completions"] == 5
+    assert rep["pool"]["occupancy"] == 0          # pool fully drained
+    assert rep["pool"]["peak_occupancy"] == 2     # both slots were in use
+    slots_used = {r["slot"] for r in rep["requests"].values()}
+    assert slots_used == {0, 1}                   # 5 requests over 2 slots
+
+    for r in rep["requests"].values():
+        assert r["n_tokens"] == 4
+        assert len(r["tokens"]) == 4
+        assert all(0 <= t < cfg.vocab_size for t in r["tokens"])
+        assert r["completed_step"] - r["admitted_step"] == 3  # mnt-1 steps
+        assert r["latency_steps"] >= 3
+        assert r["energy_pj"] > 0
+
+    # per-request attribution closes on the stream totals
+    e_sum = sum(r["energy_pj"] for r in rep["requests"].values())
+    np.testing.assert_allclose(e_sum, rep["total"]["energy_pj"], rtol=1e-5)
+    err_sum = sum(r["errors"] for r in rep["requests"].values())
+    np.testing.assert_allclose(err_sum, rep["total"]["bit_errors"],
+                               rtol=1e-6)
+
+
+def test_queueing_when_pool_is_full():
+    cfg, eng = _engine(max_seq=48, mnt=8)
+    # 3 simultaneous arrivals into 1 slot: strictly sequential service
+    reqs = synthetic_requests(cfg, 3, prompt_len=8, new_tokens=3,
+                              arrival_every=0, seed=2)
+    rep = ContinuousScheduler(eng, capacity=1).run(reqs)
+    waits = sorted(r["queue_steps"] for r in rep["requests"].values())
+    assert waits[0] == 0 and waits[1] > 0 and waits[2] > waits[1]
+    assert rep["pool"]["peak_occupancy"] == 1
+
+
+def test_mixed_prompt_lengths_admit_in_shape_groups():
+    cfg = get_config("qwen2.5-3b").reduced()
+    eng = ServingEngine(cfg, ServeConfig(max_seq=48, max_new_tokens=8))
+    reqs = [Request(rid=i, prompt={"tokens": jax.random.randint(
+                jax.random.PRNGKey(i), (1, plen), 0, cfg.vocab_size)},
+                    new_tokens=3, arrival=0)
+            for i, plen in enumerate((6, 10, 6))]
+    rep = ContinuousScheduler(eng, capacity=3).run(reqs)
+    assert len(rep["requests"]) == 3
+    # per-slot positions: different prompt lengths decode side by side
+    assert {r["n_tokens"] for r in rep["requests"].values()} == {3}
+
+
+# ---------------------------------------------------------------------------
+# per-request EXTENT quality control through the table
+# ---------------------------------------------------------------------------
+
+def test_quality_hint_raises_fidelity_and_table_caches_it():
+    cfg, eng = _engine(max_seq=48, mnt=8)
+    reqs = synthetic_requests(cfg, 4, prompt_len=8, new_tokens=4,
+                              arrival_every=8,  # no overlap: clean floors
+                              seed=3, app_ids=["lo", "hi", "lo", "hi"],
+                              qualities=[None, Priority.EXACT, None, None])
+    rep = ContinuousScheduler(eng, capacity=2).run(reqs)
+    by_rid = rep["requests"]
+    # the hinted request resolves EXACT and realizes zero write errors
+    assert by_rid[1]["quality"] == "EXACT"
+    assert by_rid[1]["errors"] == 0
+    # request 3 (same app block, NO hint) inherits EXACT via a table hit
+    assert by_rid[3]["quality"] == "EXACT"
+    assert by_rid[3]["errors"] == 0
+    # rid 0 ("lo", unhinted): miss installing the default; rid 1 tags
+    # then resolves (hit); rids 2/3 hit their cached app blocks
+    assert rep["extent_table"]["hits"] == 3
+    assert rep["extent_table"]["misses"] == 1
+    # unhinted app floors stay LOW: approximate writes do err
+    assert by_rid[0]["quality"] == "LOW"
+    assert by_rid[0]["errors"] > 0
+
+
+def test_quality_floor_is_conservative_across_coresidents():
+    """An EXACT-hinted request pins the whole pool's floor while resident:
+    its unhinted neighbor also sees zero errors during the overlap."""
+    cfg, eng = _engine(max_seq=48, mnt=8)
+    reqs = synthetic_requests(cfg, 2, prompt_len=8, new_tokens=5,
+                              arrival_every=0, seed=4,
+                              app_ids=["a", "b"],
+                              qualities=[Priority.EXACT, None])
+    rep = ContinuousScheduler(eng, capacity=2).run(reqs)
+    assert rep["requests"][0]["errors"] == 0
+    assert rep["requests"][1]["errors"] == 0  # full overlap -> EXACT floor
+    assert rep["total"]["bit_errors"] == 0
+
+
+def test_anonymous_requests_skip_the_table():
+    cfg, eng = _engine(max_seq=48, mnt=8)
+    reqs = synthetic_requests(cfg, 3, prompt_len=8, new_tokens=3,
+                              arrival_every=1, seed=6)
+    rep = ContinuousScheduler(eng, capacity=2).run(reqs)
+    assert rep["extent_table"]["hits"] == 0
+    assert rep["extent_table"]["misses"] == 0
+
+
+# ---------------------------------------------------------------------------
+# families: recurrent caches through the pool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "recurrentgemma-2b"])
+def test_recurrent_families_serve_continuously(arch):
+    cfg, eng = _engine(arch, max_seq=32, mnt=4)
+    reqs = synthetic_requests(cfg, 3, prompt_len=6, new_tokens=3,
+                              arrival_every=1, seed=2)
+    rep = ContinuousScheduler(eng, capacity=2).run(reqs)
+    assert all(rep["requests"][i]["n_tokens"] == 3 for i in range(3))
+    if cfg.family == "ssm":
+        # recurrent state pinned EXACT -> no approximate traffic at all
+        assert rep["total"]["bits_written"] == 0
+    else:
+        assert rep["total"]["energy_pj"] > 0
