@@ -1,16 +1,18 @@
-"""extent_write kernel micro-benchmark + HBM-roofline accounting.
+"""extent_write kernel micro-benchmark + HBM-roofline accounting, driven
+through the ``repro.memory`` backend registry.
 
 On this CPU host the Pallas kernel runs in interpret mode (correctness
 only), so wall-times are *not* TPU numbers. What we can measure honestly:
 
   * bytes moved per write (the kernel's memory-roofline numerator),
   * the fusion win vs. the unfused composition: wall-clock of the
-    jit-resident lane path vs. the eager bit-unpacked oracle
+    jit-resident lane backend vs. the eager bit-unpacked oracle
     (``approx_write_with_stats``, which materializes an (elements x nbits)
     u32 intermediate and syncs stats to the host),
   * per-tensor priority without retracing: after the first call, switching
-    the driver level swaps threshold/energy vector constants only — the
-    level sweep below reuses the compiled executable (timed to show it),
+    the driver level swaps threshold/energy vector OPERANDS only — the
+    level sweep below reuses one compiled executable per backend (timed to
+    show it),
   * projected TPU v5e kernel time = bytes / 819 GB/s at roofline.
 """
 from __future__ import annotations
@@ -20,9 +22,9 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import memory
 from repro.core.approx_store import approx_write_with_stats
 from repro.core.priority import Priority
-from repro.kernels.extent_write import extent_write
 from repro.launch.hw import HBM_BW
 
 
@@ -46,22 +48,23 @@ def run(n_mib: int = 8):
     nbits = 16
     bytes_unfused = bytes_fused + 2 * (n * nbits * 4) * 2  # unpacked u32 x2
 
-    lane_s = _timed(lambda: extent_write(key, old, new, level=Priority.LOW,
-                                         use_kernel=False)[0])
+    lane_s = _timed(lambda: memory.write(key, old, new, level=Priority.LOW,
+                                         backend="lanes_ref")[0])
     eager_s = _timed(lambda: approx_write_with_stats(
         key, old, new, Priority.LOW)[0], reps=1)
 
-    # priority sweep on the already-compiled lane path: levels swap vector
-    # constants, not programs, so per-level cost ~= the LOW-level cost
+    # priority sweep on the already-compiled lane backend: levels swap
+    # vector operands, not programs, so per-level cost ~= the LOW cost
     sweep_s = {}
     for level in (Priority.MID, Priority.HIGH, Priority.EXACT):
         sweep_s[level.name] = round(_timed(
-            lambda lv=level: extent_write(key, old, new, level=lv,
-                                          use_kernel=False)[0], reps=1), 3)
+            lambda lv=level: memory.write(key, old, new, level=lv,
+                                          backend="lanes_ref")[0],
+            reps=1), 3)
 
     t0 = time.perf_counter()
-    stored, stats = extent_write(key, old, new, level=Priority.LOW,
-                                 use_kernel=True, interpret=True)
+    stored, stats = memory.write(key, old, new, level=Priority.LOW,
+                                 backend="pallas")
     jax.block_until_ready(stored)
     interp_s = time.perf_counter() - t0
 
@@ -76,8 +79,8 @@ def run(n_mib: int = 8):
         "eager_oracle_s_cpu": round(eager_s, 3),
         "lane_vs_eager_speedup_x": round(eager_s / max(lane_s, 1e-9), 1),
         "level_sweep_s_cpu_no_retrace": sweep_s,
-        "interpret_mode_s_cpu": round(interp_s, 3),
-        "errors": int(stats["errors"]),
+        "pallas_backend_s_cpu": round(interp_s, 3),
+        "errors": int(stats.errors),
     }
 
 

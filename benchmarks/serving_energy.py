@@ -35,9 +35,10 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.energy_model import (exact_baseline_energy_pj,
-                                     zero_device_stats, zero_slot_stats)
+                                     zero_slot_stats)
 from repro.core.priority import Priority
 from repro.kernels.kv_quant import kv_dequant, kv_quant_store
+from repro.memory import WriteStats
 from repro.serve import (ContinuousScheduler, ServeConfig, ServingEngine,
                          synthetic_requests)
 from repro.serve.engine import _tag_cache, eager_extent_cache_write
@@ -116,7 +117,7 @@ def compare_fused_vs_eager(arch: str = "qwen2.5-3b", new_tokens: int = 8):
     active = jnp.ones((B,), bool)
     t0 = time.perf_counter()
     out = eng._burst(eng.params, tok, cache0, pos0, key,
-                     zero_device_stats(), zero_slot_stats(B), active,
+                     WriteStats.zero(), zero_slot_stats(B), active,
                      vectors, n=new_tokens - 1)
     jax.block_until_ready(out)
     t_fused = time.perf_counter() - t0
@@ -135,16 +136,16 @@ def compare_fused_vs_eager(arch: str = "qwen2.5-3b", new_tokens: int = 8):
     # -- parity on an identical write stream
     pairs = _decode_pairs(eng, prompt, n_steps=new_tokens - 1, jits=jits)
     tags = _tag_cache(pairs[0][0])
-    write_jit = jax.jit(lambda k, o, n: eng._write_cache(k, o, n, vectors))
+    write_jit = jax.jit(lambda k, o, n: eng.plan.write(k, o, n, vectors))
     e_fused = e_eager = 0.0
     err_fused = err_eager = flips = 0
     for i, (old, new) in enumerate(pairs):
         k = jax.random.fold_in(jax.random.PRNGKey(42), i)
         _, st = write_jit(k, old, new)
         st = jax.device_get(st)
-        e_fused += float(st["energy_pj"])
-        err_fused += int(st["errors"])
-        flips += int(st["flips01"]) + int(st["flips10"])
+        e_fused += float(st.energy_pj)
+        err_fused += int(st.errors)
+        flips += int(st.flips01) + int(st.flips10)
         _, agg = eager_extent_cache_write(k, old, new, tags)
         e_eager += agg["energy_pj"]
         err_eager += agg["bit_errors"]

@@ -5,8 +5,9 @@ write energy — the accuracy/energy tradeoff curve of section IV.C.
   PYTHONPATH=src python examples/image_store_psnr.py
 
 The "image" is a synthetic multi-frequency test card (no external data);
-pixels are stored as float32 payloads through the approximate store, the
-paper's grayscale-averaging pseudo-code (Fig. 10) included.
+pixels are stored as float32 payloads through the ``repro.memory``
+substrate (oracle backend — the eager reference), the paper's
+grayscale-averaging pseudo-code (Fig. 10) included.
 """
 import math
 
@@ -14,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Priority, approx_write_with_stats
+from repro import memory
+from repro.core import Priority
 from repro.core.energy_model import exact_baseline_energy_pj
 
 
@@ -43,15 +45,18 @@ def main():
           f"{'vs basic':>9s} {'bit errors':>11s}")
     zero = jnp.zeros_like(gray)
     for level in (Priority.LOW, Priority.MID, Priority.HIGH, Priority.EXACT):
-        stored, st = approx_write_with_stats(key, zero, gray, level)
-        baseline = exact_baseline_energy_pj(int(st.bits_total))
+        stored, st = memory.write(key, zero, gray, level=level,
+                                  backend="oracle")
+        h = st.host_dict()
+        baseline = exact_baseline_energy_pj(int(h["bits_total"]))
         print(f"{level.name:8s} {psnr(gray, stored):9.2f} "
-              f"{float(st.energy_pj)/1e6:11.3f} "
-              f"{100*(1-float(st.energy_pj)/baseline):8.1f}% "
-              f"{int(st.bit_errors):11d}")
+              f"{h['energy_pj']/1e6:11.3f} "
+              f"{100*(1-h['energy_pj']/baseline):8.1f}% "
+              f"{h['bit_errors']:11d}")
     # the paper's qualitative claim: even LOW keeps the image "not visually
     # noticeable" (PSNR > ~30 dB), while saving most of the write energy
-    stored, _ = approx_write_with_stats(key, zero, gray, Priority.LOW)
+    stored, _ = memory.write(key, zero, gray, level=Priority.LOW,
+                             backend="oracle")
     assert psnr(gray, stored) > 30.0, "LOW level must stay perceptually fine"
     print("OK: LOW-priority storage keeps PSNR above 30 dB")
 

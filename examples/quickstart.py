@@ -1,19 +1,33 @@
 """Quickstart: the EXTENT approximate-memory subsystem in 60 seconds.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [--backend lanes_ref]
 
-Walks the paper's stack bottom-up: WER physics -> 4-level driver -> an
-approximate tensor write -> the Pallas kernel -> a priority-tagged pytree.
+Walks the paper's stack bottom-up: WER physics -> 4-level driver -> the
+unified memory substrate (one write API, every registered backend) -> a
+pytree-native memory region -> a priority-tagged pytree. Without
+``--backend`` it sweeps every name in the registry — the same sweep the CI
+smoke lane runs.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Priority, approx_write_with_stats, default_driver,
-                        tag_pytree, wer_bit)
-from repro.kernels.extent_write import extent_write
+from repro import memory
+from repro.core import Priority, default_driver, tag_pytree, wer_bit
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default=None,
+                    choices=memory.available_backends(),
+                    help="single repro.memory backend (default: sweep all)")
+    args = ap.parse_args()
+    backends = ([args.backend] if args.backend
+                else list(memory.available_backends()))
+    # sections 4/5 demo ONE backend: the chosen one, or the serving default
+    demo = args.backend or "lanes_ref"
+
     print("== 1. WER physics (paper Eq. 1) ==")
     for i_rel in (1.2, 1.5, 1.8):
         print(f"  WER(10ns, I/Ic={i_rel}, delta=60) = "
@@ -24,24 +38,40 @@ def main():
         print(f"  {l.name:12s} code={l.code:02b} wer01={l.wer_0to1:.2e} "
               f"e01={l.e_0to1_pj:.2f}pJ lat={l.latency_ns:.2f}ns")
 
-    print("\n== 3. approximate tensor write ==")
+    print("\n== 3. the memory substrate: one write API, every backend ==")
     key = jax.random.PRNGKey(0)
     old = jnp.zeros((256, 256), jnp.bfloat16)
-    new = jax.random.normal(jax.random.PRNGKey(1), (256, 256)).astype(jnp.bfloat16)
-    for level in (Priority.LOW, Priority.EXACT):
-        stored, st = approx_write_with_stats(key, old, new, level)
+    new = jax.random.normal(jax.random.PRNGKey(1), (256, 256)).astype(
+        jnp.bfloat16)
+    for name in backends:
+        stored, st = memory.write(key, old, new, level=Priority.LOW,
+                                  backend=name)
+        h = st.host_dict()
         err = jnp.mean(jnp.abs(stored.astype(jnp.float32)
                                - new.astype(jnp.float32)))
-        print(f"  {level.name:6s}: energy={float(st.energy_pj)/1e3:.1f} nJ  "
-              f"bit_errors={int(st.bit_errors):5d}  mean|err|={float(err):.5f}")
+        print(f"  {name:10s}: energy={h['energy_pj']/1e3:7.1f} nJ  "
+              f"flips={h['bits_written']:6d}  errors={h['bit_errors']:5d}  "
+              f"mean|err|={float(err):.5f}")
 
-    print("\n== 4. the fused Pallas kernel (interpret mode on CPU) ==")
-    stored, stats = extent_write(key, old, new, level=Priority.LOW)
-    print(f"  kernel: energy={float(stats['energy_pj'])/1e3:.1f} nJ "
-          f"flips={int(stats['flips01'] + stats['flips10'])} "
-          f"errors={int(stats['errors'])}")
+    print(f"\n== 4. level sweep reuses ONE compiled executable "
+          f"(backend={demo}) ==")
+    for level in (Priority.LOW, Priority.MID, Priority.EXACT):
+        _, st = memory.write(key, old, new, level=level, backend=demo)
+        h = st.host_dict()
+        print(f"  {level.name:6s}: energy={h['energy_pj']/1e3:7.1f} nJ  "
+              f"BER={h['ber_realized']:.2e}")
 
-    print("\n== 5. priority tagging (the software API, Fig. 10/11) ==")
+    print("\n== 5. a pytree-native memory region ==")
+    region = memory.MemoryRegion.create(
+        {"kv": {"k": old, "v": old}}, level=Priority.LOW, backend=demo)
+    region = region.write(jax.random.PRNGKey(2), {"kv": {"k": new, "v": new}})
+    region = region.write(jax.random.PRNGKey(3), {"kv": {"k": new, "v": new}})
+    rep = region.report()
+    print(f"  2 writes (2nd redundant): E={rep['energy_pj']/1e3:.1f} nJ "
+          f"skip-rate={rep['write_skip_rate']:.3f} "
+          f"backend={rep['backend']}")
+
+    print("\n== 6. priority tagging (the software API, Fig. 10/11) ==")
     state = {"weights": new, "kv": {"k": old, "v": old},
              "moments": {"m": old, "v2": old}}
     tags = tag_pytree(state, lambda path, leaf: (

@@ -12,10 +12,11 @@ attribution in the serve report).
 
 The approximate write is fused into the jitted decode burst (one compiled
 ``lax.scan`` call per decode span, stats accumulated on device, synced
-once per generate/scheduler event). ``--use-kernel`` routes it through the
-Pallas kernel instead of the pure-jnp lane reference — on CPU hosts the
-kernel executes through the Pallas interpreter (slow, correctness-mode);
-on TPU pair it with ``--no-interpret``.
+once per generate/scheduler event). ``--backend`` selects the write-path
+implementation from the ``repro.memory`` registry — "lanes_ref" (default)
+is the pure-jnp lane path, "pallas" the kernel (auto-interpreted on CPU
+hosts: slow, correctness-mode; native on TPU), "oracle" the eager
+bit-unpacked reference.
 """
 import argparse
 
@@ -35,10 +36,8 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--use-kernel", action="store_true",
-                    help="Pallas kernel write path (default: jnp lane ref)")
-    ap.add_argument("--no-interpret", action="store_true",
-                    help="run the Pallas kernel natively (TPU hosts)")
+    ap.add_argument("--backend", default="lanes_ref",
+                    help="repro.memory write-path backend name")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -64,8 +63,7 @@ def main():
     eng_a = ServingEngine(cfg, ServeConfig(max_seq=max_seq,
                                            max_new_tokens=args.new_tokens,
                                            extent_enabled=True,
-                                           use_kernel=args.use_kernel,
-                                           interpret=not args.no_interpret))
+                                           backend=args.backend))
     toks_a, report = eng_a.generate(prompt)
 
     agree = float(jnp.mean((toks_x == toks_a).astype(jnp.float32)))
@@ -89,8 +87,7 @@ def main():
     eng_c = ServingEngine(cfg, ServeConfig(max_seq=max_seq,
                                            max_new_tokens=args.new_tokens,
                                            extent_enabled=True,
-                                           use_kernel=args.use_kernel,
-                                           interpret=not args.no_interpret))
+                                           backend=args.backend))
     reqs = synthetic_requests(
         cfg, args.batch + 2, prompt_len=args.prompt_len,
         new_tokens=args.new_tokens, arrival_every=max(2, args.new_tokens // 4),

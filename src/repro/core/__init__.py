@@ -20,8 +20,8 @@ from repro.core.write_driver import (  # noqa: F401
     word_energy_pj, word_latency_ns,
 )
 from repro.core.approx_store import (  # noqa: F401
-    ApproxStore, WriteStats, approx_write, approx_write_lanes,
-    approx_write_with_stats, inject_soft_errors,
+    ApproxStore, WriteStats, approx_write, approx_write_with_stats,
+    inject_soft_errors, oracle_write,
 )
 from repro.core.wer import (  # noqa: F401
     expected_pulse_fraction, switching_probability, switching_time,
@@ -29,6 +29,5 @@ from repro.core.wer import (  # noqa: F401
 )
 from repro.core.extent_table import ExtentTable, QualityController  # noqa: F401
 from repro.core.energy_model import (  # noqa: F401
-    StepEnergyMeter, add_device_stats, monte_carlo_variation, voltage_sweep,
-    zero_device_stats,
+    StepEnergyMeter, monte_carlo_variation, voltage_sweep,
 )

@@ -1,7 +1,7 @@
-"""Approximate tensor store: EXTENT's write path at tensor granularity.
+"""Approximate tensor write oracle: EXTENT's write path at tensor granularity.
 
-``approx_write(key, old, new, level, table)`` models one STT-RAM array write
-of ``new`` over stored ``old``:
+``oracle_write(key, old, new, <per-bit driver vectors>)`` models one STT-RAM
+array write of ``new`` over stored ``old``:
 
   1. **redundant-write elimination / self-termination (CMP)** — bits where
      new == old draw (approximately) zero energy and are never at risk;
@@ -13,13 +13,17 @@ of ``new`` over stored ``old``:
      occupancy. Accounting is exact given the realized flip masks.
 
 Everything is bit-parallel jnp (bitcast to uint, XOR-diff, mask algebra) —
-this file is also the *oracle* for the Pallas kernel in
-``repro/kernels/extent_write/``.
+this file is the *oracle* backend of the ``repro.memory`` substrate and the
+reference the Pallas kernel in ``repro/kernels/extent_write/`` is validated
+against. The per-bit driver parameters (WER/energy/latency per bit plane)
+arrive as plain array OPERANDS, so per-tensor priorities and quality floors
+swap constants without retracing — the resolve-once contract of
+``repro.memory.WritePlan``.
 
-The per-bit priority refinement (sign/exponent EXACT, mantissa at the
-tensor's level — see priority.py) is applied by ``approx_write`` through a
-per-bit level map, so one fused pass handles mixed-criticality words exactly
-like the paper's 4-driver memory row.
+``approx_write_with_stats`` keeps the seed-era (level, table) signature as a
+thin wrapper; new code goes through ``repro.memory.write`` or a
+``WritePlan``. ``ApproxStore`` survives only as a deprecation shim over the
+substrate (see the class docstring).
 """
 from __future__ import annotations
 
@@ -34,6 +38,9 @@ from repro.core.priority import Priority, priority_mask, uint_type
 
 
 class WriteStats(NamedTuple):
+    """Legacy stats layout (seed API) returned by the
+    ``approx_write_with_stats`` wrapper; superseded by the unified pytree
+    dataclass in ``repro.memory.stats``."""
     energy_pj: jax.Array        # total realized write energy
     latency_ns: jax.Array       # max level latency among used drivers
     bits_written: jax.Array     # flipping bits (after CMP skip)
@@ -52,40 +59,29 @@ def _bit_iota(ut, nbits: int) -> jax.Array:
     return jnp.arange(nbits, dtype=ut)
 
 
-def approx_write_with_stats(
+def oracle_write(
     key: jax.Array,
     old: jax.Array,
     new: jax.Array,
-    level: Priority | int,
-    table: Optional[Dict[str, jax.Array]] = None,
-    *,
-    per_bit_levels: bool = True,
-) -> Tuple[jax.Array, WriteStats]:
-    """Write ``new`` over ``old`` through the EXTENT driver at ``level``.
+    wer01: jax.Array,   # (nbits,) f32 per-bit-plane failure prob, 0->1
+    wer10: jax.Array,   # (nbits,) f32 per-bit-plane failure prob, 1->0
+    e01: jax.Array,     # (nbits,) f32 per-flip energy (pJ), 0->1
+    e10: jax.Array,     # (nbits,) f32 per-flip energy (pJ), 1->0
+    lat: jax.Array,     # (nbits,) f32 per-bit-plane driver latency (ns)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Eager bit-unpacked EXTENT write with per-bit driver-vector operands.
 
-    Returns (stored_value, WriteStats). Bit-exact, vmap/jit-safe; shapes/
-    dtypes of old and new must match. With ``per_bit_levels`` the bit-plane
-    policy of priority.py refines the tensor level per bit position.
+    Returns (stored, stats dict of 0-d device arrays: energy_pj f32,
+    latency_ns f32, flips01/flips10/errors i32, bits_total f32). Bit-exact,
+    vmap/jit-safe; this draws one f32 uniform per (element, bit) from the
+    ``jax.random`` stream of ``key`` — the 16-32x-amplified reference the
+    lane-packed backends are measured against.
     """
     assert old.shape == new.shape and old.dtype == new.dtype, (
         old.shape, new.shape, old.dtype, new.dtype)
-    if table is None:
-        table = write_driver.level_table()
     old_u, ut = _as_uint(old)
     new_u, _ = _as_uint(new)
     nbits = jnp.dtype(ut).itemsize * 8
-
-    diff = old_u ^ new_u                                  # flipping bits
-    # per-bit level codes (nbits,) broadcast over the element shape
-    if per_bit_levels:
-        codes = priority_mask(old.dtype, Priority.coerce(level))  # (nbits,)
-    else:
-        codes = jnp.full((nbits,), int(level), jnp.int32)
-
-    wer01 = table["wer01"][codes]                         # (nbits,)
-    wer10 = table["wer10"][codes]
-    e01 = table["e01"][codes]
-    e10 = table["e10"][codes]
 
     # one uniform draw per (element, bit): failure if u < WER(direction)
     u = jax.random.uniform(key, old_u.shape + (nbits,), jnp.float32)
@@ -109,64 +105,60 @@ def approx_write_with_stats(
     # energy: only flipping bits draw write current (CMP skip for the rest);
     # failed bits still burned the full pulse at their level.
     e_bits = jnp.where(to_ap, e01, jnp.where(to_p, e10, 0.0))
-    energy = jnp.sum(e_bits, dtype=jnp.float32)
     lat_used = jnp.where(
-        jnp.any(flip, axis=tuple(range(flip.ndim - 1))),
-        table["lat"][codes], 0.0)
-    stats = WriteStats(
-        energy_pj=energy,
-        latency_ns=jnp.max(lat_used),
-        bits_written=jnp.sum(flip, dtype=jnp.int32),
+        jnp.any(flip, axis=tuple(range(flip.ndim - 1))), lat, 0.0)
+    stats = {
+        "energy_pj": jnp.sum(e_bits, dtype=jnp.float32),
+        "latency_ns": jnp.max(lat_used),
+        "flips01": jnp.sum(to_ap, dtype=jnp.int32),
+        "flips10": jnp.sum(to_p, dtype=jnp.int32),
+        "errors": jnp.sum(fail, dtype=jnp.int32),
         # f32, not i32: tensors of >=2^31 bits would overflow at trace time
-        bits_total=jnp.asarray(float(old_u.size * nbits), jnp.float32),
-        bit_errors=jnp.sum(fail, dtype=jnp.int32),
-        flips_0to1=jnp.sum(to_ap, dtype=jnp.int32),
-        flips_1to0=jnp.sum(to_p, dtype=jnp.int32),
-    )
+        "bits_total": jnp.asarray(float(old_u.size * nbits), jnp.float32),
+    }
     return stored, stats
 
 
-def approx_write(key, old, new, level, table=None, **kw) -> jax.Array:
-    return approx_write_with_stats(key, old, new, level, table, **kw)[0]
-
-
-def approx_write_lanes(
+def approx_write_with_stats(
     key: jax.Array,
     old: jax.Array,
     new: jax.Array,
     level: Priority | int,
+    table: Optional[Dict[str, jax.Array]] = None,
     *,
-    use_kernel: bool = False,
-    interpret: bool = True,
-    vectors: Optional[Tuple[jax.Array, ...]] = None,
-) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Lane-packed EXTENT write, safe to tree-map over a cache pytree
-    *inside* jit.
+    per_bit_levels: bool = True,
+) -> Tuple[jax.Array, WriteStats]:
+    """Write ``new`` over ``old`` through the EXTENT driver at ``level``.
 
-    Unlike ``approx_write_with_stats`` (the eager bit-unpacked oracle, which
-    draws one f32 uniform per (element, bit) and so materializes a 16-32x
-    amplified intermediate), this routes through the fused path in
-    ``repro.kernels.extent_write``: uint32 lane packing (two 16-bit elements
-    per lane), counter-based RNG, per-block stat reductions. Same bit-plane
-    priority policy and the same driver energy table — flip counts and
-    energy agree with the oracle exactly; realized error counts differ only
-    by the RNG stream.
-
-    Returns (stored, stats{energy_pj f32, flips01, flips10, errors,
-    bits_written, bits_total  — all 0-d device arrays}). No host syncs:
-    callers accumulate the stats on device and transfer once per batch of
-    writes. ``use_kernel`` selects the Pallas kernel (``interpret=True`` for
-    correctness-mode execution on CPU hosts) versus the pure-jnp lane ref.
-    Callers that map over many tensors (the serve engine) pass
-    pre-resolved per-tensor ``vectors`` (see
-    ``kernels.extent_write.level_vectors``) so priorities are plain array
-    operands, not retrace triggers.
+    Seed-era signature kept for the benchmarks/tests that predate the
+    ``repro.memory`` substrate; resolves (level, table) to per-bit driver
+    vectors and delegates to ``oracle_write``. With ``per_bit_levels`` the
+    bit-plane policy of priority.py refines the tensor level per bit
+    position. Returns (stored_value, legacy WriteStats NamedTuple).
     """
-    from repro.kernels.extent_write import ops as _xops
-    level = Priority.coerce(level)
-    return _xops.extent_write(key, old, new, level=level,
-                              use_kernel=use_kernel, interpret=interpret,
-                              vectors=vectors)
+    if table is None:
+        table = write_driver.level_table()
+    nbits = jnp.dtype(uint_type(old.dtype)).itemsize * 8
+    if per_bit_levels:
+        codes = priority_mask(old.dtype, Priority.coerce(level))  # (nbits,)
+    else:
+        codes = jnp.full((nbits,), int(level), jnp.int32)
+    stored, d = oracle_write(
+        key, old, new, table["wer01"][codes], table["wer10"][codes],
+        table["e01"][codes], table["e10"][codes], table["lat"][codes])
+    return stored, WriteStats(
+        energy_pj=d["energy_pj"],
+        latency_ns=d["latency_ns"],
+        bits_written=d["flips01"] + d["flips10"],
+        bits_total=d["bits_total"],
+        bit_errors=d["errors"],
+        flips_0to1=d["flips01"],
+        flips_1to0=d["flips10"],
+    )
+
+
+def approx_write(key, old, new, level, table=None, **kw) -> jax.Array:
+    return approx_write_with_stats(key, old, new, level, table, **kw)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -190,38 +182,56 @@ def inject_soft_errors(key: jax.Array, x: jax.Array, ber: float,
 
 
 # ---------------------------------------------------------------------------
-# stateful convenience wrapper
+# stateful convenience wrapper (DEPRECATED shim)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class ApproxStore:
-    """A named approximate memory region with cumulative accounting.
+    """DEPRECATED: name->array shim over the ``repro.memory`` substrate.
 
-    Functional style: ``store, value = store.write(key, name, new, level)``.
-    Used by the checkpoint writer, the serving KV path and the examples;
-    the dry-run never instantiates it (tensors stay ShapeDtypeStructs).
+    Kept for the seed-era API (``store, value = store.write(key, name, new,
+    level)``); new code should hold a pytree in a
+    ``repro.memory.MemoryRegion`` instead. The shim routes every write
+    through the registered ``backend`` and accumulates the unified
+    ``repro.memory.WriteStats`` ON DEVICE — the cumulative counters cross to
+    the host only when one of the report properties (``energy_pj``,
+    ``latency_ns``, ``bits_written``, ``bit_errors``) is read, instead of
+    the seed behavior of one driver recalibration per instance plus one
+    ``float()`` sync per write.
     """
-    table: Dict[str, jax.Array] = dataclasses.field(
-        default_factory=write_driver.level_table)
     data: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
-    energy_pj: float = 0.0
-    latency_ns: float = 0.0
-    bits_written: int = 0
-    bit_errors: int = 0
+    backend: str = "oracle"
+    stats: Any = None  # device-resident repro.memory.WriteStats (lazy)
 
     def write(self, key: jax.Array, name: str, new: jax.Array,
-              level: Priority = Priority.EXACT) -> Tuple["ApproxStore", jax.Array]:
+              level: Priority = Priority.EXACT
+              ) -> Tuple["ApproxStore", jax.Array]:
+        # lazy import: repro.memory depends on this module's oracle
+        from repro import memory
         old = self.data.get(name, jnp.zeros_like(new))
-        stored, st = approx_write_with_stats(key, old, new, level, self.table)
+        stored, st = memory.write(key, old, new, level=level,
+                                  backend=self.backend)
         data = dict(self.data)
         data[name] = stored
-        return dataclasses.replace(
-            self, data=data,
-            energy_pj=self.energy_pj + float(st.energy_pj),
-            latency_ns=max(self.latency_ns, float(st.latency_ns)),
-            bits_written=self.bits_written + int(st.bits_written),
-            bit_errors=self.bit_errors + int(st.bit_errors),
-        ), stored
+        stats = st if self.stats is None else self.stats + st
+        return dataclasses.replace(self, data=data, stats=stats), stored
 
     def read(self, name: str) -> jax.Array:
         return self.data[name]
+
+    # -- report properties: the single device->host sync point --------------
+    @property
+    def energy_pj(self) -> float:
+        return 0.0 if self.stats is None else float(self.stats.energy_pj)
+
+    @property
+    def latency_ns(self) -> float:
+        return 0.0 if self.stats is None else float(self.stats.latency_ns)
+
+    @property
+    def bits_written(self) -> int:
+        return 0 if self.stats is None else int(self.stats.bits_written)
+
+    @property
+    def bit_errors(self) -> int:
+        return 0 if self.stats is None else int(self.stats.errors)

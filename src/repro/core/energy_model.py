@@ -30,26 +30,6 @@ from repro.core.priority import Priority
 # step-level accounting
 # ---------------------------------------------------------------------------
 
-#: device-resident write-stat accumulator layout: the jitted serve/train
-#: write paths carry one 0-d array per key and add into it every step, so
-#: the ledger crosses to the host exactly once per generate()/step batch.
-DEVICE_STAT_KEYS = ("energy_pj", "flips01", "flips10", "errors")
-
-
-def zero_device_stats() -> Dict[str, jax.Array]:
-    """Fresh all-zero device accumulator (energy f32, counters i32)."""
-    return {"energy_pj": jnp.zeros((), jnp.float32),
-            "flips01": jnp.zeros((), jnp.int32),
-            "flips10": jnp.zeros((), jnp.int32),
-            "errors": jnp.zeros((), jnp.int32)}
-
-
-def add_device_stats(acc: Dict[str, jax.Array],
-                     stats: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-    """acc + stats over DEVICE_STAT_KEYS, staying on device (jit-safe)."""
-    return {k: acc[k] + stats[k] for k in DEVICE_STAT_KEYS}
-
-
 #: per-slot attribution layout for the continuous-batching pool: one f32
 #: accumulator row per cache slot, so a request's share of the write-stream
 #: energy/flips/errors rides on device until the scheduler retires its slot.
@@ -61,10 +41,10 @@ def zero_slot_stats(n_slots: int) -> Dict[str, jax.Array]:
     return {k: jnp.zeros((n_slots,), jnp.float32) for k in SLOT_STAT_KEYS}
 
 
-def add_slot_stats(slot_acc: Dict[str, jax.Array],
-                   stats: Dict[str, jax.Array],
+def add_slot_stats(slot_acc: Dict[str, jax.Array], stats: Any,
                    active: jax.Array) -> Dict[str, jax.Array]:
-    """Attribute one write's device stats across the active slots (jit-safe).
+    """Attribute one write's device stats (a ``repro.memory.WriteStats``)
+    across the active slots (jit-safe).
 
     The lane-packed write reduces stats globally per leaf, not per batch row,
     so attribution splits each step's totals evenly over the slots that wrote
@@ -74,11 +54,11 @@ def add_slot_stats(slot_acc: Dict[str, jax.Array],
     """
     act = active.astype(jnp.float32)
     share = act / jnp.maximum(jnp.sum(act), 1.0)
-    flips = (stats["flips01"] + stats["flips10"]).astype(jnp.float32)
+    flips = (stats.flips01 + stats.flips10).astype(jnp.float32)
     return {
-        "energy_pj": slot_acc["energy_pj"] + share * stats["energy_pj"],
+        "energy_pj": slot_acc["energy_pj"] + share * stats.energy_pj,
         "flips": slot_acc["flips"] + share * flips,
-        "errors": slot_acc["errors"] + share * stats["errors"].astype(
+        "errors": slot_acc["errors"] + share * stats.errors.astype(
             jnp.float32),
     }
 
@@ -91,32 +71,32 @@ class StepEnergyMeter:
     def add(self, stream: str, stats: WriteStats) -> None:
         s = self.streams.setdefault(stream, {
             "energy_pj": 0.0, "bits_written": 0, "bits_total": 0,
-            "bit_errors": 0, "latency_ns": 0.0})
+            "bit_errors": 0, "soft_strikes": 0, "latency_ns": 0.0})
         s["energy_pj"] += float(stats.energy_pj)
         s["bits_written"] += int(stats.bits_written)
         s["bits_total"] += int(stats.bits_total)
         s["bit_errors"] += int(stats.bit_errors)
         s["latency_ns"] = max(s["latency_ns"], float(stats.latency_ns))
 
-    def add_stream(self, stream: str, host_stats: Dict[str, Any],
-                   bits_total: int = 0, latency_ns: float = 0.0) -> None:
-        """Fold one already-synced device accumulator (see
-        ``zero_device_stats``) into a named stream. ``bits_total`` is shape
-        metadata, so callers pass it host-side instead of burning a device
-        counter on a statically-known quantity."""
+    def add_stream(self, stream: str, host_stats: Any) -> None:
+        """Fold one already-synced ``repro.memory.WriteStats`` accumulator
+        (attribute access — energy/flips/bits/latency/soft strikes all
+        ride inside the unified pytree) into a named stream."""
         s = self.streams.setdefault(stream, {
             "energy_pj": 0.0, "bits_written": 0, "bits_total": 0,
-            "bit_errors": 0, "latency_ns": 0.0})
-        s["energy_pj"] += float(host_stats["energy_pj"])
-        s["bits_written"] += int(host_stats["flips01"]) + int(
-            host_stats["flips10"])
-        s["bits_total"] += int(bits_total)
-        s["bit_errors"] += int(host_stats["errors"])
-        s["latency_ns"] = max(s["latency_ns"], float(latency_ns))
+            "bit_errors": 0, "soft_strikes": 0, "latency_ns": 0.0})
+        s["energy_pj"] += float(host_stats.energy_pj)
+        s["bits_written"] += (int(host_stats.flips01)
+                              + int(host_stats.flips10))
+        s["bit_errors"] += int(host_stats.errors)
+        s["soft_strikes"] += int(host_stats.soft_strikes)
+        s["bits_total"] += int(host_stats.bits_total)
+        s["latency_ns"] = max(s["latency_ns"], float(host_stats.latency_ns))
 
     def summary(self) -> Dict[str, Any]:
-        tot = {k: sum(s[k] for s in self.streams.values())
-               for k in ("energy_pj", "bits_written", "bits_total", "bit_errors")}
+        tot = {k: sum(s.get(k, 0) for s in self.streams.values())
+               for k in ("energy_pj", "bits_written", "bits_total",
+                         "bit_errors", "soft_strikes")}
         tot["write_skip_rate"] = (
             1.0 - tot["bits_written"] / tot["bits_total"]
             if tot["bits_total"] else 0.0)

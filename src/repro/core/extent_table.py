@@ -56,6 +56,15 @@ class ExtentTable:
         self.update(block, self.default)
         return self.default
 
+    def reset_stats(self) -> None:
+        """Zero the hit/miss/eviction counters WITHOUT touching the cached
+        block->quality entries. Called between scheduler arrival streams so
+        per-run serve reports never aggregate stale table traffic from a
+        previous stream on the same engine."""
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
     # -- observability ---------------------------------------------------------
     @property
     def hit_rate(self) -> float:

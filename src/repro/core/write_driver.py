@@ -18,6 +18,7 @@ the paper's measured ~50/50 transition mix folded in.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Tuple
 
 import jax
@@ -139,22 +140,30 @@ def _calibrate_level(name: str, code: int, vdd: float, i_rel: float,
                      latency_ns=lat)
 
 
+@functools.lru_cache(maxsize=32)
 def default_driver(cfg: DriverConfig = DriverConfig()) -> Tuple[LevelSpec, ...]:
     return tuple(_calibrate_level(*p, cfg) for p in _LEVEL_PARAMS)
 
 
+@functools.lru_cache(maxsize=32)
 def level_table(cfg: DriverConfig = DriverConfig()) -> Dict[str, jax.Array]:
     """Levels as stacked arrays for fused tensor-level writes:
-    {wer01, wer10, e01, e10, lat}[4] indexed by the 2-bit priority code."""
+    {wer01, wer10, e01, e10, lat}[4] indexed by the 2-bit priority code.
+
+    Calibration is Python-float math, cached per config (one calibration
+    per process instead of one per ApproxStore instance) and forced to
+    compile-time evaluation so a first call from inside a jit trace cannot
+    leak tracers into the cache."""
     levels = default_driver(cfg)
     by_code = sorted(levels, key=lambda l: l.code)
-    return {
-        "wer01": jnp.asarray([l.wer_0to1 for l in by_code], jnp.float32),
-        "wer10": jnp.asarray([l.wer_1to0 for l in by_code], jnp.float32),
-        "e01": jnp.asarray([l.e_0to1_pj for l in by_code], jnp.float32),
-        "e10": jnp.asarray([l.e_1to0_pj for l in by_code], jnp.float32),
-        "lat": jnp.asarray([l.latency_ns for l in by_code], jnp.float32),
-    }
+    with jax.ensure_compile_time_eval():
+        return {
+            "wer01": jnp.asarray([l.wer_0to1 for l in by_code], jnp.float32),
+            "wer10": jnp.asarray([l.wer_1to0 for l in by_code], jnp.float32),
+            "e01": jnp.asarray([l.e_0to1_pj for l in by_code], jnp.float32),
+            "e10": jnp.asarray([l.e_1to0_pj for l in by_code], jnp.float32),
+            "lat": jnp.asarray([l.latency_ns for l in by_code], jnp.float32),
+        }
 
 
 def word_energy_pj(levels: Tuple[LevelSpec, ...], level_mix: Dict[int, float],

@@ -1,10 +1,15 @@
 """Public jit'd wrapper for the extent_write kernel.
 
-Handles dtype bitcasting (bf16/f16 pack 2 elements per uint32 lane, f32/int32
-map 1:1), padding to block multiples, level-table -> threshold conversion,
-and reduction of per-block stats. ``use_kernel=False`` routes to the ref
-oracle (same semantics) — the default on CPU hosts where only interpret-mode
-execution is available and speed doesn't matter.
+Handles dtype bitcasting (int8/uint8 pack 4 elements per uint32 lane,
+bf16/f16 pack 2, f32/int32 map 1:1), padding to block multiples,
+level-table -> threshold conversion, and reduction of per-block stats.
+``use_kernel=False`` routes to the ref oracle (same semantics) — the
+default on CPU hosts where only interpret-mode execution is available and
+speed doesn't matter.
+
+This module is kernel-internal plumbing: everything outside
+``repro/kernels`` and ``repro/memory`` goes through the backend registry in
+``repro.memory`` instead of calling ``extent_write`` directly.
 """
 from __future__ import annotations
 
@@ -43,11 +48,12 @@ def level_vectors(dtype, level: Priority,
         e01 = np.asarray(table["e01"])[codes]
         e10 = np.asarray(table["e10"])[codes]
         ebits = codes.shape[0]
-        if ebits == 16:  # two elements per uint32 lane: repeat the bit pattern
-            wer01 = np.concatenate([wer01, wer01])
-            wer10 = np.concatenate([wer10, wer10])
-            e01 = np.concatenate([e01, e01])
-            e10 = np.concatenate([e10, e10])
+        if ebits in (8, 16):  # 4 (or 2) elements per uint32 lane: tile the
+            reps = 32 // ebits  # per-element bit pattern across the lane
+            wer01 = np.tile(wer01, reps)
+            wer10 = np.tile(wer10, reps)
+            e01 = np.tile(e01, reps)
+            e10 = np.tile(e10, reps)
         to_thr = lambda w: (np.clip(w, 0.0, 1.0) * 2**32).astype(
             np.uint64).clip(0, 2**32 - 1).astype(np.uint32)
         return (jnp.asarray(to_thr(wer01)), jnp.asarray(to_thr(wer10)),
@@ -58,17 +64,26 @@ _level_vectors = level_vectors  # backwards-compatible alias
 
 
 def _to_lanes(x: jax.Array) -> Tuple[jax.Array, int]:
-    """Bitcast any 2/4-byte tensor into a flat uint32 lane vector."""
+    """Bitcast any 1/2/4-byte tensor into a flat uint32 lane vector
+    (little-endian element packing for the sub-word dtypes)."""
     nbytes = jnp.dtype(x.dtype).itemsize
     if nbytes == 4:
         u = jax.lax.bitcast_convert_type(x, jnp.uint32).reshape(-1)
         return u, x.size
-    assert nbytes == 2, x.dtype
-    u16 = jax.lax.bitcast_convert_type(x, jnp.uint16).reshape(-1)
-    if u16.size % 2:
-        u16 = jnp.concatenate([u16, jnp.zeros((1,), jnp.uint16)])
-    pair = u16.reshape(-1, 2).astype(jnp.uint32)
-    return pair[:, 0] | (pair[:, 1] << 16), x.size
+    if nbytes == 2:
+        u16 = jax.lax.bitcast_convert_type(x, jnp.uint16).reshape(-1)
+        if u16.size % 2:
+            u16 = jnp.concatenate([u16, jnp.zeros((1,), jnp.uint16)])
+        pair = u16.reshape(-1, 2).astype(jnp.uint32)
+        return pair[:, 0] | (pair[:, 1] << 16), x.size
+    assert nbytes == 1, x.dtype
+    u8 = jax.lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
+    pad = (-u8.size) % 4
+    if pad:
+        u8 = jnp.concatenate([u8, jnp.zeros((pad,), jnp.uint8)])
+    quad = u8.reshape(-1, 4).astype(jnp.uint32)
+    return (quad[:, 0] | (quad[:, 1] << 8) | (quad[:, 2] << 16)
+            | (quad[:, 3] << 24)), x.size
 
 
 def _from_lanes(u: jax.Array, shape, dtype) -> jax.Array:
@@ -76,10 +91,15 @@ def _from_lanes(u: jax.Array, shape, dtype) -> jax.Array:
     n = int(np.prod(shape))
     if nbytes == 4:
         return jax.lax.bitcast_convert_type(u[:n], dtype).reshape(shape)
-    lo = (u & 0xFFFF).astype(jnp.uint16)
-    hi = (u >> 16).astype(jnp.uint16)
-    u16 = jnp.stack([lo, hi], axis=-1).reshape(-1)[:n]
-    return jax.lax.bitcast_convert_type(u16, dtype).reshape(shape)
+    if nbytes == 2:
+        lo = (u & 0xFFFF).astype(jnp.uint16)
+        hi = (u >> 16).astype(jnp.uint16)
+        u16 = jnp.stack([lo, hi], axis=-1).reshape(-1)[:n]
+        return jax.lax.bitcast_convert_type(u16, dtype).reshape(shape)
+    assert nbytes == 1, dtype
+    u8 = jnp.stack([(u >> (8 * k)).astype(jnp.uint8) for k in range(4)],
+                   axis=-1).reshape(-1)[:n]
+    return jax.lax.bitcast_convert_type(u8, dtype).reshape(shape)
 
 
 def extent_write(

@@ -13,6 +13,12 @@ parsed from the optimized HLO. No arrays are ever allocated at full size.
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+  PYTHONPATH=src python -m repro.launch.dryrun --smoke-backends
+
+``--smoke-backends`` skips the compile sweep and instead drives one tiny
+EXTENT write through EVERY registered repro.memory backend (bf16 + int8,
+ragged shapes), cross-checking flip/energy parity — the CI tripwire for a
+backend-registration regression, cheap enough for the light lane.
 """
 import argparse
 import json
@@ -233,11 +239,45 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     return rec
 
 
+def smoke_backends() -> None:
+    """Tiny write through every registered memory backend + parity check."""
+    from repro import memory
+    from repro.core.priority import Priority
+    key = jax.random.PRNGKey(0)
+    cases = [
+        ("bf16", jax.random.normal(jax.random.PRNGKey(1), (33,)
+                                   ).astype(jnp.bfloat16)),
+        ("int8", jax.random.randint(jax.random.PRNGKey(2), (129,), -128,
+                                    128, jnp.int32).astype(jnp.int8)),
+    ]
+    for label, new in cases:
+        old = jnp.zeros_like(new)
+        flips, energy = {}, {}
+        for name in memory.available_backends():
+            stored, st = memory.write(key, old, new, level=Priority.LOW,
+                                      backend=name)
+            jax.block_until_ready(stored)
+            h = st.host_dict()
+            flips[name], energy[name] = h["bits_written"], h["energy_pj"]
+            print(f"OK backend={name:10s} dtype={label:5s} "
+                  f"flips={h['bits_written']:5d} E={h['energy_pj']:9.1f} pJ "
+                  f"errors={h['bit_errors']}")
+        modeled = [n for n in flips if n != "exact"]
+        assert len({flips[n] for n in modeled}) == 1, flips
+        assert max(energy[n] for n in modeled) - min(
+            energy[n] for n in modeled) <= 1e-4 * max(
+            energy[n] for n in modeled), energy
+    print(f"all {len(memory.available_backends())} backends OK")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--smoke-backends", action="store_true",
+                    help="smoke-run every registered repro.memory backend "
+                         "and exit (no compile sweep)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
@@ -249,6 +289,9 @@ def main():
     ap.add_argument("--remat", default="full",
                     choices=("full", "selective", "none"))
     args = ap.parse_args()
+    if args.smoke_backends:
+        smoke_backends()
+        return
     out_dir = Path(args.out)
     mesh_shape = (tuple(int(x) for x in args.mesh_shape.split("x"))
                   if args.mesh_shape else None)

@@ -4,7 +4,8 @@ Continuous batching over an arrival stream (the default):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
       --requests 6 --capacity 3 --arrival-every 2 --new-tokens 16 \
-      --quality chat=high [--no-extent] [--no-reduced]
+      --quality chat=high [--no-extent] [--no-reduced] \
+      [--backend oracle|lanes_ref|pallas|exact] [--soft-error-ber 1e-6]
 
 Monolithic one-batch mode (the pre-slot-pool engine path):
 
@@ -15,7 +16,10 @@ config for CPU hosts; on a pod the same engine runs under the production
 mesh with the serve_tp_only or serve_moe_2d residency strategies (see
 sharding/rules.py). ``--quality app=level`` tags an application block in
 the EXTENT table; requests cycling through that app inherit the level via
-the quality-controller handshake.
+the quality-controller handshake. ``--backend`` selects the write-path
+implementation from the ``repro.memory`` registry; ``--soft-error-ber``
+turns on the post-write retention-upset hook (hardened driver by default),
+surfaced as ``soft_strikes`` in the report.
 """
 from __future__ import annotations
 
@@ -26,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.priority import Priority
+from repro.memory import available_backends
 from repro.serve import (ContinuousScheduler, ServeConfig, ServingEngine,
                          synthetic_requests)
 
@@ -40,6 +45,14 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--no-extent", action="store_true")
+    ap.add_argument("--backend", default="lanes_ref",
+                    choices=available_backends(),
+                    help="repro.memory write-path backend")
+    ap.add_argument("--soft-error-ber", type=float, default=0.0,
+                    help="post-write retention-upset BER (0 = off)")
+    ap.add_argument("--soft-error-unhardened", action="store_true",
+                    help="disable the hardened driver's exponent/sign "
+                         "protection for the soft-error hook")
     ap.add_argument("--monolithic", action="store_true",
                     help="single fixed batch, no arrival stream")
     # arrival-stream simulation
@@ -61,6 +74,13 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
 
+    def serve_cfg(max_seq: int) -> ServeConfig:
+        return ServeConfig(
+            max_seq=max_seq, max_new_tokens=args.new_tokens,
+            extent_enabled=not args.no_extent, backend=args.backend,
+            soft_error_ber=args.soft_error_ber,
+            soft_error_hardened=not args.soft_error_unhardened)
+
     if args.monolithic:
         prompt = {"tokens": jax.random.randint(
             jax.random.PRNGKey(0), (args.batch, args.prompt_len), 0,
@@ -76,25 +96,26 @@ def main():
                 jnp.float32)
         max_seq = args.prompt_len + args.new_tokens + (
             cfg.num_image_tokens if cfg.family == "vlm" else 0)
-        eng = ServingEngine(cfg, ServeConfig(
-            max_seq=max_seq, max_new_tokens=args.new_tokens,
-            extent_enabled=not args.no_extent))
+        eng = ServingEngine(cfg, serve_cfg(max_seq))
         toks, report = eng.generate(prompt)
         print(f"generated {toks.shape} tokens; first row: "
               f"{[int(t) for t in toks[0][:8]]}...")
         if not args.no_extent:
             tot = report["total"]
-            print(f"KV write energy {tot['energy_pj']/1e6:.3f} uJ, "
+            print(f"KV write energy {tot['energy_pj']/1e6:.3f} uJ "
+                  f"(backend={args.backend}), "
                   f"skip-rate {tot['write_skip_rate']:.3f}, "
                   f"BER {tot['ber_realized']:.2e}")
+            if args.soft_error_ber > 0:
+                print(f"soft errors: {tot['soft_strikes']} strikes at "
+                      f"BER {args.soft_error_ber:.1e} "
+                      f"({'hardened' if not args.soft_error_unhardened else 'unhardened'} driver)")
         return
 
     # ----- continuous batching over a simulated arrival stream
     max_seq = args.prompt_len + args.new_tokens + (
         cfg.num_image_tokens if cfg.family == "vlm" else 0)
-    eng = ServingEngine(cfg, ServeConfig(
-        max_seq=max_seq, max_new_tokens=args.new_tokens,
-        extent_enabled=not args.no_extent))
+    eng = ServingEngine(cfg, serve_cfg(max_seq))
     apps = [a for a in args.apps.split(",") if a] or [None]
     for spec in args.quality:
         app, _, level = spec.partition("=")
@@ -120,9 +141,14 @@ def main():
     if not args.no_extent:
         tot = report["total"]
         tbl = report["extent_table"]
-        print(f"KV write energy {tot['energy_pj']/1e6:.3f} uJ, "
+        print(f"KV write energy {tot['energy_pj']/1e6:.3f} uJ "
+              f"(backend={args.backend}), "
               f"skip-rate {tot['write_skip_rate']:.3f}, "
               f"BER {tot['ber_realized']:.2e}")
+        if args.soft_error_ber > 0:
+            print(f"soft errors: {tot['soft_strikes']} strikes at "
+                  f"BER {args.soft_error_ber:.1e} "
+                  f"({'hardened' if not args.soft_error_unhardened else 'unhardened'} driver)")
         print(f"EXTENT table: {tbl['hits']} hits / {tbl['misses']} misses "
               f"(hit rate {tbl['hit_rate']:.2f}), "
               f"{tbl['evictions']} evictions")

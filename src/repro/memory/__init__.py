@@ -1,0 +1,26 @@
+"""repro.memory — the unified EXTENT write-path substrate (Fig. 11 layer).
+
+The ONE public API between applications (serving engine, checkpointer,
+gradient compression, examples, benchmarks) and the approximate STT-RAM
+write circuit:
+
+  * ``WritePlan``      — resolve-once policy: per-leaf levels + driver
+                         vectors + RNG layout for one pytree shape;
+  * ``write``          — single-tensor write through a named backend;
+  * backends registry  — ``"oracle"`` / ``"lanes_ref"`` / ``"pallas"`` /
+                         ``"exact"`` behind one ``Backend`` protocol
+                         (``register_backend`` to extend);
+  * ``WriteStats``     — unified device-resident stats pytree, one schema
+                         for every backend;
+  * ``MemoryRegion``   — pytree-native stateful region (the ApproxStore
+                         successor).
+
+Nothing outside this package and ``repro/kernels`` touches the kernel ops
+or carries ``use_kernel``/``interpret`` booleans.
+"""
+from repro.memory.backends import (  # noqa: F401
+    Backend, LeafVectors, available_backends, get_backend, register_backend,
+)
+from repro.memory.plan import WritePlan, leaf_vectors, write  # noqa: F401
+from repro.memory.region import MemoryRegion  # noqa: F401
+from repro.memory.stats import WriteStats  # noqa: F401

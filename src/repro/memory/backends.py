@@ -1,0 +1,163 @@
+"""Pluggable write-path backends + the string-keyed registry.
+
+The paper's Fig. 11 puts ONE controller between applications and the
+STT-RAM array; this module is that boundary for the reproduction. Every
+implementation of the EXTENT write (the eager bit-unpacked oracle, the
+lane-packed pure-jnp reference, the Pallas kernel, the exact passthrough)
+is a ``Backend`` behind one protocol:
+
+    stored, stats = backend.leaf_write(key, old, new, leaf_vectors)
+
+where ``leaf_vectors`` is the resolve-once operand bundle built by
+``repro.memory.plan.leaf_vectors`` (per-bit WER/energy/latency for the
+oracle, lane-packed thresholds for the kernel paths). Because every driver
+parameter is an array OPERAND, swapping priorities/floors/backends never
+retraces the surrounding jit.
+
+Selection is by name (``get_backend("lanes_ref")``) — the registry replaces
+every scattered ``use_kernel=``/``interpret=`` boolean that used to be
+duplicated across serve/train/examples/benchmarks, and is trivially
+extensible: register a new name, and every consumer (ServeConfig, the
+launchers, the benchmarks, the CI smoke lane) can reach it.
+
+Parity contract (tests/test_extent_parity.py): flips and energy are
+RNG-independent, so ALL backends agree on them bit-exactly; realized error
+counts differ only by RNG stream (oracle: ``jax.random``; lanes/pallas: the
+shared counter hash — those two are bit-identical to each other).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import approx_store as _oracle
+from repro.memory.stats import WriteStats
+
+
+class LeafVectors(NamedTuple):
+    """Resolved driver operands for one (dtype, effective level) pair.
+
+    Per-bit-plane vectors drive the oracle; the lane-packed quadruple
+    (``thr01``..``le10``) drives the kernel paths and is ``None`` for
+    element widths without lane packing (the backends then fall back to the
+    oracle data path, still jit-resident)."""
+    wer01: jax.Array            # (ebits,) f32 failure prob per bit, 0->1
+    wer10: jax.Array            # (ebits,) f32 failure prob per bit, 1->0
+    eb01: jax.Array             # (ebits,) f32 energy per flip (pJ), 0->1
+    eb10: jax.Array             # (ebits,) f32 energy per flip (pJ), 1->0
+    lat: jax.Array              # (ebits,) f32 driver latency per bit (ns)
+    lat_max: jax.Array          # () f32: slowest driver in this plan entry
+    thr01: Optional[jax.Array]  # (lane_bits,) u32 thresholds (wer * 2^32)
+    thr10: Optional[jax.Array]
+    le01: Optional[jax.Array]   # (lane_bits,) f32 lane-layout energies
+    le10: Optional[jax.Array]
+
+
+class Backend(Protocol):
+    """One EXTENT write-path implementation behind the substrate API."""
+    name: str
+
+    def leaf_write(self, key: jax.Array, old: jax.Array, new: jax.Array,
+                   lv: LeafVectors) -> Tuple[jax.Array, WriteStats]:
+        """Write ``new`` over ``old`` (same shape/dtype); return the stored
+        tensor and device-resident unified WriteStats. Must be jit-safe."""
+        ...
+
+
+class OracleBackend:
+    """Eager bit-unpacked reference (``jax.random`` RNG stream): draws one
+    uniform per (element, bit) — the 16-32x write-amplified ground truth
+    every other backend's accounting is asserted against."""
+    name = "oracle"
+
+    def leaf_write(self, key, old, new, lv: LeafVectors):
+        stored, d = _oracle.oracle_write(key, old, new, lv.wer01, lv.wer10,
+                                         lv.eb01, lv.eb10, lv.lat)
+        return stored, WriteStats.for_bits(
+            old.size * jnp.dtype(old.dtype).itemsize * 8,
+            energy_pj=d["energy_pj"], latency_ns=d["latency_ns"],
+            flips01=d["flips01"], flips10=d["flips10"], errors=d["errors"])
+
+
+class LaneBackend:
+    """Lane-packed fused path (counter RNG over flat lane indices):
+    ``use_kernel=False`` is the pure-jnp lane reference, ``use_kernel=True``
+    the Pallas kernel. ``interpret=None`` resolves at construction: the
+    interpreter on CPU hosts, native execution elsewhere."""
+
+    def __init__(self, name: str, use_kernel: bool,
+                 interpret: Optional[bool] = None):
+        self.name = name
+        self.use_kernel = use_kernel
+        if interpret is None:
+            interpret = jax.default_backend() == "cpu"
+        self.interpret = interpret
+        self._oracle = OracleBackend()
+
+    def leaf_write(self, key, old, new, lv: LeafVectors):
+        if lv.thr01 is None:  # no lane packing for this element width
+            return self._oracle.leaf_write(key, old, new, lv)
+        from repro.kernels.extent_write import ops as xops
+        stored, st = xops.extent_write(
+            key, old, new, vectors=(lv.thr01, lv.thr10, lv.le01, lv.le10),
+            use_kernel=self.use_kernel, interpret=self.interpret)
+        flips = st["flips01"] + st["flips10"]
+        return stored, WriteStats.for_bits(
+            old.size * jnp.dtype(old.dtype).itemsize * 8,
+            energy_pj=st["energy_pj"],
+            # lane stats are reduced per block, not per bit plane: report
+            # the plan entry's slowest driver whenever anything flipped
+            latency_ns=jnp.where(flips > 0, lv.lat_max, 0.0),
+            flips01=st["flips01"], flips10=st["flips10"],
+            errors=st["errors"])
+
+
+class ExactBackend:
+    """Passthrough: no approximation modeling at all. ``stored == new``,
+    zero flips/energy/errors; only ``bits_total`` (the addressed traffic)
+    is counted so reports stay dimensionally comparable."""
+    name = "exact"
+
+    def leaf_write(self, key, old, new, lv: LeafVectors):
+        del key, lv
+        assert old.shape == new.shape and old.dtype == new.dtype
+        bits = new.size * jnp.dtype(new.dtype).itemsize * 8
+        return new, WriteStats.for_bits(bits)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES: Dict[str, Callable[[], Backend]] = {}
+_INSTANCES: Dict[str, Backend] = {}
+
+
+def register_backend(name: str, factory: Callable[[], Backend]) -> None:
+    """Install (or override) a backend under ``name``. Factories are
+    instantiated lazily, once, on first ``get_backend``."""
+    _FACTORIES[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def get_backend(name: str) -> Backend:
+    if name not in _FACTORIES:
+        raise KeyError(
+            f"unknown memory backend {name!r}; registered: "
+            f"{', '.join(available_backends())}")
+    if name not in _INSTANCES:
+        _INSTANCES[name] = _FACTORIES[name]()
+    return _INSTANCES[name]
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_FACTORIES))
+
+
+register_backend("oracle", OracleBackend)
+register_backend("lanes_ref", lambda: LaneBackend("lanes_ref",
+                                                  use_kernel=False))
+register_backend("pallas", lambda: LaneBackend("pallas", use_kernel=True))
+register_backend("exact", ExactBackend)

@@ -1,0 +1,310 @@
+"""WritePlan: resolve-once write policy for a pytree of memory regions.
+
+The plan is the reproduction's EXTENT table row + 4-driver bank for one
+cache/state *shape*: built exactly once (from abstract leaves — no device
+data needed), it captures
+
+  * which leaves go through the approximate driver and at which static
+    level (the pytree policy, e.g. K@MID / V@LOW / recurrent-state EXACT),
+  * the calibrated per-bit driver vectors for every (leaf, quality-floor)
+    combination — plain array OPERANDS of the compiled write, so an
+    ``ExtentTable``/``QualityController`` floor change between bursts swaps
+    constants and NEVER retraces,
+  * the RNG stream layout: leaf ``i`` folds ``i`` into the step key, and
+    the lane backends hash FLAT lane indices, so results are invariant to
+    block partitioning (the bit-parity contract continuous batching rests
+    on — see tests/test_extent_parity.py),
+  * the column-scoped decode write: leaves with a sequence axis write only
+    the ring column at ``pos % C`` per slot — O(token) lane work per decode
+    step instead of O(cache), with accounting identical to the full diff
+    (everything outside the column is bit-unchanged => zero under CMP),
+  * an optional post-write soft-error hook (retention upsets at
+    ``soft_error_ber``; the hardened driver protects sign/exponent bits),
+    surfaced through ``WriteStats.soft_strikes``.
+
+Composition rule for floors: effective level = max(static policy, floor) —
+quality hints RAISE fidelity above the static policy, never lower it, and
+EXACT-pinned leaves are not in the plan at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import write_driver
+from repro.core.approx_store import inject_soft_errors
+from repro.core.priority import (Priority, bitplane_priorities, bits_of,
+                                 kv_cache_policy, uint_type)
+from repro.memory.backends import Backend, LeafVectors, get_backend
+from repro.memory.stats import WriteStats
+
+#: RNG sub-stream offset for the soft-error hook: write keys fold in the
+#: leaf index directly, the hook folds in _SOFT_KEY_OFFSET + index.
+_SOFT_KEY_OFFSET = 1_000_003
+
+
+def leaf_vectors(dtype, level, cfg: Optional[write_driver.DriverConfig] = None,
+                 *, per_bit: bool = True) -> LeafVectors:
+    """Resolve one (element dtype, effective level) pair to driver operands.
+
+    lru-cached and forced to compile-time evaluation (driver calibration is
+    Python-float code), so it is safe to call while tracing an enclosing
+    jit — the resolve-once half of the WritePlan contract."""
+    return _leaf_vectors(jnp.dtype(dtype), Priority.coerce(level), cfg,
+                         per_bit)
+
+
+@functools.lru_cache(maxsize=512)
+def _leaf_vectors(dtype, level: Priority,
+                  cfg: Optional[write_driver.DriverConfig],
+                  per_bit: bool) -> LeafVectors:
+    with jax.ensure_compile_time_eval():
+        table = write_driver.level_table(cfg or write_driver.DriverConfig())
+        tb = {k: np.asarray(v) for k, v in table.items()}
+        nbits = bits_of(dtype)
+        if per_bit:
+            codes = bitplane_priorities(dtype, level)
+        else:
+            codes = np.full((nbits,), int(level), np.int32)
+        lat = tb["lat"][codes]
+        lanes: Tuple[Optional[jax.Array], ...] = (None, None, None, None)
+        if per_bit and dtype.itemsize in (1, 2, 4):
+            from repro.kernels.extent_write import ops as xops
+            lanes = xops.level_vectors(dtype, level, cfg)
+        return LeafVectors(
+            wer01=jnp.asarray(tb["wer01"][codes], jnp.float32),
+            wer10=jnp.asarray(tb["wer10"][codes], jnp.float32),
+            eb01=jnp.asarray(tb["e01"][codes], jnp.float32),
+            eb10=jnp.asarray(tb["e10"][codes], jnp.float32),
+            lat=jnp.asarray(lat, jnp.float32),
+            lat_max=jnp.asarray(float(lat.max()), jnp.float32),
+            thr01=lanes[0], thr10=lanes[1], le01=lanes[2], le10=lanes[3])
+
+
+def _default_approx_if(leaf, tag: Priority) -> bool:
+    """Engine rule: floating leaves below EXACT go through the approximate
+    driver; integer/control leaves and EXACT-pinned leaves bypass it."""
+    return jnp.issubdtype(leaf.dtype, jnp.floating) and tag != Priority.EXACT
+
+
+def _soft_error_hook(key, x, ber: float, hardened: bool):
+    """Post-write retention upsets + the strike count (popcount of the
+    flipped-bit mask)."""
+    y = inject_soft_errors(key, x, ber, protect_exponent=hardened)
+    ut = uint_type(x.dtype)
+    d = (jax.lax.bitcast_convert_type(x, ut)
+         ^ jax.lax.bitcast_convert_type(y, ut))
+    strikes = jnp.sum(jax.lax.population_count(d).astype(jnp.int32),
+                      dtype=jnp.int32)
+    return y, strikes
+
+
+@dataclasses.dataclass
+class WritePlan:
+    """Resolved write policy for one pytree structure (see module doc)."""
+    backend: Backend
+    treedef: Any
+    leaf_levels: Tuple[Optional[Priority], ...]
+    leaf_seq_axis: Tuple[Optional[int], ...]
+    batch_axis: int = 1
+    soft_error_ber: float = 0.0
+    soft_error_hardened: bool = True
+    floor_vectors: Dict[Priority, Tuple[Optional[LeafVectors], ...]] = (
+        dataclasses.field(default_factory=dict))
+    _jit_write: Any = dataclasses.field(default=None, repr=False,
+                                        compare=False)
+
+    # ------------------------------------------------------------ construction
+    @classmethod
+    def for_tree(cls, tree: Any, *,
+                 policy: Callable[..., Any] = kv_cache_policy,
+                 backend: str | Backend = "lanes_ref",
+                 axes: Any = None,
+                 batch_axis: int = 1,
+                 soft_error_ber: float = 0.0,
+                 soft_error_hardened: bool = True,
+                 driver_cfg: Optional[write_driver.DriverConfig] = None,
+                 approx_if: Callable[[Any, Priority], bool]
+                 = _default_approx_if) -> "WritePlan":
+        """Resolve ``policy`` over ``tree`` (arrays or ShapeDtypeStructs —
+        only structure/shape/dtype are read) into a plan.
+
+        ``axes``: optional same-structure tree of logical-axis tuples (the
+        model API's ``cache_axes()``); leaves whose tuple contains
+        ``"kv_seq"`` get the column-scoped decode write. ``backend`` is a
+        registry name or an instance.
+        """
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        levels = []
+        for path, leaf in flat:
+            tag = Priority.coerce(policy(path, leaf))
+            levels.append(tag if approx_if(leaf, tag) else None)
+        if axes is not None:
+            flat_axes = treedef.flatten_up_to(axes)
+            seq_axis = tuple(
+                ax.index("kv_seq")
+                if isinstance(ax, tuple) and "kv_seq" in ax else None
+                for ax in flat_axes)
+        else:
+            seq_axis = (None,) * len(flat)
+        floor_vectors = {
+            floor: tuple(
+                leaf_vectors(leaf.dtype, max(lvl, floor), driver_cfg)
+                if lvl is not None else None
+                for (_, leaf), lvl in zip(flat, levels))
+            for floor in Priority}
+        be = backend if not isinstance(backend, str) else get_backend(backend)
+        return cls(backend=be, treedef=treedef, leaf_levels=tuple(levels),
+                   leaf_seq_axis=seq_axis, batch_axis=batch_axis,
+                   soft_error_ber=soft_error_ber,
+                   soft_error_hardened=soft_error_hardened,
+                   floor_vectors=floor_vectors)
+
+    # -------------------------------------------------------------- operands
+    def vectors_for(self, floor: Priority = Priority.LOW
+                    ) -> Tuple[Optional[LeafVectors], ...]:
+        """Per-leaf driver-vector operands for one quality floor. LOW is
+        the identity floor: the static policy alone. The tuples share one
+        pytree structure across floors, so swapping them between compiled
+        calls never retraces."""
+        return self.floor_vectors[Priority.coerce(floor)]
+
+    # ----------------------------------------------------------- write paths
+    def _leaf_write(self, key, i: int, old, new,
+                    lv: LeafVectors) -> Tuple[jax.Array, WriteStats]:
+        """One leaf through the backend + the optional soft-error hook —
+        the single place the per-leaf write protocol (RNG fold-in schedule
+        included) lives."""
+        stored, st = self.backend.leaf_write(jax.random.fold_in(key, i),
+                                             old, new, lv)
+        if self.soft_error_ber > 0.0:
+            k_soft = jax.random.fold_in(key, _SOFT_KEY_OFFSET + i)
+            stored, strikes = _soft_error_hook(
+                k_soft, stored, self.soft_error_ber,
+                self.soft_error_hardened)
+            st = dataclasses.replace(st,
+                                     soft_strikes=st.soft_strikes + strikes)
+        return stored, st
+
+    def write(self, key, old_tree: Any, new_tree: Any,
+              vectors: Optional[Sequence] = None
+              ) -> Tuple[Any, WriteStats]:
+        """Jit-resident diff-write of a full tree (or a row subset with the
+        same structure); returns (stored_tree, WriteStats). ``vectors`` is
+        a per-flat-leaf operand tuple, normally from ``vectors_for``."""
+        if vectors is None:
+            vectors = self.vectors_for(Priority.LOW)
+        flat_old, treedef = jax.tree.flatten(old_tree)
+        flat_new = treedef.flatten_up_to(new_tree)
+        stored = []
+        acc = WriteStats.zero()
+        for i, (o, n, lvl) in enumerate(zip(flat_old, flat_new,
+                                            self.leaf_levels)):
+            if lvl is None:
+                stored.append(n)  # EXACT fast path (recurrent states, ints)
+                continue
+            s, st = self._leaf_write(key, i, o, n, vectors[i])
+            stored.append(s)
+            acc = acc + st
+        return treedef.unflatten(stored), acc
+
+    def write_columns(self, key, old_tree: Any, new_tree: Any,
+                      pos: jax.Array,
+                      vectors: Optional[Sequence] = None
+                      ) -> Tuple[Any, WriteStats]:
+        """Column-scoped decode diff-write: leaves with a sequence axis
+        write only the ring column at ``pos % C`` (per slot along
+        ``batch_axis``); other approximate leaves fall back to the full
+        diff. Flip/energy stats are identical to ``write`` — the rest of
+        the tree is bit-unchanged after a decode step, so CMP contributes
+        exactly zero there — but the per-step cost drops from O(cache) to
+        O(token) lane work. ``pos`` is the (B,) position vector."""
+        if vectors is None:
+            vectors = self.vectors_for(Priority.LOW)
+        flat_old, treedef = jax.tree.flatten(old_tree)
+        flat_new = treedef.flatten_up_to(new_tree)
+        stored = []
+        acc = WriteStats.zero()
+        for i, (o, n, lvl) in enumerate(zip(flat_old, flat_new,
+                                            self.leaf_levels)):
+            if lvl is None:
+                stored.append(n)
+                continue
+            ax = self.leaf_seq_axis[i]
+            if ax is None:
+                s, st = self._leaf_write(key, i, o, n, vectors[i])
+                stored.append(s)
+                acc = acc + st
+                continue
+            C = o.shape[ax]
+            ishape = [1] * o.ndim
+            ishape[self.batch_axis] = pos.shape[0]
+            idx = (pos % C).reshape(ishape)
+            gshape = o.shape[:ax] + (1,) + o.shape[ax + 1:]
+            idx_g = jnp.broadcast_to(idx, gshape)
+            o_col = jnp.take_along_axis(o, idx_g, axis=ax)
+            n_col = jnp.take_along_axis(n, idx_g, axis=ax)
+            s_col, st = self._leaf_write(key, i, o_col, n_col, vectors[i])
+            hit = jax.lax.broadcasted_iota(jnp.int32, o.shape, ax) == idx
+            stored.append(jnp.where(hit, s_col, n))
+            acc = acc + st
+        return treedef.unflatten(stored), acc
+
+    def jitted_write(self):
+        """Compiled ``write`` (cached on the plan, shared by every
+        MemoryRegion that replaces itself functionally around this plan)."""
+        if self._jit_write is None:
+            self._jit_write = jax.jit(
+                lambda k, o, n, v: self.write(k, o, n, v))
+        return self._jit_write
+
+    # ------------------------------------------------------- shape metadata
+    def approx_bits(self, tree: Any) -> int:
+        """Total bits of the approximate leaves — static shape metadata."""
+        flat = jax.tree.leaves(tree)
+        return sum(l.size * bits_of(l.dtype)
+                   for l, lvl in zip(flat, self.leaf_levels)
+                   if lvl is not None)
+
+    def decode_bits(self, tree: Any) -> int:
+        """Approximate bits one decode step addresses: the written ring
+        column per sequence-axis leaf, whole leaves otherwise."""
+        flat = jax.tree.leaves(tree)
+        total = 0
+        for l, lvl, ax in zip(flat, self.leaf_levels, self.leaf_seq_axis):
+            if lvl is None:
+                continue
+            sz = l.size if ax is None else l.size // l.shape[ax]
+            total += sz * bits_of(l.dtype)
+        return total
+
+
+# ---------------------------------------------------------------------------
+# single-tensor convenience entry (examples, checkpoints, benchmarks, tests)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _leaf_jit(backend_obj: Backend):
+    # keyed on the backend INSTANCE, not its registry name: re-registering
+    # a name makes get_backend hand out a fresh instance, which gets a
+    # fresh jit here — an override is never shadowed by a stale closure
+    return jax.jit(backend_obj.leaf_write)
+
+
+def write(key, old, new, *, level: Priority | int | str = Priority.LOW,
+          backend: str = "lanes_ref",
+          driver_cfg: Optional[write_driver.DriverConfig] = None
+          ) -> Tuple[jax.Array, WriteStats]:
+    """Unified single-tensor EXTENT write through a registered backend.
+
+    Returns (stored, WriteStats). The level resolves through the same
+    ``leaf_vectors`` cache as WritePlan, and the vectors ride as operands
+    of one jitted call per backend — a level sweep reuses one compiled
+    executable."""
+    lv = leaf_vectors(old.dtype, level, driver_cfg)
+    return _leaf_jit(get_backend(backend))(key, old, new, lv)

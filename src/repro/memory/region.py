@@ -1,0 +1,76 @@
+"""MemoryRegion: a pytree-native approximate memory region.
+
+Replaces the seed's name->array-dict ``ApproxStore`` (now a deprecation
+shim): a region owns one pytree of device tensors, one resolve-once
+``WritePlan``, and one device-resident cumulative ``WriteStats``. Usage is
+functional:
+
+    region = MemoryRegion.create({"kv": {"k": k0, "v": v0}},
+                                 level=Priority.LOW, backend="lanes_ref")
+    region = region.write(key, new_tree)             # diff-write, on device
+    ...
+    report = region.report()                         # the ONE host sync
+
+Every write diffs against the currently stored bits (CMP redundant-write
+elimination at full-tree granularity), goes through the plan's registered
+backend, and accumulates stats on device — nothing crosses to the host
+until ``report()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.core.priority import Priority
+from repro.memory.plan import WritePlan
+from repro.memory.stats import WriteStats
+
+
+@dataclasses.dataclass
+class MemoryRegion:
+    plan: WritePlan
+    data: Any
+    stats: WriteStats
+
+    @classmethod
+    def create(cls, data: Any, *,
+               level: Priority | int | str = Priority.LOW,
+               policy: Optional[Callable] = None,
+               backend: str = "lanes_ref",
+               soft_error_ber: float = 0.0,
+               soft_error_hardened: bool = True) -> "MemoryRegion":
+        """Build a region around ``data`` (a pytree of arrays).
+
+        ``level`` is the uniform tag used when no ``policy`` is given
+        (EXACT leaves bypass the approximate driver entirely, matching the
+        paper's untagged-data default); ``policy(path, leaf)`` overrides
+        per leaf.
+        """
+        lvl = Priority.coerce(level)
+        pol = policy if policy is not None else (lambda path, leaf: lvl)
+        plan = WritePlan.for_tree(
+            data, policy=pol, backend=backend,
+            soft_error_ber=soft_error_ber,
+            soft_error_hardened=soft_error_hardened,
+            approx_if=lambda leaf, tag: tag != Priority.EXACT)
+        return cls(plan=plan, data=data, stats=WriteStats.zero())
+
+    def write(self, key: jax.Array, new_tree: Any,
+              floor: Priority = Priority.LOW) -> "MemoryRegion":
+        """Diff-write ``new_tree`` over the stored bits; returns the new
+        region (same plan, one compiled executable shared across writes)."""
+        stored, st = self.plan.jitted_write()(
+            key, self.data, new_tree, self.plan.vectors_for(floor))
+        return dataclasses.replace(self, data=stored,
+                                   stats=self.stats + st)
+
+    def read(self) -> Any:
+        return self.data
+
+    def report(self) -> Dict[str, Any]:
+        """Cumulative accounting — the single device->host sync point."""
+        out = self.stats.host_dict()
+        out["backend"] = self.plan.backend.name
+        return out

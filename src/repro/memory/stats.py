@@ -1,0 +1,117 @@
+"""Unified, device-resident write statistics for the memory substrate.
+
+ONE schema for every backend (oracle, lanes_ref, pallas, exact): a frozen
+pytree dataclass of 0-d device arrays that
+
+  * lives inside jit — the serving burst carries a ``WriteStats`` through
+    ``lax.scan`` and adds one per fused write step;
+  * reduces losslessly across leaves/slots/steps with ``+`` (counters and
+    energy sum; latency is a max — parallel driver banks are bounded by the
+    slowest used driver, paper Table 1 semantics);
+  * crosses to the host exactly once, via ``jax.device_get`` /
+    ``host_dict()``, when a report is assembled.
+
+``soft_strikes`` counts post-write retention upsets injected by the
+optional soft-error hook of ``WritePlan`` (zero when the hook is off), so
+the schema is identical whether or not the hook runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: bits_total accumulates as TWO int32 limbs (hi * 2^30 + lo): a single f32
+#: running total silently stops growing once it passes ~2^24x the per-write
+#: increment (a long serving run writes terabits), and int64 is unavailable
+#: without jax x64. Limb arithmetic keeps the count exact to 2^61 bits.
+_LIMB = 1 << 30
+
+
+def _bits_limbs(bits: int) -> Tuple[jax.Array, jax.Array]:
+    """Static per-write bit count -> (hi, lo) int32 limb constants."""
+    hi, lo = divmod(int(bits), _LIMB)
+    return jnp.asarray(hi, jnp.int32), jnp.asarray(lo, jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class WriteStats:
+    energy_pj: jax.Array    # f32: realized write energy
+    latency_ns: jax.Array   # f32: slowest used driver (max-reduced)
+    flips01: jax.Array      # i32: 0->1 writes (P->AP, the expensive ones)
+    flips10: jax.Array      # i32: 1->0 writes
+    errors: jax.Array       # i32: failed flips (bit kept its old value)
+    soft_strikes: jax.Array  # i32: post-write retention upsets (hook)
+    bits_hi: jax.Array      # i32: addressed element bits, high limb (2^30s)
+    bits_lo: jax.Array      # i32: addressed element bits, low limb
+
+    @classmethod
+    def zero(cls) -> "WriteStats":
+        z32 = jnp.zeros((), jnp.float32)
+        zi = jnp.zeros((), jnp.int32)
+        return cls(energy_pj=z32, latency_ns=z32, flips01=zi, flips10=zi,
+                   errors=zi, soft_strikes=zi, bits_hi=zi, bits_lo=zi)
+
+    @classmethod
+    def for_bits(cls, bits: int, **kw) -> "WriteStats":
+        """Zero stats carrying a static addressed-bit count; backends
+        override the realized fields via keyword arguments."""
+        hi, lo = _bits_limbs(bits)
+        return dataclasses.replace(cls.zero(), bits_hi=hi, bits_lo=lo, **kw)
+
+    def __add__(self, other: "WriteStats") -> "WriteStats":
+        # each operand's lo limb is < 2^30 by construction, so the sum
+        # fits int32; normalize the single possible carry
+        lo = self.bits_lo + other.bits_lo
+        carry = (lo >= _LIMB).astype(jnp.int32)
+        return WriteStats(
+            energy_pj=self.energy_pj + other.energy_pj,
+            latency_ns=jnp.maximum(self.latency_ns, other.latency_ns),
+            flips01=self.flips01 + other.flips01,
+            flips10=self.flips10 + other.flips10,
+            errors=self.errors + other.errors,
+            soft_strikes=self.soft_strikes + other.soft_strikes,
+            bits_hi=self.bits_hi + other.bits_hi + carry,
+            bits_lo=lo - carry * _LIMB,
+        )
+
+    @property
+    def bits_written(self) -> jax.Array:
+        return self.flips01 + self.flips10
+
+    @property
+    def bits_total(self):
+        """Recombined addressed-bit count. Exact (float64/Python) on
+        host-side instances; f32 under a trace — prefer the limbs or
+        ``host_dict()`` when exactness matters at scale."""
+        return self.bits_hi * float(_LIMB) + self.bits_lo
+
+    def host_dict(self) -> Dict[str, Any]:
+        """Sync to the host (the ONE transfer) and derive the report
+        quantities. Idempotent on already-synced (numpy) instances."""
+        h = jax.device_get(self)
+        bits_written = int(h.flips01) + int(h.flips10)
+        bits_total = int(h.bits_hi) * _LIMB + int(h.bits_lo)
+        return {
+            "energy_pj": float(h.energy_pj),
+            "latency_ns": float(h.latency_ns),
+            "flips01": int(h.flips01),
+            "flips10": int(h.flips10),
+            "bits_written": bits_written,
+            "bits_total": bits_total,
+            "bit_errors": int(h.errors),
+            "soft_strikes": int(h.soft_strikes),
+            "write_skip_rate": (1.0 - bits_written / bits_total
+                                if bits_total else 0.0),
+            "ber_realized": int(h.errors) / max(1, bits_written),
+        }
+
+
+jax.tree_util.register_dataclass(
+    WriteStats,
+    data_fields=["energy_pj", "latency_ns", "flips01", "flips10", "errors",
+                 "soft_strikes", "bits_hi", "bits_lo"],
+    meta_fields=[],
+)

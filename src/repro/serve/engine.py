@@ -3,8 +3,8 @@
 The KV cache is the serving system's LLC: the highest-volume, error-tolerant
 write stream (the paper's Fig. 13 analogue — decode writes one fresh KV
 entry per layer per token, forever). EXTENT integration exploits a clean
-identity: applying ``approx_write(old_cache, new_cache)`` after a decode
-step is *exactly* the paper's write semantics —
+identity: applying the approximate write to (old_cache, new_cache) after a
+decode step is *exactly* the paper's write semantics —
 
   * untouched slots are bit-identical -> CMP redundant-write elimination:
     zero energy, zero error risk;
@@ -16,16 +16,20 @@ Priority policy: K at MID (errors perturb attention patterns), V at LOW
 (errors only perturb the payload), recurrent/conv states EXACT (errors
 persist in the recurrence — DESIGN.md §4).
 
+The whole write path lives behind the ``repro.memory`` substrate: the
+engine resolves ONE ``WritePlan`` for its cache shape at construction
+(static policy + per-floor driver vectors + RNG layout, resolved exactly
+once) and selects the implementation by ``ServeConfig.backend`` — a
+registry name (``"oracle"`` / ``"lanes_ref"`` / ``"pallas"`` / ``"exact"``)
+instead of the old scattered kernel/interpret boolean pairs.
+
 The write is **jit-resident and scan-resident**: a decode *burst* of n
 tokens is ONE compiled call — ``jax.lax.scan`` over the fused
 ``decode -> cache diff-write -> sampling -> stats accumulation`` step —
-with the diff-write routed through the lane-packed path in
-``repro.kernels.extent_write`` (``ServeConfig.use_kernel`` selects the
-Pallas kernel vs. the pure-jnp lane reference; ``interpret`` runs the
-kernel through the Pallas interpreter on CPU hosts). Per-write stats are
-pytree *outputs* of the compiled burst, accumulated into 0-d device arrays
-and synced to the ``StepEnergyMeter`` exactly once per ``generate()`` —
-the token loop performs zero device->host transfers.
+with per-write stats accumulated into ONE device-resident
+``repro.memory.WriteStats`` and synced to the ``StepEnergyMeter`` exactly
+once per ``generate()`` — the token loop performs zero device->host
+transfers.
 
 Continuous batching rides on three extensions, all engineered so that the
 lockstep case (every slot admitted together, pool shape == batch shape)
@@ -49,19 +53,18 @@ stays **bit-identical** to the monolithic path:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.approx_store import approx_write_lanes, approx_write_with_stats
-from repro.core.energy_model import (StepEnergyMeter, add_device_stats,
-                                     add_slot_stats, zero_device_stats,
+from repro.core.approx_store import approx_write_with_stats
+from repro.core.energy_model import (StepEnergyMeter, add_slot_stats,
                                      zero_slot_stats)
 from repro.core.extent_table import QualityController
-from repro.core.priority import Priority, bits_of, kv_cache_policy
-from repro.kernels.extent_write import level_vectors
+from repro.core.priority import Priority, kv_cache_policy
+from repro.memory import WritePlan, WriteStats
 from repro.models import ModelApi, get_model
 
 #: every family's cache leaves carry the request/slot dimension at axis 1
@@ -77,13 +80,17 @@ class ServeConfig:
     greedy: bool = True
     temperature: float = 1.0
     seed: int = 0
-    # EXTENT write-path backend: the Pallas kernel (use_kernel=True) or the
-    # pure-jnp lane reference. On CPU hosts the kernel only runs through the
-    # Pallas interpreter (interpret=True, correctness-mode); the lane ref is
-    # the fast jit-resident default there. On TPU set use_kernel=True,
-    # interpret=False.
-    use_kernel: bool = False
-    interpret: bool = True
+    # EXTENT write-path backend: a repro.memory registry name. "lanes_ref"
+    # (pure-jnp lane path) is the fast jit-resident default on CPU hosts;
+    # "pallas" selects the kernel (auto-interpret on CPU, native on TPU);
+    # "oracle" is the eager bit-unpacked reference; "exact" disables the
+    # approximation model while keeping the data path.
+    backend: str = "lanes_ref"
+    # optional post-write retention-upset hook (paper §III): bit-flip BER
+    # applied to freshly stored cache bits; the hardened driver protects
+    # sign/exponent planes. Surfaced as soft_strikes in the serve report.
+    soft_error_ber: float = 0.0
+    soft_error_hardened: bool = True
 
 
 def _tag_cache(cache: Any) -> Any:
@@ -97,12 +104,6 @@ def _is_approx_leaf(leaf, tag: Priority) -> bool:
     (the seed engine's condition — every float width)."""
     return (jnp.issubdtype(leaf.dtype, jnp.floating)
             and tag != Priority.EXACT)
-
-
-def _has_lane_packing(leaf) -> bool:
-    """The lane-packed kernel path covers 2/4-byte elements; other float
-    widths fall back to the bit-unpacked write, still inside jit."""
-    return jnp.dtype(leaf.dtype).itemsize in (2, 4)
 
 
 def _row_mask(active: jax.Array, ndim: int) -> jax.Array:
@@ -167,48 +168,19 @@ class ServingEngine:
         self.params = params if params is not None else self.api.init(key)
         self.meter = StepEnergyMeter()
         self.controller = QualityController()
-        # per-leaf write plan: cache *structure* (not shapes) fixes which
-        # leaves are approximate and at which driver level, so it is
-        # resolved once here from an abstract cache. The per-level driver
-        # vectors (thresholds/energies) become *operands* of the compiled
-        # steps — see vectors_for_floor — so a per-request quality floor
-        # swaps levels between bursts without ever retracing.
+        # the write plan: cache *structure* (not shapes) fixes which leaves
+        # are approximate and at which driver level, so it is resolved
+        # exactly once here from an abstract cache. The per-floor driver
+        # vectors (thresholds/energies) are *operands* of the compiled
+        # steps — see WritePlan.vectors_for — so a per-request quality
+        # floor swaps levels between bursts without ever retracing.
         cache_sds = jax.eval_shape(lambda: self.api.init_cache(
             1, self.scfg.max_seq))
-        tags = _tag_cache(cache_sds)
-        flat_sds, treedef = jax.tree.flatten(cache_sds)
-        flat_tags = treedef.flatten_up_to(tags)
-        self.cache_tags = tags
-        self._leaf_levels: List[Optional[Priority]] = [
-            t if _is_approx_leaf(l, t) else None
-            for l, t in zip(flat_sds, flat_tags)]
-        # decode writes exactly one ring column per KV leaf per step, so
-        # the decode-time diff-write is *column-scoped*: leaves with a
-        # "kv_seq" axis gather the written column (per-slot pos % C), run
-        # the lane write on it, and scatter back — O(token bits) of RNG/
-        # threshold work instead of O(cache bits) per step. Leaves without
-        # a sequence axis (recurrent states — EXACT-pinned anyway) keep
-        # the full-tree diff. Accounting is unchanged: everything outside
-        # the column is bit-identical, i.e. zero flips/energy under CMP.
-        flat_axes = treedef.flatten_up_to(self.api.cache_axes())
-        self._leaf_seq_axis: List[Optional[int]] = [
-            ax.index("kv_seq")
-            if isinstance(ax, tuple) and "kv_seq" in ax else None
-            for ax in flat_axes]
-        # floor -> per-leaf (thr01, thr10, e01, e10) vector tuples, resolved
-        # eagerly (outside any trace; level_vectors is lru_cached driver
-        # calibration). Composition rule: effective level = max(static
-        # policy, requested floor) — hints RAISE fidelity above the KV
-        # policy, never lower it, and EXACT-pinned leaves (recurrent
-        # states) are not in the plan at all. None -> no lane packing for
-        # that float width; the fused write degrades to the bit-unpacked
-        # path at the static level (still jit-resident).
-        self._floor_vectors: Dict[Priority, Tuple] = {}
-        for floor in Priority:
-            self._floor_vectors[floor] = tuple(
-                level_vectors(l.dtype, max(lvl, floor))
-                if lvl is not None and _has_lane_packing(l) else None
-                for l, lvl in zip(flat_sds, self._leaf_levels))
+        self.plan = WritePlan.for_tree(
+            cache_sds, policy=kv_cache_policy, backend=serve_cfg.backend,
+            axes=self.api.cache_axes(), batch_axis=BATCH_AXIS,
+            soft_error_ber=serve_cfg.soft_error_ber,
+            soft_error_hardened=serve_cfg.soft_error_hardened)
         self._prefill_fused = jax.jit(self._make_fused_prefill(
             diff_old_rows=False))
         self._admit_fused = jax.jit(self._make_fused_prefill(
@@ -218,82 +190,8 @@ class ServingEngine:
     # ------------------------------------------------------------ write plan
     def vectors_for_floor(self, floor: Priority = Priority.LOW) -> Tuple:
         """Per-leaf driver-vector operands for one quality floor (see
-        __init__). LOW is the identity floor: the static KV policy alone."""
-        return self._floor_vectors[Priority.coerce(floor)]
-
-    def _write_one_leaf(self, key, i: int, old, new, lvl, vectors):
-        """One leaf through the approximate driver: the lane-packed path
-        when driver vectors exist, else the bit-unpacked write at the
-        static level (f64/f8 — no lane packing), jit-resident either way.
-        The single place the per-leaf write protocol lives — both the
-        full-tree and the column-scoped diff writes call it."""
-        if vectors[i] is not None:
-            return approx_write_lanes(
-                jax.random.fold_in(key, i), old, new, lvl,
-                use_kernel=self.scfg.use_kernel,
-                interpret=self.scfg.interpret,
-                vectors=vectors[i])
-        s, w = approx_write_with_stats(
-            jax.random.fold_in(key, i), old, new, lvl)
-        return s, {"energy_pj": w.energy_pj, "flips01": w.flips_0to1,
-                   "flips10": w.flips_1to0, "errors": w.bit_errors}
-
-    def _write_cache(self, key, old_cache, new_cache, vectors):
-        """Jit-resident diff-write of a cache tree (full pool or an
-        admission group's rows); returns (stored_cache, device stats dict).
-        Traced only. ``vectors`` is a per-flat-leaf tuple of driver-vector
-        operands (or None), normally from ``vectors_for_floor``."""
-        flat_old, treedef = jax.tree.flatten(old_cache)
-        flat_new = treedef.flatten_up_to(new_cache)
-        stored = []
-        acc = zero_device_stats()
-        for i, (o, n, lvl) in enumerate(zip(flat_old, flat_new,
-                                            self._leaf_levels)):
-            if lvl is None:
-                stored.append(n)  # EXACT fast path (recurrent states, ints)
-                continue
-            s, st = self._write_one_leaf(key, i, o, n, lvl, vectors)
-            stored.append(s)
-            acc = add_device_stats(acc, st)
-        return treedef.unflatten(stored), acc
-
-    def _write_cache_decode(self, key, old_cache, new_cache, pos, vectors):
-        """Column-scoped decode diff-write (see __init__): KV leaves write
-        only the ring column at ``pos % C`` (per slot), other approximate
-        leaves fall back to the full diff. Flip/energy stats are identical
-        to ``_write_cache`` — the rest of the cache is bit-unchanged after
-        a decode step, so CMP contributes exactly zero there — but the
-        per-step simulation cost drops from O(cache) to O(token) lane
-        work. Traced only; ``pos`` is the (B,) position vector."""
-        flat_old, treedef = jax.tree.flatten(old_cache)
-        flat_new = treedef.flatten_up_to(new_cache)
-        stored = []
-        acc = zero_device_stats()
-        for i, (o, n, lvl) in enumerate(zip(flat_old, flat_new,
-                                            self._leaf_levels)):
-            if lvl is None:
-                stored.append(n)
-                continue
-            ax = self._leaf_seq_axis[i]
-            if ax is None or vectors[i] is None:
-                s, st = self._write_one_leaf(key, i, o, n, lvl, vectors)
-                stored.append(s)
-                acc = add_device_stats(acc, st)
-                continue
-            C = o.shape[ax]
-            ishape = [1] * o.ndim
-            ishape[BATCH_AXIS] = pos.shape[0]
-            idx = (pos % C).reshape(ishape)
-            gshape = o.shape[:ax] + (1,) + o.shape[ax + 1:]
-            idx_g = jnp.broadcast_to(idx, gshape)
-            o_col = jnp.take_along_axis(o, idx_g, axis=ax)
-            n_col = jnp.take_along_axis(n, idx_g, axis=ax)
-            s_col, st = self._write_one_leaf(key, i, o_col, n_col, lvl,
-                                             vectors)
-            hit = jax.lax.broadcasted_iota(jnp.int32, o.shape, ax) == idx
-            stored.append(jnp.where(hit, s_col, n))
-            acc = add_device_stats(acc, st)
-        return treedef.unflatten(stored), acc
+        WritePlan). LOW is the identity floor: the static KV policy alone."""
+        return self.plan.vectors_for(floor)
 
     # ---------------------------------------------------------- fused steps
     def _make_fused_prefill(self, diff_old_rows: bool):
@@ -310,11 +208,11 @@ class ServingEngine:
             key, k_write, k_sample = jax.random.split(key, 3)
             logits, cache = self.api.prefill(params, batch,
                                              self.scfg.max_seq)
-            acc = zero_device_stats()
+            acc = WriteStats.zero()
             if self.scfg.extent_enabled:
                 old = (old_rows if diff_old_rows
                        else jax.tree.map(jnp.zeros_like, cache))
-                cache, acc = self._write_cache(k_write, old, cache, vectors)
+                cache, acc = self.plan.write(k_write, old, cache, vectors)
             tok = self._sample(k_sample, logits)
             return tok, cache, key, acc
 
@@ -326,7 +224,7 @@ class ServingEngine:
     def _make_burst(self):
         """A decode burst: ``n`` fused steps as ONE ``lax.scan`` call.
 
-        Carries (token, cache, per-slot pos, RNG key, global stat
+        Carries (token, cache, per-slot pos, RNG key, global WriteStats
         accumulator, per-slot attribution accumulator); ``active`` is a
         (B,) bool operand constant across the burst (the scheduler sizes
         bursts so no slot completes mid-scan). Inactive rows keep their
@@ -345,9 +243,9 @@ class ServingEngine:
                     params, tok, cache, pos, self.scfg.max_seq)
                 new_cache = mask_rows(new_cache, cache, active)
                 if self.scfg.extent_enabled:
-                    new_cache, st = self._write_cache_decode(
+                    new_cache, st = self.plan.write_columns(
                         k_write, cache, new_cache, pos, vectors)
-                    acc = add_device_stats(acc, st)
+                    acc = acc + st
                     slot_acc = add_slot_stats(slot_acc, st, active)
                 tok2 = self._sample(k_sample, logits)
                 tok2 = jnp.where(active, tok2, tok)
@@ -360,29 +258,6 @@ class ServingEngine:
             return tok, cache, pos, key, acc, slot_acc, toks
 
         return burst
-
-    def _approx_cache_bits(self, cache) -> int:
-        """Total bits of the approximate (non-EXACT floating) cache leaves —
-        static shape metadata, no device access."""
-        flat = jax.tree.leaves(cache)
-        return sum(l.size * bits_of(l.dtype)
-                   for l, lvl in zip(flat, self._leaf_levels)
-                   if lvl is not None)
-
-    def decode_write_bits(self, cache) -> int:
-        """Approximate bits one decode step actually addresses: the written
-        ring column per KV leaf (the column-scoped write's traffic), plus
-        whole leaves for approximate leaves without a sequence axis. The
-        ``bits_total`` denominator for decode-stream skip rates."""
-        flat = jax.tree.leaves(cache)
-        total = 0
-        for l, lvl, ax in zip(flat, self._leaf_levels,
-                              self._leaf_seq_axis):
-            if lvl is None:
-                continue
-            sz = l.size if ax is None else l.size // l.shape[ax]
-            total += sz * bits_of(l.dtype)
-        return total
 
     # ------------------------------------------------------------- sampling
     def _sample(self, key, logits: jax.Array) -> jax.Array:
@@ -407,7 +282,7 @@ class ServingEngine:
         The decode loop is ONE compiled call: a scan-resident burst of
         ``mnt - 1`` fused steps, every carried value (token, cache,
         positions, RNG key, stat accumulators) on device; the accumulated
-        stats cross to the host once, after the last token. With
+        ``WriteStats`` cross to the host once, after the last token. With
         ``sync_stats=False`` even that transfer is skipped and the raw
         device accumulators are returned under ``report["device_stats"]``
         (used by the no-transfer test and by callers batching many
@@ -422,7 +297,7 @@ class ServingEngine:
                                                        key, vectors)
         pos = jnp.full((B,), self.prompt_len(batch), jnp.int32)
         active = jnp.ones((B,), bool)
-        acc = zero_device_stats()
+        acc = WriteStats.zero()
         slot_acc = zero_slot_stats(B)
         if mnt > 1:
             _, cache, pos, key, acc, slot_acc, toks = self._burst(
@@ -433,18 +308,12 @@ class ServingEngine:
         else:
             tokens = tok[:, None]
 
-        prefill_bits = self._approx_cache_bits(cache)
-        step_bits = self.decode_write_bits(cache)
         if not sync_stats:
             return tokens, {"device_stats": {"kv_prefill": pre_acc,
                                              "kv_decode": acc},
-                            "slot_stats": slot_acc,
-                            "bits_total": {"kv_prefill": prefill_bits,
-                                           "kv_decode": (mnt - 1) * step_bits}}
+                            "slot_stats": slot_acc}
         if self.scfg.extent_enabled:
             pre_host, dec_host = jax.device_get((pre_acc, acc))
-            self.meter.add_stream("kv_prefill", pre_host,
-                                  bits_total=prefill_bits)
-            self.meter.add_stream("kv_decode", dec_host,
-                                  bits_total=(mnt - 1) * step_bits)
+            self.meter.add_stream("kv_prefill", pre_host)
+            self.meter.add_stream("kv_decode", dec_host)
         return tokens, self.meter.summary()

@@ -36,8 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.energy_model import StepEnergyMeter, zero_device_stats
+from repro.core.energy_model import StepEnergyMeter
 from repro.core.priority import Priority
+from repro.memory import WriteStats
 from repro.serve.engine import ServingEngine
 from repro.serve.slots import SlotPool
 
@@ -161,7 +162,6 @@ class ContinuousScheduler:
                     max(self._level[r.rid] for r in group)))
             batch = _stack_prompts(group)
             old_rows = self.pool.extract_rows(ids)
-            self._prefill_bits += self.eng._approx_cache_bits(old_rows)
             tok, rows, key, acc = self.eng._admit_fused(
                 self.eng.params, batch, old_rows, key, vectors)
             self._acc_prefill = self.pool.admit(
@@ -240,12 +240,13 @@ class ContinuousScheduler:
         clock = 0
         decode_steps = 0
         bursts = 0
-        self._acc_prefill = zero_device_stats()
-        self._acc_decode = zero_device_stats()
-        self._prefill_bits = 0
-        # engines outlive schedulers: report THIS run's table traffic, not
-        # the controller's lifetime counters
-        table0 = dict(eng.controller.table.stats())
+        self._acc_prefill = WriteStats.zero()
+        self._acc_decode = WriteStats.zero()
+        # engines outlive schedulers: zero the table's traffic counters so
+        # THIS run's report never aggregates a previous arrival stream's
+        # hits/misses/evictions (cached block->quality entries survive —
+        # cross-stream quality inheritance is the table's whole point)
+        eng.controller.table.reset_stats()
 
         while pending or pool.busy():
             if (not pool.busy()) and pending and pending[0].arrival > clock:
@@ -286,17 +287,12 @@ class ContinuousScheduler:
             bursts += 1
             self._complete(clock)
 
-        # ----- aggregate ledger: one final device->host sync
+        # ----- aggregate ledger: one final device->host sync (bits_total
+        # rides inside the accumulated WriteStats now)
         pre_host, dec_host = jax.device_get((self._acc_prefill,
                                              self._acc_decode))
-        step_bits = eng.decode_write_bits(pool.cache)
-        self.meter.add_stream("kv_prefill", pre_host,
-                              bits_total=self._prefill_bits)
-        self.meter.add_stream("kv_decode", dec_host,
-                              bits_total=decode_steps * step_bits)
-        table1 = eng.controller.table.stats()
-        hits = table1["hits"] - table0["hits"]
-        misses = table1["misses"] - table0["misses"]
+        self.meter.add_stream("kv_prefill", pre_host)
+        self.meter.add_stream("kv_decode", dec_host)
         summary = self.meter.summary()
         summary.update({
             "requests": self._reports,
@@ -304,11 +300,6 @@ class ContinuousScheduler:
             "decode_steps": decode_steps,
             "bursts": bursts,
             "pool": pool.stats(),
-            "extent_table": {
-                "hits": hits, "misses": misses,
-                "evictions": table1["evictions"] - table0["evictions"],
-                "hit_rate": hits / (hits + misses) if hits + misses else 0.0,
-                "occupancy": table1["occupancy"],
-            },
+            "extent_table": eng.controller.table.stats(),
         })
         return summary

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.energy_model import zero_slot_stats
+from repro.memory import WriteStats
 from repro.serve.engine import BATCH_AXIS
 
 
@@ -39,15 +40,16 @@ def _extract_rows(tree: Any, idx: jax.Array) -> Any:
 @jax.jit
 def _admission_update(cache: Any, tok: jax.Array, pos: jax.Array,
                       slot_acc: Dict[str, jax.Array],
-                      acc_prefill: Dict[str, jax.Array],
+                      acc_prefill: "WriteStats",
                       rows: Any, tok_new: jax.Array, pos_new: jax.Array,
-                      idx: jax.Array, acc: Dict[str, jax.Array]):
+                      idx: jax.Array, acc: "WriteStats"):
     """ALL device-side admission bookkeeping as ONE compiled call: insert
     the stored rows, install first token + position, reset the admitted
     slots' attribution ledgers to their (even) share of the admission
-    write, and fold the write into the running prefill-stream accumulator.
-    Eager ``.at[].set`` dispatches here used to dominate the scheduler's
-    event cost — keep any new per-admission device math inside this jit."""
+    write, and fold the write's ``WriteStats`` into the running
+    prefill-stream accumulator. Eager ``.at[].set`` dispatches here used to
+    dominate the scheduler's event cost — keep any new per-admission
+    device math inside this jit."""
     cache = jax.tree.map(
         lambda a, r: jnp.moveaxis(
             jnp.moveaxis(a, BATCH_AXIS, 0).at[idx].set(
@@ -57,13 +59,12 @@ def _admission_update(cache: Any, tok: jax.Array, pos: jax.Array,
     pos = pos.at[idx].set(pos_new)
     admitted = jnp.zeros(tok.shape, bool).at[idx].set(True)
     m = float(idx.shape[0])
-    share = {"energy_pj": acc["energy_pj"] / m,
-             "flips": (acc["flips01"] + acc["flips10"]).astype(
-                 jnp.float32) / m,
-             "errors": acc["errors"].astype(jnp.float32) / m}
+    share = {"energy_pj": acc.energy_pj / m,
+             "flips": (acc.flips01 + acc.flips10).astype(jnp.float32) / m,
+             "errors": acc.errors.astype(jnp.float32) / m}
     slot_acc = {k: jnp.where(admitted, share[k], v)
                 for k, v in slot_acc.items()}
-    acc_prefill = {k: acc_prefill[k] + acc[k] for k in acc_prefill}
+    acc_prefill = acc_prefill + acc
     return cache, tok, pos, slot_acc, acc_prefill
 
 
@@ -123,8 +124,8 @@ class SlotPool:
 
     def admit(self, slot_ids: Sequence[int], requests: Sequence[Any],
               stored_rows: Any, first_tok: jax.Array,
-              pos0: Sequence[int], acc: Dict[str, jax.Array],
-              acc_prefill: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+              pos0: Sequence[int], acc: WriteStats,
+              acc_prefill: WriteStats) -> WriteStats:
         """Install an admission group: stored (post-extent-write) cache
         rows, first sampled token, the decode position of each slot, and
         the group's write stats (per-slot attribution + prefill stream) —

@@ -14,11 +14,14 @@ Durability contract (what "fault-tolerant" means here):
     + re-mesh is the node-failure recovery path.
 
 EXTENT integration (the paper's technique on the checkpoint write stream):
-  with an ``extent_level`` policy, leaves are written through the
-  approximate store — optimizer moments at LOW/MID, weights EXACT — and
-  *delta elimination* skips leaves whose bytes did not change since the
-  last save (the CMP redundant-write idea at tensor granularity). The
-  realized write energy is returned per save for the energy ledger.
+  with an ``extent_policy``, leaves are written through the
+  ``repro.memory`` substrate — optimizer moments at LOW/MID, weights
+  EXACT — on the backend named by ``extent_backend`` ("oracle" keeps the
+  seed numerics; any registry name works), and *delta elimination* skips
+  leaves whose bytes did not change since the last save (the CMP
+  redundant-write idea at tensor granularity). Per-leaf ``WriteStats``
+  accumulate ON DEVICE across the whole save and sync to the report once
+  per commit, not once per leaf.
 """
 from __future__ import annotations
 
@@ -37,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.approx_store import approx_write_with_stats
+from repro import memory
 from repro.core.priority import Priority, checkpoint_policy, tag_pytree
 
 COMPLETE = "COMPLETE"
@@ -57,6 +60,9 @@ class Checkpointer:
     # EXTENT: None -> exact writes; else a (path, leaf) -> Priority policy
     extent_policy: Optional[Callable] = None
     extent_seed: int = 7
+    # repro.memory backend name for the approximate leaf writes ("oracle"
+    # reproduces the seed checkpoint numerics bit-for-bit)
+    extent_backend: str = "oracle"
 
     def __post_init__(self):
         Path(self.directory).mkdir(parents=True, exist_ok=True)
@@ -91,6 +97,7 @@ class Checkpointer:
                   "energy_pj": 0.0, "bit_errors": 0, "bytes": 0}
         manifest = {"step": step, "extra": extra, "leaves": []}
         key = jax.random.PRNGKey(self.extent_seed + step)
+        acc = None  # device-resident WriteStats; ONE sync per commit
         for i, (path, arr) in enumerate(host):
             digest = hash(arr.tobytes())
             unchanged = self._last_digest.get(path) == digest
@@ -102,13 +109,12 @@ class Checkpointer:
                     # redundant-write elimination: zero energy, keep bytes
                     report["skipped_leaves"] += 1
                 else:
-                    stored, st = approx_write_with_stats(
-                        jax.random.fold_in(key, i),
-                        jnp.zeros_like(jnp.asarray(arr)), jnp.asarray(arr),
-                        level)
+                    new = jnp.asarray(arr)
+                    stored, st = memory.write(
+                        jax.random.fold_in(key, i), jnp.zeros_like(new),
+                        new, level=level, backend=self.extent_backend)
                     arr = np.asarray(stored)
-                    report["energy_pj"] += float(st.energy_pj)
-                    report["bit_errors"] += int(st.bit_errors)
+                    acc = st if acc is None else acc + st
             self._last_digest[path] = digest
             # numpy can't serialize ml_dtypes (bf16): store a same-width
             # integer view; restore() view-casts back via the manifest dtype.
@@ -119,6 +125,10 @@ class Checkpointer:
             np.save(tmp / entry["file"], to_disk)
             report["bytes"] += arr.nbytes
             manifest["leaves"].append(entry)
+        if acc is not None:  # the single device->host stats sync
+            h = acc.host_dict()
+            report["energy_pj"] = h["energy_pj"]
+            report["bit_errors"] = h["bit_errors"]
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         with open(tmp / COMPLETE, "w") as f:
             f.write(str(step))

@@ -10,6 +10,12 @@ safe, unlike plain quantization).
 
 Wire cost: 4x fewer bytes on the pod axis per step. The transform is a
 drop-in ``grad_transform`` for ``make_train_step``.
+
+Optionally the int8 wire buffers themselves are stored through the
+``repro.memory`` substrate (``wire_backend``): the DCN staging buffer is
+exactly the kind of high-volume error-tolerant write stream the paper
+targets, the error-feedback residual absorbs the (rare) code upsets, and
+the int8 dtype exercises the substrate's 1-byte lane packing end to end.
 """
 from __future__ import annotations
 
@@ -18,6 +24,8 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.priority import Priority
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +40,12 @@ class CompressionConfig:
     # uncompressed loss). Per-row scales keep the wire format int8 and add
     # only rows x 4 bytes of scale metadata (<0.4% of leaf bytes for d>=32).
     per_channel: bool = True
+    # model the DCN wire buffer as EXTENT memory: a repro.memory backend
+    # name (None = exact wire, the default). Requires a ``key`` to
+    # ``compress_grads``; bit upsets land in the int8 codes and are
+    # compensated by error feedback over subsequent steps.
+    wire_backend: Optional[str] = None
+    wire_level: Priority = Priority.HIGH
 
 
 def init_state(params: Any) -> Any:
@@ -59,34 +73,64 @@ def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
-def compress_grads(grads: Any, ef: Any, cfg: CompressionConfig
-                   ) -> Tuple[Any, Any]:
+def compress_grads(grads: Any, ef: Any, cfg: CompressionConfig,
+                   key: Optional[jax.Array] = None, *,
+                   with_stats: bool = False):
     """(grads, ef_residual) -> (decompressed grads as seen on the wire,
     new residual). The all-reduce itself is left to XLA/GSPMD — the int8
     tensor is what crosses the pod axis; we model fidelity exactly and
-    count the wire bytes in the roofline (collective term / 4 on grads)."""
-    if not cfg.enable:
-        return grads, ef
+    count the wire bytes in the roofline (collective term / 4 on grads).
 
-    def one(g, e):
+    With ``cfg.wire_backend`` set, each int8 code tensor is additionally
+    stored through the EXTENT substrate before dequantization. Pass a
+    per-step ``key`` to decorrelate the upsets across steps; without one
+    (the existing training call sites) a fixed default key is used — the
+    RNG draws then repeat per step, which the error-feedback residual
+    still absorbs. ``with_stats=True`` also returns the accumulated
+    device-resident ``repro.memory.WriteStats`` of the wire writes."""
+    if not cfg.enable:
+        return (grads, ef, None) if with_stats else (grads, ef)
+
+    wire = cfg.wire_backend is not None
+    stats = None
+    if wire:
+        from repro import memory
+        if key is None:
+            key = jax.random.PRNGKey(0x5717)
+        stats = memory.WriteStats.zero()
+
+    def one(i, g, e):
+        nonlocal stats
         g32 = g.astype(jnp.float32) + e
         q, scale = quantize(g32, cfg.bits, per_channel=cfg.per_channel)
+        if wire:
+            # the staging-buffer write: diffing against the previous step's
+            # codes would need carried state, so model the conservative
+            # cold-buffer write (every code bit pays)
+            q, st = memory.write(jax.random.fold_in(key, i),
+                                 jnp.zeros_like(q), q,
+                                 level=cfg.wire_level,
+                                 backend=cfg.wire_backend)
+            stats = stats + st
         deq = dequantize(q, scale)
         return deq.astype(g.dtype), g32 - deq
 
     flat_g, treedef = jax.tree.flatten(grads)
     flat_e = treedef.flatten_up_to(ef)
-    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
-    return (treedef.unflatten([o[0] for o in out]),
-            treedef.unflatten([o[1] for o in out]))
+    out = [one(i, g, e) for i, (g, e) in enumerate(zip(flat_g, flat_e))]
+    res = (treedef.unflatten([o[0] for o in out]),
+           treedef.unflatten([o[1] for o in out]))
+    return res + (stats,) if with_stats else res
 
 
-def make_grad_transform(cfg: CompressionConfig):
+def make_grad_transform(cfg: CompressionConfig,
+                        key: Optional[jax.Array] = None):
     """Stateless-signature adapter: fold the EF state through the opt loop
     by closing over a mutable cell (host-side) or use the functional API
-    ``compress_grads`` directly inside a custom step."""
+    ``compress_grads`` directly inside a custom step. ``key`` seeds the
+    optional substrate wire writes (see ``compress_grads``)."""
     def transform_with_state(grads, ef):
-        return compress_grads(grads, ef, cfg)
+        return compress_grads(grads, ef, cfg, key=key)
     return transform_with_state
 
 
