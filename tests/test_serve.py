@@ -89,9 +89,9 @@ def test_decode_loop_is_jit_resident_no_host_transfers():
 
     with jax.transfer_guard_device_to_host("disallow"):
         toks, report = eng.generate(prompt, sync_stats=False)
-    # the raw accumulators stayed on device through the loop
+    # the raw WriteStats accumulators stayed on device through the loop
     for acc in report["device_stats"].values():
-        assert all(isinstance(v, jax.Array) for v in acc.values())
+        assert all(isinstance(v, jax.Array) for v in jax.tree.leaves(acc))
     assert toks.shape == (2, 6)
     # the whole decode loop is one compiled burst executable, reused across
     # generates (same scan length -> one cache entry)
@@ -104,13 +104,14 @@ def test_decode_loop_is_jit_resident_no_host_transfers():
     _, synced = eng.generate(prompt)
     dec = jax.device_get(report["device_stats"]["kv_decode"])
     assert (synced["streams"]["kv_decode"]["bit_errors"] - before
-            == int(dec["errors"]))
+            == int(dec.errors))
 
 
 def test_sync_stats_false_device_report():
-    """sync_stats=False must return raw device accumulators (plus the
-    per-slot attribution arrays) whose values reconcile exactly with the
-    synced meter path of an identical engine."""
+    """sync_stats=False must return raw device WriteStats accumulators
+    (plus the per-slot attribution arrays) whose values reconcile exactly
+    with the synced meter path of an identical engine."""
+    from repro.memory import WriteStats
     cfg = get_config("qwen2.5-3b").reduced()
     a = ServingEngine(cfg, ServeConfig(max_seq=32, max_new_tokens=6))
     b = ServingEngine(cfg, ServeConfig(max_seq=32, max_new_tokens=6))
@@ -120,17 +121,16 @@ def test_sync_stats_false_device_report():
 
     assert set(raw["device_stats"]) == {"kv_prefill", "kv_decode"}
     for stream, acc in raw["device_stats"].items():
-        assert set(acc) == {"energy_pj", "flips01", "flips10", "errors"}
-        assert all(isinstance(v, jax.Array) for v in acc.values())
-        host = jax.device_get(acc)
+        assert isinstance(acc, WriteStats)  # ONE schema for every backend
+        assert all(isinstance(v, jax.Array) for v in jax.tree.leaves(acc))
+        host = acc.host_dict()  # the single sync point
         s = synced["streams"][stream]
-        assert s["bit_errors"] == int(host["errors"])
-        assert s["bits_written"] == int(host["flips01"]) + int(
-            host["flips10"])
-        np.testing.assert_allclose(s["energy_pj"], float(host["energy_pj"]),
+        assert s["bit_errors"] == host["bit_errors"]
+        assert s["bits_written"] == host["bits_written"]
+        np.testing.assert_allclose(s["energy_pj"], host["energy_pj"],
                                    rtol=1e-6)
-        # bits_total is host-side shape metadata, reported alongside
-        assert raw["bits_total"][stream] == s["bits_total"]
+        # bits_total now accumulates device-side inside the WriteStats
+        assert host["bits_total"] == s["bits_total"]
     # per-slot attribution rides along as device arrays (B,)
     assert all(isinstance(v, jax.Array) and v.shape == (2,)
                for v in raw["slot_stats"].values())
