@@ -84,6 +84,23 @@ def run(n_mib: int = 8):
     }
 
 
+def bench_metrics(out) -> dict:
+    """Flat latency/traffic metrics for the machine-readable BENCH_<n>.json
+    emitted by benchmarks/run.py."""
+    m = {
+        "tensor_mib": out["tensor_mib"],
+        "fusion_traffic_reduction_x": out["fusion_traffic_reduction_x"],
+        "projected_v5e_us_fused": out["projected_v5e_us_fused"],
+        "lane_path_s_cpu": out["lane_path_s_cpu"],
+        "eager_oracle_s_cpu": out["eager_oracle_s_cpu"],
+        "lane_vs_eager_speedup_x": out["lane_vs_eager_speedup_x"],
+        "pallas_backend_s_cpu": out["pallas_backend_s_cpu"],
+    }
+    for level, secs in out["level_sweep_s_cpu_no_retrace"].items():
+        m[f"level_sweep_{level.lower()}_s"] = secs
+    return m
+
+
 def main():
     import json
     print(json.dumps(run(), indent=1))

@@ -1,19 +1,32 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+       [--out-dir DIR]
 Prints `name,seconds,key_results` per benchmark plus per-benchmark key
 results; exits nonzero if any benchmark fails.
+
+Every run also emits a machine-readable ``BENCH_<n>.json`` into
+``--out-dir`` (default: the working directory; ``n`` auto-increments over
+existing files so successive runs build a perf trajectory): suite name,
+wall time, and per-benchmark {seconds, metrics}. Benchmark modules opt
+into rich metrics by exposing ``bench_metrics(out) -> dict`` (see
+serving_energy / kernel_bench / retention_sweep); everything else gets its
+scalar outputs scraped.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import re
+import sys
 import time
 import traceback
+from pathlib import Path
 
 from benchmarks import (fig2_switching, fig6_thermal, fig12_waveform,
                         fig13_access, fig14_energy, fig15_variation,
-                        kernel_bench, serving_energy, table1)
+                        kernel_bench, retention_sweep, serving_energy,
+                        table1)
 
 BENCHES = {
     "table1": lambda fast: table1.run(),
@@ -29,6 +42,17 @@ BENCHES = {
         archs=("qwen2.5-3b",) if fast else ("qwen2.5-3b",
                                             "recurrentgemma-2b"),
         new_tokens=4 if fast else 8),
+    "retention_sweep": lambda fast: retention_sweep.run(
+        steps=8 if fast else 16,
+        shape=(32, 64) if fast else (64, 128)),
+}
+
+#: modules exposing ``bench_metrics(out)`` — the registration hook for the
+#: machine-readable report
+_METRIC_FNS = {
+    "serving_energy": serving_energy.bench_metrics,
+    "kernel_bench": kernel_bench.bench_metrics,
+    "retention_sweep": retention_sweep.bench_metrics,
 }
 
 
@@ -60,15 +84,62 @@ def _headline(name: str, out) -> str:
         k = next(iter(out))
         return (f"{k}: saving={out[k]['saving_vs_basic']:.3f} "
                 f"skip={out[k]['write_skip_rate']:.3f}")
+    if name == "retention_sweep":
+        return json.dumps(out["claims"])
     return ""
+
+
+def _scrape_metrics(out, prefix: str = "", depth: int = 0) -> dict:
+    """Fallback metric extraction: scalar leaves of a (shallow) result
+    dict become flat metric entries."""
+    metrics = {}
+    if not isinstance(out, dict) or depth > 2:
+        return metrics
+    for k, v in out.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, bool):
+            metrics[key] = v
+        elif isinstance(v, (int, float)):
+            metrics[key] = float(v)
+        elif isinstance(v, dict):
+            metrics.update(_scrape_metrics(v, f"{key}.", depth + 1))
+    return metrics
+
+
+def _metrics_for(name: str, out) -> dict:
+    fn = _METRIC_FNS.get(name)
+    if fn is not None:
+        try:
+            return {k: (v if isinstance(v, bool) else float(v))
+                    for k, v in fn(out).items()}
+        except Exception as e:
+            # a broken hook must not hide: the trajectory would silently
+            # change schema mid-series. Flag the fallback in the report.
+            print(f"WARNING: {name}.bench_metrics failed ({e!r}); "
+                  f"falling back to scraped metrics", file=sys.stderr)
+            return {"_metrics_fallback": True, **_scrape_metrics(out)}
+    return _scrape_metrics(out)
+
+
+def _next_bench_path(out_dir: Path) -> Path:
+    """BENCH_<n>.json with n = 1 + the highest existing index — the perf
+    trajectory accumulates instead of overwriting."""
+    pat = re.compile(r"^BENCH_(\d+)\.json$")
+    taken = [int(m.group(1)) for p in out_dir.glob("BENCH_*.json")
+             if (m := pat.match(p.name))]
+    return out_dir / f"BENCH_{max(taken, default=0) + 1}.json"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory the BENCH_<n>.json report lands in")
     args = ap.parse_args()
     failures = []
+    results = {}
+    t_suite = time.time()
     print("name,seconds,key_results")
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
@@ -78,10 +149,26 @@ def main() -> None:
             out = fn(args.fast)
             dt = time.time() - t0
             print(f"{name},{dt:.2f},{_headline(name, out)}")
+            results[name] = {"seconds": round(dt, 3),
+                             "metrics": _metrics_for(name, out)}
         except Exception as e:
             failures.append((name, repr(e)))
             traceback.print_exc()
             print(f"{name},FAIL,{e!r}")
+            results[name] = {"seconds": round(time.time() - t0, 3),
+                             "failed": True, "error": repr(e)}
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = _next_bench_path(out_dir)
+    path.write_text(json.dumps({
+        "suite": "extent-repro-benchmarks",
+        "fast": args.fast,
+        "only": args.only,
+        "wall_time_s": round(time.time() - t_suite, 3),
+        "benchmarks": results,
+    }, indent=1, default=float))
+    print(f"wrote {path}")
     if failures:
         raise SystemExit(f"{len(failures)} benchmark(s) failed: {failures}")
 

@@ -296,6 +296,31 @@ def run(archs=("qwen2.5-3b", "recurrentgemma-2b"), new_tokens: int = 8):
     return out
 
 
+def bench_metrics(out) -> dict:
+    """Flat energy/latency/flip metrics for the machine-readable
+    BENCH_<n>.json emitted by benchmarks/run.py."""
+    m = {}
+    for arch, d in out.items():
+        if not isinstance(d, dict) or "extent_energy_pj" not in d:
+            continue
+        m[f"{arch}_extent_energy_pj"] = d["extent_energy_pj"]
+        m[f"{arch}_saving_vs_basic"] = d["saving_vs_basic"]
+        m[f"{arch}_write_skip_rate"] = d["write_skip_rate"]
+        m[f"{arch}_ber_realized"] = d["ber_realized"]
+        m[f"{arch}_token_agreement"] = d["token_agreement_vs_exact"]
+    fe = out["fused_vs_eager"]
+    m["fused_speedup_x"] = fe["speedup_x"]
+    m["fused_decode_wallclock_s"] = fe["decode_wallclock_fused_s"]
+    m["fused_energy_rel_err"] = fe["energy_rel_err"]
+    cs = out["continuous_vs_sequential"]
+    m["continuous_tok_per_s"] = cs["continuous_tok_per_s"]
+    m["sequential_tok_per_s"] = cs["sequential_tok_per_s"]
+    m["continuous_throughput_ratio_x"] = cs["throughput_ratio_x"]
+    m["lockstep_bit_exact"] = bool(out["lockstep_parity"]["bit_exact"])
+    m["kv_quant_rel_err"] = out["kv_quant_rel_err"]
+    return m
+
+
 def main():
     import json
     print(json.dumps(run(), indent=1, default=float))

@@ -1,12 +1,14 @@
 """Quickstart: the EXTENT approximate-memory subsystem in 60 seconds.
 
   PYTHONPATH=src python examples/quickstart.py [--backend lanes_ref]
+      [--scrub-policy periodic --ambient-k 350]
 
 Walks the paper's stack bottom-up: WER physics -> 4-level driver -> the
 unified memory substrate (one write API, every registered backend) -> a
-pytree-native memory region -> a priority-tagged pytree. Without
-``--backend`` it sweeps every name in the registry — the same sweep the CI
-smoke lane runs.
+pytree-native memory region -> a priority-tagged pytree -> the reliability
+time axis (retention decay + a scrub pass at ``--ambient-k``, scheduled by
+``--scrub-policy``). Without ``--backend`` it sweeps every name in the
+registry — the same sweep the CI smoke lanes run.
 """
 import argparse
 
@@ -15,6 +17,7 @@ import jax.numpy as jnp
 
 from repro import memory
 from repro.core import Priority, default_driver, tag_pytree, wer_bit
+from repro.reliability import make_scrub_policy, retention_flip_p
 
 
 def main():
@@ -22,6 +25,14 @@ def main():
     ap.add_argument("--backend", default=None,
                     choices=memory.available_backends(),
                     help="single repro.memory backend (default: sweep all)")
+    ap.add_argument("--scrub-policy", default="periodic",
+                    choices=("none", "periodic", "wear_aware",
+                             "quality_floor"),
+                    help="scrub scheduling policy for the reliability demo")
+    ap.add_argument("--ambient-k", type=float, default=350.0,
+                    help="die temperature (kelvin) for the reliability demo")
+    ap.add_argument("--retention-scale", type=float, default=10_000.0,
+                    help="modeled dwell seconds per demo step")
     args = ap.parse_args()
     backends = ([args.backend] if args.backend
                 else list(memory.available_backends()))
@@ -78,6 +89,36 @@ def main():
         Priority.LOW if "moments" in str(path[0]) else
         Priority.MID if "kv" in str(path[0]) else Priority.EXACT))
     print(" ", jax.tree.map(lambda t: t.name, tags))
+
+    print(f"\n== 7. reliability: retention decay + scrubbing "
+          f"@ {args.ambient_k:.0f} K (policy={args.scrub_policy}) ==")
+    p_low = retention_flip_p(Priority.LOW, args.ambient_k,
+                             args.retention_scale)
+    print(f"  LOW-plane decay p per step "
+          f"({args.retention_scale:.0f} s dwell): {p_low:.2e}")
+    region = memory.MemoryRegion.create(
+        {"v": jnp.zeros((128, 128), jnp.bfloat16)}, level=Priority.LOW,
+        backend=demo, ambient_k=args.ambient_k,
+        retention_scale=args.retention_scale)
+    region = region.write(
+        jax.random.PRNGKey(4),
+        {"v": jax.random.normal(jax.random.PRNGKey(5),
+                                (128, 128)).astype(jnp.bfloat16)})
+    policy = make_scrub_policy(args.scrub_policy, interval=4)
+    levels = region.plan.leaf_levels
+    for step in range(1, 13):
+        region = region.age(jax.random.fold_in(jax.random.PRNGKey(6), step))
+        if policy.plan_pass(step, levels) is not None:
+            region = region.scrub(
+                jax.random.fold_in(jax.random.PRNGKey(7), step))
+            policy.record(step)
+    rep = region.report()
+    print(f"  12 steps, {policy.passes} scrub passes: "
+          f"{rep.get('retention_flips', 0)} retention flips, "
+          f"{rep.get('residual_decayed_bits', 0)} still decayed")
+    print(f"  lifetime ledger: write {rep['energy_pj']/1e3:.1f} nJ + "
+          f"scrub {rep.get('scrub_energy_pj', 0.0)/1e3:.1f} nJ = "
+          f"{rep.get('lifetime_energy_pj', rep['energy_pj'])/1e3:.1f} nJ")
 
 
 if __name__ == "__main__":

@@ -16,10 +16,15 @@ hit/miss statistics are exported for the architecture benchmarks.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 from typing import Dict, Hashable, Optional, Tuple
 
 from repro.core.priority import Priority
+
+#: the traffic scope counters land in when no ``scope(...)`` is active —
+#: foreground request/write traffic.
+DEFAULT_SCOPE = "serve"
 
 
 @dataclasses.dataclass
@@ -30,9 +35,28 @@ class ExtentTable:
     def __post_init__(self):
         self._map: "collections.OrderedDict[Hashable, Priority]" = (
             collections.OrderedDict())
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        # per-scope traffic accounting: background passes (scrubbing) resolve
+        # blocks through the SAME LRU — same entries, same eviction pressure —
+        # but their hits/misses land in their own scope so a scrub pass never
+        # inflates the serve traffic's hit rate (and vice versa).
+        self._scopes: Dict[str, Dict[str, int]] = {}
+        self._scope = DEFAULT_SCOPE
+
+    def _counters(self, scope: Optional[str] = None) -> Dict[str, int]:
+        return self._scopes.setdefault(
+            scope or self._scope,
+            {"hits": 0, "misses": 0, "evictions": 0})
+
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        """Route the traffic counters of the enclosed lookups/updates to
+        ``name`` (e.g. ``"scrub"``). Cache *contents* are shared across
+        scopes — only the accounting is separated. Reentrant."""
+        prev, self._scope = self._scope, name
+        try:
+            yield self
+        finally:
+            self._scope = prev
 
     # -- controller operations ------------------------------------------------
     def update(self, block: Hashable, quality: Priority) -> None:
@@ -42,39 +66,63 @@ class ExtentTable:
             self._map.move_to_end(block)
         elif len(self._map) >= self.capacity:
             self._map.popitem(last=False)
-            self.evictions += 1
+            self._counters()["evictions"] += 1
         self._map[block] = q
 
     def lookup(self, block: Hashable) -> Priority:
         """Write-path query: hit -> cached quality; miss -> writer default
         (and the default is installed, matching the paper's description)."""
         if block in self._map:
-            self.hits += 1
+            self._counters()["hits"] += 1
             self._map.move_to_end(block)
             return self._map[block]
-        self.misses += 1
+        self._counters()["misses"] += 1
         self.update(block, self.default)
         return self.default
 
     def reset_stats(self) -> None:
-        """Zero the hit/miss/eviction counters WITHOUT touching the cached
-        block->quality entries. Called between scheduler arrival streams so
-        per-run serve reports never aggregate stale table traffic from a
-        previous stream on the same engine."""
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        """Zero the hit/miss/eviction counters of EVERY scope WITHOUT
+        touching the cached block->quality entries. Called between scheduler
+        arrival streams so per-run serve reports never aggregate stale table
+        traffic from a previous stream on the same engine."""
+        self._scopes.clear()
 
     # -- observability ---------------------------------------------------------
+    def _sum(self, key: str) -> int:
+        return sum(c[key] for c in self._scopes.values())
+
+    @property
+    def hits(self) -> int:
+        return self._sum("hits")
+
+    @property
+    def misses(self) -> int:
+        return self._sum("misses")
+
+    @property
+    def evictions(self) -> int:
+        return self._sum("evictions")
+
     @property
     def hit_rate(self) -> float:
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
 
-    def stats(self) -> Dict[str, float]:
+    def stats(self, scope: Optional[str] = None) -> Dict[str, float]:
+        """Aggregate counters (all scopes), plus the per-scope breakdown
+        under ``"scopes"``. With ``scope=`` set, only that scope's traffic
+        is reported (no breakdown)."""
+        if scope is not None:
+            c = dict(self._scopes.get(
+                scope, {"hits": 0, "misses": 0, "evictions": 0}))
+            n = c["hits"] + c["misses"]
+            c["hit_rate"] = c["hits"] / n if n else 0.0
+            c["occupancy"] = len(self._map)
+            return c
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "hit_rate": self.hit_rate,
-                "occupancy": len(self._map)}
+                "occupancy": len(self._map),
+                "scopes": {k: dict(v) for k, v in self._scopes.items()}}
 
 
 @dataclasses.dataclass

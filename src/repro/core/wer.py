@@ -15,11 +15,33 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-# paper section II.A constants
-ALPHA_DAMPING = 0.01       # Landau-Lifshitz-Gilbert damping
-GAMMA_GYRO = 1.76086e11    # gyromagnetic ratio, rad/(s.T)
-MU_0 = 1.25663706e-6
-H_K_EFF = 1.8e5 * MU_0     # effective anisotropy field in Tesla (~0.226 T)
+from repro.core import mtj as _mtj
+
+# paper section II.A constants — sourced from the device layer (mtj.py holds
+# the single copy of every Table-3 parameter; duplicating them here once let
+# the circuit and device layers drift apart, see tests/test_reliability.py)
+ALPHA_DAMPING = _mtj.DEFAULT_MTJ.alpha       # Landau-Lifshitz-Gilbert damping
+GAMMA_GYRO = _mtj.GAMMA                      # gyromagnetic ratio, rad/(s.T)
+MU_0 = _mtj.MU_0
+H_K_EFF = _mtj.DEFAULT_MTJ.h_k * MU_0        # anisotropy field in Tesla (~0.226 T)
+
+
+def delta_of_t(t: jax.Array, p: "_mtj.MTJParams" = _mtj.DEFAULT_MTJ
+               ) -> jax.Array:
+    """Thermal stability factor Delta(T) — the ONE Δ(T) source for the whole
+    stack, delegating to ``mtj.delta_of_t`` (device layer). ``fig6_thermal``,
+    ``wer_thermal_at`` and the reliability subsystem's retention rates all
+    route through here so there is exactly one temperature model."""
+    return _mtj.delta_of_t(p, t)
+
+
+def wer_thermal_at(t_w: jax.Array, i_rel: jax.Array, t_k: jax.Array,
+                   p: "_mtj.MTJParams" = _mtj.DEFAULT_MTJ) -> jax.Array:
+    """Eq. 2 evaluated at die temperature ``t_k``: Δ comes from
+    ``mtj.delta_of_t`` and the LLG constants from the same ``MTJParams`` —
+    no duplicated device constants on the thermal path."""
+    return wer_thermal(t_w, i_rel, delta_of_t(t_k, p),
+                       h_k=p.h_k * MU_0, alpha=p.alpha)
 # Eq. 1 rate constant C is "technology-dependent" (paper §II.A). The LLG
 # identification C = 2 a g Hk/(1+a^2) with Table-3 parameters gives ~8e8/s;
 # we calibrate to 3.5e9/s so the driver's exact level (I/Ic=1.8, 10 ns)

@@ -1,0 +1,7 @@
+"""Scrub (corrective re-write) kernel: Pallas implementation + jnp oracle.
+
+Reached through the ``repro.memory`` backend registry
+(``Backend.leaf_scrub``); see ``repro.reliability`` for the subsystem that
+drives it.
+"""
+from repro.kernels.scrub.ops import scrub_write  # noqa: F401

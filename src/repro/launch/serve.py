@@ -5,7 +5,9 @@ Continuous batching over an arrival stream (the default):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
       --requests 6 --capacity 3 --arrival-every 2 --new-tokens 16 \
       --quality chat=high [--no-extent] [--no-reduced] \
-      [--backend oracle|lanes_ref|pallas|exact] [--soft-error-ber 1e-6]
+      [--backend oracle|lanes_ref|pallas|exact] [--soft-error-ber 1e-6] \
+      [--ambient-k 350 --retention-scale 1000 --scrub-policy periodic \
+       --scrub-interval 8 --scrub-cols 0]
 
 Monolithic one-batch mode (the pre-slot-pool engine path):
 
@@ -19,7 +21,11 @@ the EXTENT table; requests cycling through that app inherit the level via
 the quality-controller handshake. ``--backend`` selects the write-path
 implementation from the ``repro.memory`` registry; ``--soft-error-ber``
 turns on the post-write retention-upset hook (hardened driver by default),
-surfaced as ``soft_strikes`` in the report.
+surfaced as ``soft_strikes`` in the report. ``--retention-scale`` /
+``--ambient-k`` enable the ``repro.reliability`` time-axis model (stored
+bits decay at the Δ(T) rate of their priority level) and
+``--scrub-policy`` schedules background corrective re-writes whose energy
+lands in the report's lifetime ledger.
 """
 from __future__ import annotations
 
@@ -53,6 +59,24 @@ def main():
     ap.add_argument("--soft-error-unhardened", action="store_true",
                     help="disable the hardened driver's exponent/sign "
                          "protection for the soft-error hook")
+    # repro.reliability: retention decay + background scrubbing
+    ap.add_argument("--ambient-k", type=float, default=300.0,
+                    help="die ambient temperature (kelvin) for the "
+                         "retention model")
+    ap.add_argument("--retention-scale", type=float, default=0.0,
+                    help="modeled device dwell (seconds) per decode step; "
+                         "0 disables the retention model. Values >> real "
+                         "step times accelerate aging for studies")
+    ap.add_argument("--scrub-policy", default="none",
+                    choices=("none", "periodic", "wear_aware",
+                             "quality_floor"),
+                    help="background scrub scheduling policy (continuous "
+                         "mode; implies --retention-scale 1000 when that "
+                         "flag is left at 0)")
+    ap.add_argument("--scrub-interval", type=int, default=8,
+                    help="base scrub interval in decode steps")
+    ap.add_argument("--scrub-cols", type=int, default=0,
+                    help="columns per scrub pass (0 = whole leaves)")
     ap.add_argument("--monolithic", action="store_true",
                     help="single fixed batch, no arrival stream")
     # arrival-stream simulation
@@ -74,12 +98,17 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
 
+    retention_scale = args.retention_scale
+    if args.scrub_policy != "none" and retention_scale == 0.0:
+        retention_scale = 1000.0  # scrubbing without decay is a no-op
+
     def serve_cfg(max_seq: int) -> ServeConfig:
         return ServeConfig(
             max_seq=max_seq, max_new_tokens=args.new_tokens,
             extent_enabled=not args.no_extent, backend=args.backend,
             soft_error_ber=args.soft_error_ber,
-            soft_error_hardened=not args.soft_error_unhardened)
+            soft_error_hardened=not args.soft_error_unhardened,
+            ambient_k=args.ambient_k, retention_scale=retention_scale)
 
     if args.monolithic:
         prompt = {"tokens": jax.random.randint(
@@ -124,7 +153,14 @@ def main():
         cfg, args.requests, prompt_len=args.prompt_len,
         new_tokens=args.new_tokens, arrival_every=args.arrival_every,
         app_ids=apps)
-    sch = ContinuousScheduler(eng, capacity=args.capacity)
+    scrub_policy = None
+    if args.scrub_policy != "none":
+        from repro.reliability import make_scrub_policy
+        scrub_policy = make_scrub_policy(args.scrub_policy,
+                                         interval=args.scrub_interval,
+                                         cols_per_pass=args.scrub_cols)
+    sch = ContinuousScheduler(eng, capacity=args.capacity,
+                              scrub_policy=scrub_policy)
     report = sch.run(reqs)
 
     print(f"served {len(report['requests'])} requests in "
@@ -141,7 +177,9 @@ def main():
     if not args.no_extent:
         tot = report["total"]
         tbl = report["extent_table"]
-        print(f"KV write energy {tot['energy_pj']/1e6:.3f} uJ "
+        label = ("KV energy (all streams)" if "lifetime" in report
+                 else "KV write energy")
+        print(f"{label} {tot['energy_pj']/1e6:.3f} uJ "
               f"(backend={args.backend}), "
               f"skip-rate {tot['write_skip_rate']:.3f}, "
               f"BER {tot['ber_realized']:.2e}")
@@ -149,9 +187,32 @@ def main():
             print(f"soft errors: {tot['soft_strikes']} strikes at "
                   f"BER {args.soft_error_ber:.1e} "
                   f"({'hardened' if not args.soft_error_unhardened else 'unhardened'} driver)")
-        print(f"EXTENT table: {tbl['hits']} hits / {tbl['misses']} misses "
-              f"(hit rate {tbl['hit_rate']:.2f}), "
-              f"{tbl['evictions']} evictions")
+        # headline = SERVE-scope traffic only: folding background scrub
+        # lookups (near-100% hits) into the hit rate is exactly the
+        # double-counting the scope accumulator exists to prevent
+        srv = tbl.get("scopes", {}).get(
+            "serve", {"hits": tbl["hits"], "misses": tbl["misses"],
+                      "evictions": tbl["evictions"]})
+        n_srv = srv["hits"] + srv["misses"]
+        print(f"EXTENT table (serve): {srv['hits']} hits / "
+              f"{srv['misses']} misses "
+              f"(hit rate {srv['hits'] / n_srv if n_srv else 0.0:.2f}), "
+              f"{srv['evictions']} evictions")
+        for scope, c in sorted(tbl.get("scopes", {}).items()):
+            if scope != "serve":
+                print(f"  [{scope}] {c['hits']} hits / "
+                      f"{c['misses']} misses")
+    if "lifetime" in report:
+        lt = report["lifetime"]
+        print(f"lifetime ledger @ {lt['ambient_k']:.0f} K "
+              f"(dwell {lt['dwell_s_per_step']:.0f} s/step, "
+              f"policy {lt['scrub_policy']}): "
+              f"write {lt['write_energy_pj']/1e6:.3f} uJ + "
+              f"scrub {lt['scrub_energy_pj']/1e6:.3f} uJ = "
+              f"{lt['lifetime_energy_pj']/1e6:.3f} uJ; "
+              f"{lt['retention_flips']} retention flips, "
+              f"{lt['residual_decayed_bits']} still decayed after "
+              f"{lt['scrub_passes']} scrub passes")
 
 
 if __name__ == "__main__":

@@ -65,8 +65,72 @@ class Backend(Protocol):
         tensor and device-resident unified WriteStats. Must be jit-safe."""
         ...
 
+    def leaf_scrub(self, key: jax.Array, stored: jax.Array,
+                   mask: jax.Array, lv: LeafVectors
+                   ) -> Tuple[jax.Array, jax.Array, WriteStats]:
+        """Corrective re-write of the decayed bits of ``stored`` (``mask``
+        is the element-space decayed-bit mask — ``uint_type`` view of the
+        stored dtype, same shape; see ``repro.reliability``). Returns
+        (scrubbed, residual_mask, WriteStats); corrections that fail stay
+        decayed in ``residual_mask``. Must be jit-safe."""
+        ...
 
-class OracleBackend:
+
+def _planes_scrub(stored, mask, lv: LeafVectors):
+    """Deterministic element-space scrub fallback for widths without lane
+    packing: perfect correction (no stochastic failure modeled), per-plane
+    energy accounting from the bit-plane vectors. Keeps the scrub protocol
+    total over every dtype the write path accepts."""
+    from repro.core.priority import uint_type
+    ut = uint_type(stored.dtype)
+    nbits = jnp.dtype(ut).itemsize * 8
+    stored_u = jax.lax.bitcast_convert_type(stored, ut)
+    corrected_u = stored_u ^ mask
+    shift = jnp.arange(nbits, dtype=ut)
+    rewrite = ((mask[..., None] >> shift) & ut(1)) != 0
+    to_ap = rewrite & (((corrected_u[..., None] >> shift) & ut(1)) == ut(1))
+    f01 = jnp.sum(to_ap, dtype=jnp.int32)
+    f10 = jnp.sum(rewrite & ~to_ap, dtype=jnp.int32)
+    energy = jnp.sum(jnp.where(to_ap, lv.eb01,
+                               jnp.where(rewrite, lv.eb10, 0.0)),
+                     dtype=jnp.float32)
+    st = WriteStats.for_bits(
+        stored.size * nbits, energy_pj=energy,
+        latency_ns=jnp.where(f01 + f10 > 0, lv.lat_max, 0.0),
+        flips01=f01, flips10=f10)
+    return (jax.lax.bitcast_convert_type(corrected_u, stored.dtype),
+            jnp.zeros_like(mask), st)
+
+
+class _CounterScrub:
+    """Shared ``leaf_scrub`` over the counter-RNG scrub kernel/oracle.
+
+    Unlike the write path (where the eager oracle draws from ``jax.random``)
+    the scrub path uses ONE RNG contract for every backend — the flat-lane
+    counter hash — so all registered backends agree on a scrub's realized
+    residuals bit-exactly, not just on flips/energy."""
+    _scrub_use_kernel = False
+    _scrub_interpret: Optional[bool] = None
+
+    def leaf_scrub(self, key, stored, mask, lv: LeafVectors):
+        if lv.thr01 is None:  # no lane packing for this element width
+            return _planes_scrub(stored, mask, lv)
+        from repro.kernels.scrub import ops as sops
+        scrubbed, residual, st = sops.scrub_write(
+            key, stored, mask,
+            vectors=(lv.thr01, lv.thr10, lv.le01, lv.le10),
+            use_kernel=self._scrub_use_kernel,
+            interpret=self._scrub_interpret)
+        flips = st["flips01"] + st["flips10"]
+        return scrubbed, residual, WriteStats.for_bits(
+            stored.size * jnp.dtype(stored.dtype).itemsize * 8,
+            energy_pj=st["energy_pj"],
+            latency_ns=jnp.where(flips > 0, lv.lat_max, 0.0),
+            flips01=st["flips01"], flips10=st["flips10"],
+            errors=st["errors"])
+
+
+class OracleBackend(_CounterScrub):
     """Eager bit-unpacked reference (``jax.random`` RNG stream): draws one
     uniform per (element, bit) — the 16-32x write-amplified ground truth
     every other backend's accounting is asserted against."""
@@ -81,19 +145,21 @@ class OracleBackend:
             flips01=d["flips01"], flips10=d["flips10"], errors=d["errors"])
 
 
-class LaneBackend:
+class LaneBackend(_CounterScrub):
     """Lane-packed fused path (counter RNG over flat lane indices):
     ``use_kernel=False`` is the pure-jnp lane reference, ``use_kernel=True``
-    the Pallas kernel. ``interpret=None`` resolves at construction: the
-    interpreter on CPU hosts, native execution elsewhere."""
+    the Pallas kernel (write AND scrub kernels). ``interpret=None`` resolves
+    at construction: the interpreter on CPU hosts, native elsewhere."""
 
     def __init__(self, name: str, use_kernel: bool,
                  interpret: Optional[bool] = None):
         self.name = name
         self.use_kernel = use_kernel
+        self._scrub_use_kernel = use_kernel
         if interpret is None:
             interpret = jax.default_backend() == "cpu"
         self.interpret = interpret
+        self._scrub_interpret = interpret
         self._oracle = OracleBackend()
 
     def leaf_write(self, key, old, new, lv: LeafVectors):
@@ -125,6 +191,17 @@ class ExactBackend:
         assert old.shape == new.shape and old.dtype == new.dtype
         bits = new.size * jnp.dtype(new.dtype).itemsize * 8
         return new, WriteStats.for_bits(bits)
+
+    def leaf_scrub(self, key, stored, mask, lv: LeafVectors):
+        """Perfect, free correction (no approximation model): the decayed
+        bits are restored, residual cleared, only addressed bits counted."""
+        del key, lv
+        from repro.core.priority import uint_type
+        ut = uint_type(stored.dtype)
+        corrected = jax.lax.bitcast_convert_type(
+            jax.lax.bitcast_convert_type(stored, ut) ^ mask, stored.dtype)
+        bits = stored.size * jnp.dtype(stored.dtype).itemsize * 8
+        return corrected, jnp.zeros_like(mask), WriteStats.for_bits(bits)
 
 
 # ---------------------------------------------------------------------------

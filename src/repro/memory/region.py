@@ -22,6 +22,7 @@ import dataclasses
 from typing import Any, Callable, Dict, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.priority import Priority
 from repro.memory.plan import WritePlan
@@ -33,6 +34,13 @@ class MemoryRegion:
     plan: WritePlan
     data: Any
     stats: WriteStats
+    # repro.reliability: every region carries a lifetime plan/state. The
+    # default (retention_scale == 0) is the IMMORTAL plan — ``age`` is a
+    # pure identity, so pre-reliability callers (and the ApproxStore shim)
+    # stay bit-identical to the PR 3 substrate.
+    life_plan: Any = None
+    life: Any = None
+    scrub_stats: WriteStats = None
 
     @classmethod
     def create(cls, data: Any, *,
@@ -40,14 +48,19 @@ class MemoryRegion:
                policy: Optional[Callable] = None,
                backend: str = "lanes_ref",
                soft_error_ber: float = 0.0,
-               soft_error_hardened: bool = True) -> "MemoryRegion":
+               soft_error_hardened: bool = True,
+               ambient_k: float = 300.0,
+               retention_scale: float = 0.0) -> "MemoryRegion":
         """Build a region around ``data`` (a pytree of arrays).
 
         ``level`` is the uniform tag used when no ``policy`` is given
         (EXACT leaves bypass the approximate driver entirely, matching the
         paper's untagged-data default); ``policy(path, leaf)`` overrides
-        per leaf.
+        per leaf. ``retention_scale`` (modeled dwell seconds per ``age``
+        step) turns on the retention model at ``ambient_k`` kelvin; 0
+        keeps the region immortal.
         """
+        from repro.reliability import LifetimePlan
         lvl = Priority.coerce(level)
         pol = policy if policy is not None else (lambda path, leaf: lvl)
         plan = WritePlan.for_tree(
@@ -55,22 +68,83 @@ class MemoryRegion:
             soft_error_ber=soft_error_ber,
             soft_error_hardened=soft_error_hardened,
             approx_if=lambda leaf, tag: tag != Priority.EXACT)
-        return cls(plan=plan, data=data, stats=WriteStats.zero())
+        life_plan = LifetimePlan.for_tree(data, plan, ambient_k=ambient_k,
+                                          dwell_s=retention_scale)
+        return cls(plan=plan, data=data, stats=WriteStats.zero(),
+                   life_plan=life_plan, life=life_plan.init_state(data),
+                   scrub_stats=WriteStats.zero())
 
     def write(self, key: jax.Array, new_tree: Any,
               floor: Priority = Priority.LOW) -> "MemoryRegion":
         """Diff-write ``new_tree`` over the stored bits; returns the new
-        region (same plan, one compiled executable shared across writes)."""
+        region (same plan, one compiled executable shared across writes).
+        A full write voids the decay record (every approximate bit was
+        re-driven or confirmed equal to the new value) and books one unit
+        of endurance wear per approximate leaf."""
         stored, st = self.plan.jitted_write()(
             key, self.data, new_tree, self.plan.vectors_for(floor))
+        life = self.life
+        if life is not None and not self.life_plan.immortal:
+            approx = self.life_plan._approx_iota()
+            life = dataclasses.replace(
+                life,
+                masks=tuple(None if m is None else jnp.zeros_like(m)
+                            for m in life.masks),
+                write_count=life.write_count + approx,
+                last_write_step=jnp.where(approx > 0, life.step,
+                                          life.last_write_step))
         return dataclasses.replace(self, data=stored,
-                                   stats=self.stats + st)
+                                   stats=self.stats + st, life=life)
+
+    def age(self, key: jax.Array, steps: int = 1,
+            floor: Priority = Priority.LOW) -> "MemoryRegion":
+        """Let the stored bits dwell ``steps`` region-steps at the plan's
+        ambient temperature — retention decay per ``repro.reliability``.
+        A single closed-form draw covers the whole dwell (the decay
+        process is memoryless); a pure dwell books NO write wear.
+        Identity on immortal regions."""
+        if self.life_plan is None or self.life_plan.immortal:
+            return self
+        vectors = self.life_plan.vectors_for(
+            floor, dwell_s=self.life_plan.dwell_s * steps)
+        data, life = self.life_plan.advance(key, self.data, self.life,
+                                            vectors, count_write=False,
+                                            steps=steps)
+        return dataclasses.replace(self, data=data, life=life)
+
+    def scrub(self, key: jax.Array,
+              floor: Priority = Priority.LOW) -> "MemoryRegion":
+        """Corrective re-write of the accumulated decay through the
+        region's backend (the scrub kernel); re-write energy accumulates
+        in the separate scrub ledger. Identity on immortal regions."""
+        if self.life_plan is None or self.life_plan.immortal:
+            return self
+        from repro.reliability import scrub_tree
+        data, life, st = scrub_tree(key, self.data, self.life,
+                                    self.life_plan,
+                                    self.plan.vectors_for(floor))
+        return dataclasses.replace(self, data=data, life=life,
+                                   scrub_stats=self.scrub_stats + st)
 
     def read(self) -> Any:
         return self.data
 
     def report(self) -> Dict[str, Any]:
-        """Cumulative accounting — the single device->host sync point."""
+        """Cumulative accounting — the single device->host sync point.
+        With retention enabled the lifetime ledger rides along: write +
+        scrub energy, sampled decay flips, still-decayed bits."""
         out = self.stats.host_dict()
         out["backend"] = self.plan.backend.name
+        if self.life_plan is not None and not self.life_plan.immortal:
+            scrub = (self.scrub_stats.host_dict()
+                     if self.scrub_stats is not None
+                     else WriteStats.zero().host_dict())
+            flips, decayed = jax.device_get(
+                (self.life.retention_flips, self.life.decayed_bits()))
+            out["scrub_energy_pj"] = scrub["energy_pj"]
+            out["scrub_errors"] = scrub["bit_errors"]
+            out["lifetime_energy_pj"] = out["energy_pj"] + scrub["energy_pj"]
+            out["retention_flips"] = int(flips)
+            out["residual_decayed_bits"] = int(decayed)
+            out["ambient_k"] = self.life_plan.ambient_k
         return out

@@ -1,0 +1,33 @@
+"""repro.reliability — the time axis of the EXTENT reproduction.
+
+The write substrate (``repro.memory``, PR 3) models reliability at the
+instant of the write; this package gives stored data a *lifetime*:
+
+  * ``lifetime``  — per-leaf retention/endurance state (``LifetimeState``)
+                    and the resolve-once ``LifetimePlan`` whose per-floor
+                    Δ(T) decay rates advance inside ``lax.scan`` decode
+                    bursts with zero host syncs;
+  * ``scrub``     — corrective re-write passes over the decay masks,
+                    through the Pallas scrub kernel / jnp oracle behind
+                    the ``repro.memory`` backend registry
+                    (``Backend.leaf_scrub``), energy charged via the
+                    unified ``WriteStats``;
+  * ``policy``    — host-side scrub scheduling (periodic / wear-aware /
+                    quality-floor-aware), wired into the serving
+                    scheduler as idle-slot background work and into
+                    checkpoint restore as a pre-restore integrity pass
+                    (``RestoreIntegrity``).
+
+This is the first subsystem where EXTENT's write-energy savings can be
+weighed against LIFETIME energy — writes + scrubs + uncorrected errors —
+rather than per-write energy alone (``benchmarks/retention_sweep.py``).
+"""
+from repro.reliability.lifetime import (  # noqa: F401
+    MIN_P_STEP, RETENTION_DERATE, LifetimePlan, LifetimeState,
+    RestoreIntegrity, decay_tensor, retention_delta, retention_flip_p,
+)
+from repro.reliability.policy import (  # noqa: F401
+    PeriodicScrub, QualityFloorScrub, ScrubPolicy, WearAwareScrub,
+    make_scrub_policy,
+)
+from repro.reliability.scrub import scrub_tree  # noqa: F401

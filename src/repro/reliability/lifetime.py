@@ -1,0 +1,357 @@
+"""Device-resident retention/endurance lifetime state for memory regions.
+
+The write path (PR 3's ``repro.memory`` substrate) models reliability at
+the instant of the write; between writes a stored bit was immortal. This
+module adds the time axis: every stored bit of an approximate leaf decays
+with the thermal-activation rate of its cell,
+
+    tau(T)  = tau0 * exp(Delta_eff(T))          (paper Eq. 15 at V = 0)
+    p_flip  = 1 - exp(-dwell / tau)             (paper Eq. 14)
+
+with ``Delta_eff = delta_of_t(T) * derate(level)`` — Δ(T) from the device
+layer (``core.mtj.delta_of_t``, the same source ``core.wer`` and
+``benchmarks/fig6_thermal`` use) and a per-priority derate expressing
+Munira et al.'s observation that retention, write energy and WER trade off
+through the same Δ: the weak LOW driver writes shallower states that also
+rot faster, so EXTENT's approximation floors set the decay clock too.
+
+Bit-plane refinement mirrors the write path: planes coded EXACT by
+``bitplane_priorities`` (sign/exponent) are refresh/ECC-protected and never
+decay; mantissa planes decay at their plane's level. Probabilities below
+``MIN_P_STEP`` are clamped to exactly zero — one expected flip per 1e8
+bit-steps is beneath the simulation's resolution, and the clamp makes
+high-Δ regions *bit-stable by construction* (a 300 K decode with retention
+enabled is bit-identical to one with retention disabled).
+
+RNG contract: the decay sampler hashes (seed, FLAT element index, bit
+plane) with the same murmur3 counter hash as the extent-write kernels, so
+decay is invariant to reshapes/blockings of the leaf and advances inside
+``lax.scan`` decode bursts with zero host syncs. Per-leaf sub-streams fold
+``_RET_KEY_OFFSET + leaf_index`` into the step key — disjoint from the
+write (``i``) and soft-error (``1_000_003 + i``) folds of ``WritePlan``.
+
+State is carried per leaf, on device:
+  * ``masks``    — element-space XOR mask of bits currently differing from
+                   the last written value (the decay record the scrub pass
+                   corrects; XOR-accumulated, so a bit that flips twice is
+                   correctly *not* decayed);
+  * ``write_count`` / ``scrub_count`` — endurance wear counters;
+  * ``last_write_step`` / ``last_scrub_step`` — wear-leveling metadata;
+  * ``retention_flips`` — total sampled decay flips (the honesty counter).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mtj, wer
+from repro.core.priority import (Priority, bitplane_priorities, bits_of,
+                                 uint_type)
+from repro.kernels.extent_write.kernel import _hash_u32, _K_BIT, _K_ELEM
+from repro.memory.plan import WritePlan
+
+#: RNG sub-stream offsets (see module doc): retention decay and scrub keys
+#: fold these plus the flat leaf index into the step key.
+_RET_KEY_OFFSET = 2_000_003
+_SCRUB_KEY_OFFSET = 3_000_017
+
+#: per-priority Delta derate: the approximation floor sets the decay clock.
+RETENTION_DERATE = {
+    Priority.LOW: 0.80,
+    Priority.MID: 0.90,
+    Priority.HIGH: 0.97,
+    Priority.EXACT: 1.0,
+}
+
+#: flip probabilities below this are exactly zero (see module doc).
+MIN_P_STEP = 1e-8
+
+
+def retention_delta(level: Priority, t_k: float,
+                    p: mtj.MTJParams = mtj.DEFAULT_MTJ) -> float:
+    """Effective thermal stability of a ``level``-written cell at ``t_k``
+    kelvin — Δ(T) from the device layer times the level derate."""
+    return float(wer.delta_of_t(jnp.asarray(t_k, jnp.float32), p)) * \
+        RETENTION_DERATE[Priority.coerce(level)]
+
+
+def retention_flip_p(level: Priority, t_k: float, dwell_s: float,
+                     p: mtj.MTJParams = mtj.DEFAULT_MTJ) -> float:
+    """Probability one stored bit decays within ``dwell_s`` seconds (Eq. 14
+    at zero bias), clamped to exactly 0 below ``MIN_P_STEP``."""
+    if dwell_s <= 0.0:
+        return 0.0
+    d = retention_delta(level, t_k, p)
+    prob = float(wer.switching_probability(dwell_s, d, 0.0, p.tau0))
+    return prob if prob >= MIN_P_STEP else 0.0
+
+
+@functools.lru_cache(maxsize=1024)
+def _retention_thresholds(dtype, level: Priority, t_k: float,
+                          dwell_s: float) -> jax.Array:
+    """(element_bits,) u32 decay thresholds for one (dtype, effective
+    level, temperature, dwell): per-plane p_flip * 2^32, EXACT planes 0.
+    lru-cached + compile-time-eval'd like ``plan.leaf_vectors`` — safe to
+    resolve while tracing, and a (floor, ambient) swap between bursts
+    exchanges operands without retracing."""
+    with jax.ensure_compile_time_eval():
+        codes = bitplane_priorities(dtype, Priority.coerce(level))
+        probs = np.asarray([
+            0.0 if c == int(Priority.EXACT)
+            else retention_flip_p(Priority(int(c)), t_k, dwell_s)
+            for c in codes], np.float64)
+        thr = (np.clip(probs, 0.0, 1.0) * 2**32).astype(
+            np.uint64).clip(0, 2**32 - 1).astype(np.uint32)
+        return jnp.asarray(thr)
+
+
+def _decay_leaf(key: jax.Array, x: jax.Array, thr: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sample retention flips on every stored bit of ``x``.
+
+    Counter RNG over (seed, flat element index, bit plane) — bit-identical
+    under any reshape of ``x``. Returns (decayed, flip_mask (uint element
+    view), n_flips i32). With an all-zero ``thr`` this is a bit-exact
+    identity (u < 0 never holds), at the cost of the hash evaluation only.
+    """
+    ut = uint_type(x.dtype)
+    nbits = bits_of(x.dtype)
+    xu = jax.lax.bitcast_convert_type(x, ut)
+    seed = jax.random.bits(key, (), jnp.uint32)
+    elem = jnp.arange(xu.size, dtype=jnp.uint32).reshape(xu.shape)
+    bits = jnp.arange(nbits, dtype=jnp.uint32)
+    u = _hash_u32(elem[..., None] * _K_ELEM ^ (bits * _K_BIT) ^ seed)
+    strike = u < thr                                     # (..., nbits)
+    shift = jnp.arange(nbits, dtype=ut)
+    mask = jnp.sum(jnp.where(strike, ut(1) << shift, ut(0)), axis=-1,
+                   dtype=ut)
+    flips = jnp.sum(strike, dtype=jnp.int32)
+    return jax.lax.bitcast_convert_type(xu ^ mask, x.dtype), mask, flips
+
+
+def decay_tensor(key: jax.Array, x: jax.Array, *, level: Priority,
+                 ambient_k: float, dwell_s: float
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-tensor retention decay: ``x`` sat for ``dwell_s`` seconds at
+    ``ambient_k`` kelvin after a ``level``-quality write. Returns (decayed,
+    flip_mask (uint view), n_flips) — the checkpoint integrity pass and the
+    region-level API ride on this."""
+    thr = _retention_thresholds(jnp.dtype(x.dtype), Priority.coerce(level),
+                                float(ambient_k), float(dwell_s))
+    return _decay_leaf(key, x, thr)
+
+
+@dataclasses.dataclass(frozen=True)
+class LifetimeState:
+    """Per-region lifetime state — a pytree of device arrays, scan-carried
+    alongside the data it shadows (one entry per flat leaf of the region;
+    exact leaves carry ``None`` masks and zero rows in the counters)."""
+    step: jax.Array               # i32: device decode-step clock
+    masks: Tuple[Optional[jax.Array], ...]  # per-leaf decayed-bit XOR masks
+    write_count: jax.Array        # (L,) i32 endurance wear: writes per leaf
+    scrub_count: jax.Array        # (L,) i32 wear: scrub passes per leaf
+    retention_flips: jax.Array    # i32: total sampled decay flips
+    last_write_step: jax.Array    # (L,) i32
+    last_scrub_step: jax.Array    # (L,) i32
+
+    def decayed_bits(self) -> jax.Array:
+        """Current number of stored bits differing from their written value
+        (popcount of the masks) — 0-d i32, device-resident."""
+        total = jnp.zeros((), jnp.int32)
+        for m in self.masks:
+            if m is not None:
+                total = total + jnp.sum(
+                    jax.lax.population_count(m).astype(jnp.int32),
+                    dtype=jnp.int32)
+        return total
+
+
+jax.tree_util.register_dataclass(
+    LifetimeState,
+    data_fields=["step", "masks", "write_count", "scrub_count",
+                 "retention_flips", "last_write_step", "last_scrub_step"],
+    meta_fields=[],
+)
+
+
+@dataclasses.dataclass
+class LifetimePlan:
+    """Resolve-once retention policy shadowing one ``WritePlan``.
+
+    Holds the per-leaf dtypes + static levels and resolves (floor, ambient
+    temperature) pairs to per-leaf decay-threshold OPERANDS — same contract
+    as ``WritePlan.vectors_for``: swapping floor or ambient between bursts
+    exchanges arrays, never retraces. ``dwell_s`` is the modeled device
+    dwell per decode step (the ``--retention-scale`` knob); ``dwell_s == 0``
+    is the *immortal* plan — ``advance`` is a pure identity.
+    """
+    plan: WritePlan
+    leaf_dtypes: Tuple[Any, ...]
+    ambient_k: float = 300.0
+    dwell_s: float = 0.0
+
+    @classmethod
+    def for_tree(cls, tree: Any, plan: WritePlan, *,
+                 ambient_k: float = 300.0,
+                 dwell_s: float = 0.0) -> "LifetimePlan":
+        """``tree``: arrays or ShapeDtypeStructs with the plan's structure
+        (only dtypes are read)."""
+        flat = jax.tree.leaves(tree)
+        return cls(plan=plan,
+                   leaf_dtypes=tuple(jnp.dtype(l.dtype) for l in flat),
+                   ambient_k=ambient_k, dwell_s=dwell_s)
+
+    @property
+    def immortal(self) -> bool:
+        return self.dwell_s <= 0.0
+
+    # ------------------------------------------------------------- operands
+    def vectors_for(self, floor: Priority = Priority.LOW,
+                    ambient_k: Optional[float] = None,
+                    dwell_s: Optional[float] = None
+                    ) -> Tuple[Optional[jax.Array], ...]:
+        """Per-leaf decay-threshold operands for one (floor, ambient)
+        combination — ``None`` for exact leaves. The ambient override is
+        how a temperature *schedule* runs: the host swaps operands between
+        bursts, the compiled burst never retraces."""
+        t_k = self.ambient_k if ambient_k is None else float(ambient_k)
+        dw = self.dwell_s if dwell_s is None else float(dwell_s)
+        floor = Priority.coerce(floor)
+        return tuple(
+            _retention_thresholds(dt, max(lvl, floor), t_k, dw)
+            if lvl is not None else None
+            for dt, lvl in zip(self.leaf_dtypes, self.plan.leaf_levels))
+
+    # ---------------------------------------------------------------- state
+    def init_state(self, tree: Any) -> LifetimeState:
+        """Fresh (just-written, zero-wear) state for a concrete tree."""
+        flat = jax.tree.leaves(tree)
+        masks = tuple(
+            jnp.zeros(l.shape, uint_type(l.dtype)) if lvl is not None
+            else None
+            for l, lvl in zip(flat, self.plan.leaf_levels))
+        L = len(flat)
+        zl = jnp.zeros((L,), jnp.int32)
+        return LifetimeState(step=jnp.zeros((), jnp.int32), masks=masks,
+                             write_count=zl, scrub_count=zl,
+                             retention_flips=jnp.zeros((), jnp.int32),
+                             last_write_step=zl, last_scrub_step=zl)
+
+    def _approx_iota(self) -> jax.Array:
+        """(L,) i32 1-for-approximate-leaf vector (compile-time const)."""
+        return jnp.asarray([1 if lvl is not None else 0
+                            for lvl in self.plan.leaf_levels], jnp.int32)
+
+    # -------------------------------------------------------------- advance
+    def advance(self, key: jax.Array, tree: Any, state: LifetimeState,
+                vectors: Optional[Tuple[Optional[jax.Array], ...]] = None,
+                *, count_write: bool = True, steps: int = 1
+                ) -> Tuple[Any, LifetimeState]:
+        """One dwell interval: sample decay on every stored bit of the
+        approximate leaves, XOR-fold the flips into the masks, bump the
+        clocks. Jit-/scan-resident, zero host syncs. ``key`` is the step's
+        write key (sub-streams are folded per leaf, so the caller's RNG
+        schedule is IDENTICAL with retention on or off).
+
+        ``count_write=True`` (the decode-burst case: the step re-wrote the
+        leaves before dwelling) also advances the endurance wear counters;
+        a pure dwell (``MemoryRegion.age``) passes False so aging is never
+        booked as write wear. ``steps`` is how many region-steps of dwell
+        the caller's ``vectors`` cover (one decay draw, memoryless
+        process) so the device clock stays in step units."""
+        if self.immortal:
+            return tree, state
+        if vectors is None:
+            vectors = self.vectors_for()
+        flat, treedef = jax.tree.flatten(tree)
+        masks = list(state.masks)
+        flips = jnp.zeros((), jnp.int32)
+        out = []
+        for i, leaf in enumerate(flat):
+            thr = vectors[i]
+            if thr is None:
+                out.append(leaf)
+                continue
+            k = jax.random.fold_in(key, _RET_KEY_OFFSET + i)
+            decayed, dmask, n = _decay_leaf(k, leaf, thr)
+            out.append(decayed)
+            masks[i] = masks[i] ^ dmask
+            flips = flips + n
+        step2 = state.step + steps
+        state2 = dataclasses.replace(
+            state, step=step2, masks=tuple(masks),
+            retention_flips=state.retention_flips + flips)
+        if count_write:
+            approx = self._approx_iota()
+            state2 = dataclasses.replace(
+                state2, write_count=state.write_count + approx,
+                last_write_step=jnp.where(approx > 0, step2,
+                                          state.last_write_step))
+        return treedef.unflatten(out), state2
+
+    def clear_written(self, state: LifetimeState, pos: jax.Array,
+                      active: jax.Array) -> LifetimeState:
+        """Forget the decay record of the locations a decode step just
+        re-wrote: the ring column at ``pos % C`` per ACTIVE slot for
+        sequence-axis leaves, the whole active row otherwise (the full
+        diff write). Inactive slots keep their masks — their stored bits
+        were carried through unchanged, so their decay is still real.
+        Without this, a flip sampled on a not-yet-written column would
+        leave a stale mask bit behind after the column is later written,
+        and the next scrub pass would XOR that stale bit into LIVE data
+        (corrupting it while reporting a correction)."""
+        if self.immortal:
+            return state
+        plan = self.plan
+        bx = plan.batch_axis
+        masks = list(state.masks)
+        for i, m in enumerate(masks):
+            if m is None:
+                continue
+            rshape = [1] * m.ndim
+            rshape[bx] = active.shape[0]
+            row = active.reshape(rshape)
+            ax = plan.leaf_seq_axis[i]
+            if ax is None:
+                hit = row
+            else:
+                C = m.shape[ax]
+                idx = (pos % C).reshape(rshape)
+                hit = (jax.lax.broadcasted_iota(jnp.int32, m.shape, ax)
+                       == idx) & row
+            masks[i] = jnp.where(hit, jnp.zeros_like(m), m)
+        return dataclasses.replace(state, masks=tuple(masks))
+
+    # ------------------------------------------------------ admission reset
+
+    def reset_rows(self, state: LifetimeState, idx: jax.Array
+                   ) -> LifetimeState:
+        """Clear the decay masks of the rows ``idx`` along the plan's batch
+        axis — called when a slot is re-admitted (its rows were freshly
+        prefill-written, so nothing is decayed there anymore)."""
+        ax = self.plan.batch_axis
+        masks = tuple(
+            None if m is None else jnp.moveaxis(
+                jnp.moveaxis(m, ax, 0).at[idx].set(0), 0, ax)
+            for m in state.masks)
+        return dataclasses.replace(state, masks=masks)
+
+
+@dataclasses.dataclass(frozen=True)
+class RestoreIntegrity:
+    """Pre-restore integrity pass for checkpoints (``train.checkpoint``):
+    approximate leaves sat in NVM for ``dwell_s`` seconds at ``ambient_k``
+    kelvin — sample the retention decay of that dwell, then (optionally)
+    scrub: ECC-correct + re-write the decayed bits through the checkpoint
+    backend, charging the re-write energy to the restore report. With
+    ``scrub=False`` the decayed values are handed back as-is (the
+    cold-storage honesty mode)."""
+    ambient_k: float = 350.0
+    dwell_s: float = 3600.0
+    scrub: bool = True
+

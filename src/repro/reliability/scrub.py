@@ -1,0 +1,114 @@
+"""Scrub pipeline: corrective re-writes of decayed bits over a pytree.
+
+Drives ``Backend.leaf_scrub`` (the Pallas scrub kernel / its jnp oracle —
+selected by the SAME registry name as the write path) across the
+approximate leaves of a region, against the decay masks maintained by
+``lifetime.LifetimePlan.advance``:
+
+  * every decayed bit is re-written through the EXTENT driver at the
+    leaf's (floor-composed) level — the re-write pays write-path energy
+    through the unified ``WriteStats`` (charged to a separate stream by
+    the callers, so scrubbing shows up honestly in the energy ledger) and
+    can itself FAIL with the level's WER: failed corrections stay decayed
+    in the residual mask and are retried next pass;
+  * leaves with a sequence axis can be scrubbed in **column-scoped
+    blocks** (a window of ring columns per pass) so a serving scheduler
+    can spread one full-cache scrub over many idle slots instead of
+    stalling a burst;
+  * ``enabled`` is a static per-leaf gate: policies (``policy.py``) scrub
+    HIGH-floor leaves aggressively while letting LOW leaves rot.
+
+Everything is jit-safe; one compiled executable per (enabled, cols)
+signature, with driver/threshold vectors as operands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.memory.stats import WriteStats
+from repro.reliability.lifetime import (LifetimePlan, LifetimeState,
+                                        _SCRUB_KEY_OFFSET)
+
+
+def _column_window(leaf: jax.Array, ax: int, cursor: jax.Array,
+                   cols: int) -> jax.Array:
+    """Indices of the ``cols``-wide ring-column window starting at
+    ``cursor`` (wrapping modulo the sequence length)."""
+    C = leaf.shape[ax]
+    return (cursor + jnp.arange(cols, dtype=jnp.int32)) % C
+
+
+def _take_cols(leaf: jax.Array, ax: int, idx: jax.Array) -> jax.Array:
+    return jnp.take(leaf, idx, axis=ax)
+
+
+def _put_cols(leaf: jax.Array, ax: int, idx: jax.Array,
+              window: jax.Array) -> jax.Array:
+    return jnp.moveaxis(
+        jnp.moveaxis(leaf, ax, 0).at[idx].set(jnp.moveaxis(window, ax, 0)),
+        0, ax)
+
+
+def scrub_tree(
+    key: jax.Array,
+    tree: Any,
+    state: LifetimeState,
+    life_plan: LifetimePlan,
+    vectors: Sequence,
+    *,
+    enabled: Optional[Tuple[bool, ...]] = None,
+    cols: Optional[int] = None,
+    cursor: Optional[jax.Array] = None,
+) -> Tuple[Any, LifetimeState, WriteStats]:
+    """One scrub pass. ``vectors`` is the WRITE plan's per-leaf operand
+    tuple (``WritePlan.vectors_for(floor)``) — scrub re-writes at write
+    prices. ``enabled``/``cols`` are static (per-signature executables);
+    ``cursor`` is a traced i32 start column for the window mode.
+
+    Returns (scrubbed_tree, state', WriteStats): masks of scrubbed spans
+    are replaced by the residual (failed-correction) masks, scrub wear
+    counters advance, and the pass's stats reduce into one WriteStats.
+    """
+    plan = life_plan.plan
+    flat, treedef = jax.tree.flatten(tree)
+    if enabled is None:
+        enabled = tuple(lvl is not None for lvl in plan.leaf_levels)
+    masks = list(state.masks)
+    out = []
+    acc = WriteStats.zero()
+    scrubbed_vec = []
+    for i, leaf in enumerate(flat):
+        lvl = plan.leaf_levels[i]
+        if lvl is None or not enabled[i] or masks[i] is None:
+            out.append(leaf)
+            scrubbed_vec.append(0)
+            continue
+        k = jax.random.fold_in(key, _SCRUB_KEY_OFFSET + i)
+        be = plan.backend
+        ax = plan.leaf_seq_axis[i]
+        if cols is not None and ax is not None and cols < leaf.shape[ax]:
+            idx = _column_window(leaf, ax, cursor, cols)
+            w_leaf = _take_cols(leaf, ax, idx)
+            w_mask = _take_cols(masks[i], ax, idx)
+            s_leaf, residual, st = be.leaf_scrub(k, w_leaf, w_mask,
+                                                vectors[i])
+            out.append(_put_cols(leaf, ax, idx, s_leaf))
+            masks[i] = _put_cols(masks[i], ax, idx, residual)
+        else:
+            s_leaf, residual, st = be.leaf_scrub(k, leaf, masks[i],
+                                                 vectors[i])
+            out.append(s_leaf)
+            masks[i] = residual
+        acc = acc + st
+        scrubbed_vec.append(1)
+    scrubbed = jnp.asarray(scrubbed_vec, jnp.int32)
+    state2 = dataclasses.replace(
+        state, masks=tuple(masks),
+        scrub_count=state.scrub_count + scrubbed,
+        last_scrub_step=jnp.where(scrubbed > 0, state.step,
+                                  state.last_scrub_step))
+    return treedef.unflatten(out), state2, acc

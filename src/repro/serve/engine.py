@@ -91,6 +91,14 @@ class ServeConfig:
     # sign/exponent planes. Surfaced as soft_strikes in the serve report.
     soft_error_ber: float = 0.0
     soft_error_hardened: bool = True
+    # repro.reliability: modeled device dwell (seconds) per decode step —
+    # 0.0 disables the retention model entirely (the burst carry and the
+    # compiled computation are then IDENTICAL to the pre-reliability
+    # engine). With dwell > 0 every stored cache bit decays per step at the
+    # Δ(T)-derived rate of its priority level and ambient temperature, and
+    # the scheduler may run scrub passes against the accumulated decay.
+    retention_scale: float = 0.0
+    ambient_k: float = 300.0
 
 
 def _tag_cache(cache: Any) -> Any:
@@ -181,6 +189,19 @@ class ServingEngine:
             axes=self.api.cache_axes(), batch_axis=BATCH_AXIS,
             soft_error_ber=serve_cfg.soft_error_ber,
             soft_error_hardened=serve_cfg.soft_error_hardened)
+        # the lifetime plan shadows the write plan when retention is on:
+        # per-(leaf, floor, ambient) decay thresholds are operands, resolved
+        # once — an ambient-temperature schedule swaps arrays between
+        # bursts, never retraces (repro.reliability.lifetime).
+        self.life_plan = None
+        if serve_cfg.retention_scale > 0.0:
+            from repro.reliability import LifetimePlan
+            self.life_plan = LifetimePlan.for_tree(
+                cache_sds, self.plan, ambient_k=serve_cfg.ambient_k,
+                dwell_s=serve_cfg.retention_scale)
+            self._scrub_fused = jax.jit(
+                self._make_scrub(), static_argnames=("enabled", "cols"))
+            self._life_reset = jax.jit(self.life_plan.reset_rows)
         self._prefill_fused = jax.jit(self._make_fused_prefill(
             diff_old_rows=False))
         self._admit_fused = jax.jit(self._make_fused_prefill(
@@ -192,6 +213,14 @@ class ServingEngine:
         """Per-leaf driver-vector operands for one quality floor (see
         WritePlan). LOW is the identity floor: the static KV policy alone."""
         return self.plan.vectors_for(floor)
+
+    def retention_vectors_for(self, floor: Priority = Priority.LOW,
+                              ambient_k: Optional[float] = None) -> Tuple:
+        """Per-leaf decay-threshold operands (LifetimePlan) for one
+        (floor, ambient) pair — same operand-swap/no-retrace contract as
+        ``vectors_for_floor``. Only valid with retention enabled."""
+        assert self.life_plan is not None, "retention_scale == 0"
+        return self.life_plan.vectors_for(floor, ambient_k=ambient_k)
 
     # ---------------------------------------------------------- fused steps
     def _make_fused_prefill(self, diff_old_rows: bool):
@@ -232,32 +261,77 @@ class ServingEngine:
         guard is a bit-exact identity, so ``generate()`` and the lockstep
         scheduler hit literally the same compiled computation.
         """
-        def burst(params, tok, cache, pos, key, acc, slot_acc, active,
-                  vectors, *, n):
+        retention = self.life_plan is not None
+
+        def step_body(params, tok, cache, pos, key, acc, slot_acc, active,
+                      vectors, life, rvec):
             act_i = active.astype(jnp.int32)
+            key, k_write, k_sample = jax.random.split(key, 3)
+            logits, new_cache = self.api.decode_step(
+                params, tok, cache, pos, self.scfg.max_seq)
+            new_cache = mask_rows(new_cache, cache, active)
+            if self.scfg.extent_enabled:
+                new_cache, st = self.plan.write_columns(
+                    k_write, cache, new_cache, pos, vectors)
+                acc = acc + st
+                slot_acc = add_slot_stats(slot_acc, st, active)
+            if retention:
+                # the step re-wrote the active slots' ring columns: their
+                # decay record is void (stale bits would make a later
+                # scrub corrupt live data) ...
+                life = self.life_plan.clear_written(life, pos, active)
+                # ... then dwell one step at ambient T: every stored bit
+                # of the approximate leaves may decay. The retention
+                # sub-streams fold off k_write, so the write/sample RNG
+                # schedule is IDENTICAL with retention on or off — a
+                # 300 K run (all decay thresholds clamp to zero) is
+                # bit-identical to a retention-disabled run.
+                new_cache, life = self.life_plan.advance(
+                    k_write, new_cache, life, rvec)
+            tok2 = self._sample(k_sample, logits)
+            tok2 = jnp.where(active, tok2, tok)
+            return tok2, new_cache, pos + act_i, key, acc, slot_acc, life
 
-            def body(carry, _):
-                tok, cache, pos, key, acc, slot_acc = carry
-                key, k_write, k_sample = jax.random.split(key, 3)
-                logits, new_cache = self.api.decode_step(
-                    params, tok, cache, pos, self.scfg.max_seq)
-                new_cache = mask_rows(new_cache, cache, active)
-                if self.scfg.extent_enabled:
-                    new_cache, st = self.plan.write_columns(
-                        k_write, cache, new_cache, pos, vectors)
-                    acc = acc + st
-                    slot_acc = add_slot_stats(slot_acc, st, active)
-                tok2 = self._sample(k_sample, logits)
-                tok2 = jnp.where(active, tok2, tok)
-                return (tok2, new_cache, pos + act_i, key, acc,
-                        slot_acc), tok2
+        if retention:
+            def burst(params, tok, cache, pos, key, acc, slot_acc, active,
+                      vectors, life, rvec, *, n):
+                def body(carry, _):
+                    out = step_body(params, *carry[:6], active, vectors,
+                                    carry[6], rvec)
+                    return out, out[0]
 
-            carry = (tok, cache, pos, key, acc, slot_acc)
-            (tok, cache, pos, key, acc, slot_acc), toks = jax.lax.scan(
-                body, carry, None, length=n)
-            return tok, cache, pos, key, acc, slot_acc, toks
+                carry = (tok, cache, pos, key, acc, slot_acc, life)
+                (tok, cache, pos, key, acc, slot_acc, life), toks = (
+                    jax.lax.scan(body, carry, None, length=n))
+                return tok, cache, pos, key, acc, slot_acc, life, toks
+        else:
+            def burst(params, tok, cache, pos, key, acc, slot_acc, active,
+                      vectors, *, n):
+                def body(carry, _):
+                    out = step_body(params, *carry, active, vectors,
+                                    None, None)
+                    return out[:6], out[0]
+
+                carry = (tok, cache, pos, key, acc, slot_acc)
+                (tok, cache, pos, key, acc, slot_acc), toks = jax.lax.scan(
+                    body, carry, None, length=n)
+                return tok, cache, pos, key, acc, slot_acc, toks
 
         return burst
+
+    def _make_scrub(self):
+        """Fused scrub pass (repro.reliability.scrub): corrective re-write
+        of the accumulated decay through the SAME backend as the write
+        path, stats in one device-resident WriteStats. ``enabled``/``cols``
+        are static (one executable per policy signature); ``cursor`` and
+        every vector are operands."""
+        from repro.reliability import scrub_tree
+
+        def scrub(key, cache, life, vectors, cursor, *, enabled, cols):
+            return scrub_tree(key, cache, life, self.life_plan, vectors,
+                              enabled=enabled, cols=cols, cursor=cursor)
+
+        return scrub
 
     # ------------------------------------------------------------- sampling
     def _sample(self, key, logits: jax.Array) -> jax.Array:
@@ -299,21 +373,43 @@ class ServingEngine:
         active = jnp.ones((B,), bool)
         acc = WriteStats.zero()
         slot_acc = zero_slot_stats(B)
+        life = (self.life_plan.init_state(cache)
+                if self.life_plan is not None else None)
         if mnt > 1:
-            _, cache, pos, key, acc, slot_acc, toks = self._burst(
-                self.params, tok, cache, pos, key, acc, slot_acc, active,
-                vectors, n=mnt - 1)
+            if self.life_plan is not None:
+                rvec = self.retention_vectors_for(Priority.LOW)
+                (_, cache, pos, key, acc, slot_acc, life,
+                 toks) = self._burst(
+                    self.params, tok, cache, pos, key, acc, slot_acc,
+                    active, vectors, life, rvec, n=mnt - 1)
+            else:
+                _, cache, pos, key, acc, slot_acc, toks = self._burst(
+                    self.params, tok, cache, pos, key, acc, slot_acc,
+                    active, vectors, n=mnt - 1)
             tokens = jnp.concatenate([tok[:, None],
                                       jnp.moveaxis(toks, 0, 1)], axis=1)
         else:
             tokens = tok[:, None]
 
         if not sync_stats:
-            return tokens, {"device_stats": {"kv_prefill": pre_acc,
-                                             "kv_decode": acc},
-                            "slot_stats": slot_acc}
+            rep = {"device_stats": {"kv_prefill": pre_acc,
+                                    "kv_decode": acc},
+                   "slot_stats": slot_acc}
+            if life is not None:
+                rep["lifetime_state"] = life
+            return tokens, rep
         if self.scfg.extent_enabled:
             pre_host, dec_host = jax.device_get((pre_acc, acc))
             self.meter.add_stream("kv_prefill", pre_host)
             self.meter.add_stream("kv_decode", dec_host)
-        return tokens, self.meter.summary()
+        report = self.meter.summary()
+        if life is not None:
+            flips, decayed = jax.device_get(
+                (life.retention_flips, life.decayed_bits()))
+            report["retention"] = {
+                "ambient_k": self.scfg.ambient_k,
+                "dwell_s_per_step": self.scfg.retention_scale,
+                "flips": int(flips),
+                "decayed_bits": int(decayed),
+            }
+        return tokens, report

@@ -99,14 +99,35 @@ def _stack_prompts(requests: Sequence[Request]) -> Dict[str, jax.Array]:
 
 
 class ContinuousScheduler:
-    """Admission/completion loop over one engine's slot pool."""
+    """Admission/completion loop over one engine's slot pool.
+
+    With retention enabled on the engine (``ServeConfig.retention_scale``)
+    the scheduler also owns the pool's ``LifetimeState`` and runs the
+    optional ``scrub_policy`` as idle-slot background work: after each
+    burst the (host-side, sync-free) policy is consulted; a due pass
+    re-writes the accumulated decay through the engine's backend, its
+    energy charged to the separate ``kv_scrub`` stream so the report's
+    *lifetime* ledger (writes + scrubs) stays honest. Scrub-time quality
+    re-resolution goes through the EXTENT table under the ``"scrub"``
+    scope — serve and scrub table traffic are reported separately.
+    ``ambient_schedule`` is an optional piecewise-constant
+    [(from_step, kelvin), ...] die-temperature profile; swapping the
+    ambient between bursts swaps decay-threshold operands, never retraces.
+    """
 
     def __init__(self, engine: ServingEngine, capacity: int,
-                 max_burst: Optional[int] = None):
+                 max_burst: Optional[int] = None,
+                 scrub_policy: Optional[Any] = None,
+                 ambient_schedule: Optional[Sequence[Tuple[int, float]]]
+                 = None):
         assert capacity >= 1
         self.eng = engine
         self.pool = SlotPool(engine.api, capacity, engine.scfg.max_seq)
         self.max_burst = max_burst
+        self.scrub_policy = scrub_policy
+        self.ambient_schedule = (sorted(ambient_schedule)
+                                 if ambient_schedule else None)
+        self.life = None  # LifetimeState, owned per run()
         self.meter = StepEnergyMeter()
         # per-rid runtime state. Token fragments are kept as LAZY device
         # array references ((array, column, take) tuples) and materialized
@@ -138,6 +159,56 @@ class ContinuousScheduler:
                 floor = max(floor, self._level[r.rid])
         return Priority(floor)
 
+    # ----------------------------------------------------------- reliability
+    def _ambient_at(self, clock: int) -> Optional[float]:
+        """Piecewise-constant ambient-temperature schedule lookup (None =
+        the engine's configured ambient)."""
+        if not self.ambient_schedule:
+            return None
+        t = None
+        for step, kelvin in self.ambient_schedule:
+            if step <= clock:
+                t = kelvin
+        return t
+
+    def _maybe_scrub(self, clock: int, key) -> None:
+        """Idle-slot background scrubbing: consult the (host-side) policy;
+        when a pass is due, re-write the accumulated decay through the
+        engine's backend. One compiled call per pass signature; the pass's
+        WriteStats accumulate on device into the scrub stream."""
+        eng, policy = self.eng, self.scrub_policy
+        if policy is None or eng.life_plan is None:
+            return
+        enabled = policy.plan_pass(clock, eng.plan.leaf_levels,
+                                   idle=self.pool.free_slots() > 0)
+        if enabled is None:
+            return
+        # the scrub controller re-resolves the quality of the blocks it is
+        # about to re-write through the SAME LRU table as admissions — its
+        # traffic lands in the "scrub" scope so it never inflates the serve
+        # hit rate (ExtentTable.scope).
+        floor = Priority.LOW
+        with eng.controller.table.scope("scrub"):
+            for i in self.pool.occupied():
+                r = self.pool.slot_req[i]
+                if r.app_id is not None or r.quality is not None:
+                    block = (r.app_id if r.app_id is not None
+                             else ("rid", r.rid))
+                    floor = max(floor, eng.controller.resolve_request(block))
+        vectors = eng.vectors_for_floor(Priority(floor))
+        cols = policy.cols_per_pass or None
+        cursor = jnp.asarray(self._scrub_cursor, jnp.int32)
+        k = jax.random.fold_in(key, 1_000_000 + self._scrub_passes)
+        self.pool.cache, self.life, st = eng._scrub_fused(
+            k, self.pool.cache, self.life, vectors, cursor,
+            enabled=enabled, cols=cols)
+        self._acc_scrub = self._acc_scrub + st
+        policy.record(clock)
+        self._scrub_passes += 1
+        if cols:
+            self._scrub_cursor = (self._scrub_cursor + cols) % \
+                eng.scfg.max_seq
+
     # --------------------------------------------------------- event phases
     def _admit(self, pending, clock: int, key) -> Tuple[Any, int]:
         """Admit every arrived request that fits, grouped by prompt shape
@@ -168,6 +239,11 @@ class ContinuousScheduler:
                 ids, group, rows, tok,
                 [self.eng.prompt_len(r.prompt) for r in group],
                 acc, self._acc_prefill)
+            if self.life is not None:
+                # the admitted rows were just prefill-written: their decay
+                # record restarts from zero (jitted, stays on device)
+                self.life = self.eng._life_reset(
+                    self.life, jnp.asarray(ids, jnp.int32))
             for j, r in enumerate(group):
                 self._tokens[r.rid] = [(tok, j, 1)]
                 self._remaining[r.rid] = r.new_tokens - 1
@@ -242,6 +318,13 @@ class ContinuousScheduler:
         bursts = 0
         self._acc_prefill = WriteStats.zero()
         self._acc_decode = WriteStats.zero()
+        self._acc_scrub = WriteStats.zero()
+        self._scrub_passes = 0
+        self._scrub_cursor = 0
+        if self.scrub_policy is not None:
+            self.scrub_policy.reset()  # the serving clock restarts at 0
+        self.life = (eng.life_plan.init_state(pool.cache)
+                     if eng.life_plan is not None else None)
         # engines outlive schedulers: zero the table's traffic counters so
         # THIS run's report never aggregates a previous arrival stream's
         # hits/misses/evictions (cached block->quality entries survive —
@@ -270,13 +353,31 @@ class ContinuousScheduler:
                 n = min(n, pending[0].arrival - clock)
             if self.max_burst:
                 n = min(n, self.max_burst)
+            if self.ambient_schedule and self.life is not None:
+                # a temperature breakpoint is a scheduler event too: the
+                # decay thresholds are per-burst operands, so the burst
+                # must end where the ambient changes or the remainder of
+                # the burst would decay at the stale temperature
+                for step, _ in self.ambient_schedule:
+                    if step > clock:
+                        n = min(n, step - clock)
+                        break
             n = max(int(n), 1)
             active = pool.active_mask()
             vectors = eng.vectors_for_floor(self._floor())
-            (pool.tok, pool.cache, pool.pos, key, self._acc_decode,
-             pool.slot_acc, toks) = eng._burst(
-                eng.params, pool.tok, pool.cache, pool.pos, key,
-                self._acc_decode, pool.slot_acc, active, vectors, n=n)
+            if self.life is not None:
+                rvec = eng.retention_vectors_for(
+                    self._floor(), ambient_k=self._ambient_at(clock))
+                (pool.tok, pool.cache, pool.pos, key, self._acc_decode,
+                 pool.slot_acc, self.life, toks) = eng._burst(
+                    eng.params, pool.tok, pool.cache, pool.pos, key,
+                    self._acc_decode, pool.slot_acc, active, vectors,
+                    self.life, rvec, n=n)
+            else:
+                (pool.tok, pool.cache, pool.pos, key, self._acc_decode,
+                 pool.slot_acc, toks) = eng._burst(
+                    eng.params, pool.tok, pool.cache, pool.pos, key,
+                    self._acc_decode, pool.slot_acc, active, vectors, n=n)
             for i in active_ids:  # lazy (n, capacity) fragment — no sync
                 rid = pool.slot_req[i].rid
                 take = min(n, self._remaining[rid])
@@ -286,13 +387,16 @@ class ContinuousScheduler:
             decode_steps += n
             bursts += 1
             self._complete(clock)
+            self._maybe_scrub(clock, key)
 
         # ----- aggregate ledger: one final device->host sync (bits_total
         # rides inside the accumulated WriteStats now)
-        pre_host, dec_host = jax.device_get((self._acc_prefill,
-                                             self._acc_decode))
+        pre_host, dec_host, scrub_host = jax.device_get(
+            (self._acc_prefill, self._acc_decode, self._acc_scrub))
         self.meter.add_stream("kv_prefill", pre_host)
         self.meter.add_stream("kv_decode", dec_host)
+        if self.life is not None:
+            self.meter.add_stream("kv_scrub", scrub_host)
         summary = self.meter.summary()
         summary.update({
             "requests": self._reports,
@@ -302,4 +406,25 @@ class ContinuousScheduler:
             "pool": pool.stats(),
             "extent_table": eng.controller.table.stats(),
         })
+        if self.life is not None:
+            # the LIFETIME ledger: what this stream cost over its whole
+            # life — write energy plus the scrub energy spent defending it
+            # (plus the damage that slipped through, as counters)
+            flips, decayed = jax.device_get(
+                (self.life.retention_flips, self.life.decayed_bits()))
+            write_pj = (float(pre_host.energy_pj)
+                        + float(dec_host.energy_pj))
+            scrub_pj = float(scrub_host.energy_pj)
+            summary["lifetime"] = {
+                "ambient_k": self.eng.scfg.ambient_k,
+                "dwell_s_per_step": self.eng.scfg.retention_scale,
+                "write_energy_pj": write_pj,
+                "scrub_energy_pj": scrub_pj,
+                "lifetime_energy_pj": write_pj + scrub_pj,
+                "retention_flips": int(flips),
+                "residual_decayed_bits": int(decayed),
+                "scrub_passes": self._scrub_passes,
+                "scrub_policy": (self.scrub_policy.name
+                                 if self.scrub_policy else "none"),
+            }
         return summary

@@ -70,6 +70,7 @@ class Checkpointer:
         self._pending: Optional[concurrent.futures.Future] = None
         self._last_digest: Dict[str, int] = {}  # leaf path -> content hash
         self.last_save_report: Dict[str, Any] = {}
+        self.last_restore_report: Dict[str, Any] = {}
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state: Any, extra: Optional[Dict] = None):
@@ -166,11 +167,21 @@ class Checkpointer:
         return max(steps) if steps else None
 
     def restore(self, state_like: Any, step: Optional[int] = None,
-                shardings: Any = None) -> Tuple[Any, Dict]:
+                shardings: Any = None,
+                integrity: Optional[Any] = None) -> Tuple[Any, Dict]:
         """Load newest COMPLETE checkpoint into the structure of
         ``state_like`` (ShapeDtypeStructs or arrays). ``shardings`` (same
         tree) lays leaves onto the *current* mesh — this is the elastic
-        re-mesh path."""
+        re-mesh path.
+
+        ``integrity`` (a ``repro.reliability.RestoreIntegrity``) runs the
+        pre-restore integrity pass over the approximate leaves: the bits
+        sat in NVM since the save, so the configured storage dwell decays
+        them at the leaf's retention rate, and (with ``integrity.scrub``)
+        a scrub pass ECC-corrects + re-writes the decayed bits through the
+        checkpoint backend — re-write energy and residual damage land in
+        ``last_restore_report``. ``integrity=None`` (and any leaf outside
+        ``extent_policy``) restores bit-identically to the plain path."""
         step = self.latest_step() if step is None else step
         if step is None:
             raise FileNotFoundError(f"no COMPLETE checkpoint under "
@@ -181,6 +192,16 @@ class Checkpointer:
         flat, treedef = _leaf_paths(state_like)
         sh_flat = (None if shardings is None
                    else treedef.flatten_up_to(shardings))
+        check = integrity is not None and self.extent_policy is not None
+        report = {"step": step, "leaves_checked": 0, "retention_flips": 0,
+                  "scrub_energy_pj": 0.0, "residual_decayed_bits": 0}
+        acc = None  # device-resident scrub WriteStats; ONE sync at the end
+        flips_acc = residual_acc = None
+        # restore-integrity RNG: fold the step under a disjoint offset —
+        # PRNGKey(extent_seed + step + 1) would collide with save(step+1)'s
+        # per-leaf write streams (save uses PRNGKey(extent_seed + step))
+        key = jax.random.fold_in(jax.random.PRNGKey(self.extent_seed),
+                                 4_000_037 + step)
         out = []
         for i, (path, like) in enumerate(flat):
             e = by_path[path]
@@ -189,9 +210,45 @@ class Checkpointer:
             if arr.dtype != want:  # np can't represent bf16: stored raw-ish
                 arr = arr.view(want) if arr.dtype.itemsize == want.itemsize \
                     else arr.astype(want)
+            checked = False
+            if check and want.kind == "f":
+                level = Priority.coerce(self.extent_policy((path,), like))
+                if level != Priority.EXACT:
+                    from repro import memory
+                    from repro.reliability import decay_tensor
+                    checked = True
+                    leaf, mask, flips = decay_tensor(
+                        jax.random.fold_in(key, i), jnp.asarray(arr),
+                        level=level, ambient_k=integrity.ambient_k,
+                        dwell_s=integrity.dwell_s)
+                    residual = mask
+                    if integrity.scrub:
+                        be = memory.get_backend(self.extent_backend)
+                        lv = memory.leaf_vectors(want, level)
+                        leaf, residual, st = be.leaf_scrub(
+                            jax.random.fold_in(key, 1_000_003 + i),
+                            leaf, mask, lv)
+                        acc = st if acc is None else acc + st
+                    res_bits = jnp.sum(jax.lax.population_count(
+                        residual).astype(jnp.int32), dtype=jnp.int32)
+                    flips_acc = (flips if flips_acc is None
+                                 else flips_acc + flips)
+                    residual_acc = (res_bits if residual_acc is None
+                                    else residual_acc + res_bits)
+                    report["leaves_checked"] += 1
             if sh_flat is not None:
-                out.append(jax.device_put(arr, sh_flat[i]))
+                # unchecked leaves keep the PR 3 single host->device path;
+                # only decayed/scrubbed leaves pay the device round trip
+                out.append(jax.device_put(leaf if checked else arr,
+                                          sh_flat[i]))
             else:
-                out.append(jnp.asarray(arr))
+                out.append(leaf if checked else jnp.asarray(arr))
+        if report["leaves_checked"]:
+            flips_h, res_h = jax.device_get((flips_acc, residual_acc))
+            report["retention_flips"] = int(flips_h)
+            report["residual_decayed_bits"] = int(res_h)
+            if acc is not None:
+                report["scrub_energy_pj"] = acc.host_dict()["energy_pj"]
+        self.last_restore_report = report
         state = jax.tree_util.tree_unflatten(treedef, out)
         return state, manifest["extra"]
