@@ -1,0 +1,161 @@
+"""Endurance frontier: wear-leveling remap on/off under a hot-row workload.
+
+The EXTENT energy win concentrates writes on hot rows — exactly where
+endurance fails first (Wu et al.'s survey names endurance the dominant
+STT-MRAM lifetime limiter). This benchmark drives a deliberately hot
+column-write workload through the memory substrate twice — identity
+addressing vs the rotate wear policy — and measures the frontier the
+physical addressing layer (repro.memory.address) buys:
+
+  * **hot-row worst-case wear**: max per-physical-row-group write count
+    after N steps (rotate must be strictly lower — the acceptance
+    criterion of the wear-leveling PR);
+  * **time-to-first-worn-row**: steps until some group exhausts the
+    endurance budget and goes stuck-at (rotate must survive longer);
+  * **remap energy overhead**: the migration writes the leveling costs,
+    as a fraction of the data-write energy (the lifetime ledger's honesty
+    check — leveling is not free).
+
+Asserted claims land in ``out["claims"]``; ``bench_metrics`` registers
+the scalars for the machine-readable BENCH_<n>.json trajectory.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.priority import Priority
+from repro.memory import AddressSpec, WritePlan, WriteStats
+from repro.reliability import LifetimePlan, make_wear_policy
+
+_AXES = {"kv": ("layers", "batch", "kv_seq", "head_dim")}
+
+
+def _run_arm(steps: int, shape: Tuple[int, int], *, rotate: bool,
+             group_cols: int, budget: int, backend: str
+             ) -> Dict[str, float]:
+    B, C = 2, shape[1]
+    tree = {"kv": jnp.zeros((1, B, C, shape[0]), jnp.bfloat16)}
+    spec = AddressSpec(group_cols=group_cols, endurance_budget=budget)
+    plan = WritePlan.for_tree(tree, policy=lambda p, l: Priority.LOW,
+                              backend=backend, axes=_AXES,
+                              address_spec=spec)
+    lp = LifetimePlan.for_tree(tree, plan)
+    # hot_row_wear sets the leveling/overhead tradeoff: rotating every 16
+    # hot writes keeps the migration traffic safely below the data-write
+    # energy while still capping per-group wear at ~a rotation period
+    policy = make_wear_policy("rotate" if rotate else "none",
+                              check_interval=4, rotate_step=group_cols,
+                              hot_row_wear=16)
+    addr = plan.identity_address()
+    rotatable = jnp.asarray(plan.rotatable())
+    state = lp.init_state(tree)
+    data = tree
+    active = jnp.ones((B,), bool)
+    acc = WriteStats.zero()
+
+    @jax.jit
+    def step(k, data, state, shifts, pos, acc):
+        new = jax.tree.map(
+            lambda a: jax.random.normal(k, a.shape).astype(a.dtype), data)
+        worn = lp.worn_groups(state)
+        data, st = plan.write_columns(k, data, new, pos,
+                                      addr=(shifts, worn))
+        state = lp.record_column_write(state, data, pos, active, shifts)
+        return data, state, acc + st
+
+    remap_pj = 0.0
+    ttfw = None
+    gap = 0
+    # the serving scheduler and this benchmark price rotations through
+    # the SAME source: WritePlan.migration_cost
+    cost_pj, _ = plan.migration_cost(tree)
+    for t in range(1, steps + 1):
+        k = jax.random.fold_in(jax.random.PRNGKey(11), t)
+        # hot-row traffic: every slot hammers the same 4 ring columns
+        pos = jnp.full((B,), t % 4, jnp.int32)
+        data, state, acc = step(k, data, state, addr.shifts, pos, acc)
+        wear = np.asarray(state.row_wear())
+        if ttfw is None and budget > 0 and wear.max() >= budget:
+            ttfw = t
+        if t % policy.check_interval == 0 and policy.plan_rotation(t, wear):
+            addr = addr.rotate(rotatable, policy.rotate_step)
+            remap_pj += cost_pj
+            # migration re-writes consume endurance too (the gap window)
+            state = lp.record_migration(state, data, gap,
+                                        policy.rotate_step)
+            gap += policy.rotate_step
+            policy.record(t, wear)
+    h = acc.host_dict()
+    wear = np.asarray(state.row_wear())
+    worn = lp.worn_groups(state)
+    return {
+        "max_group_wear": float(wear.max()),
+        "mean_group_wear": float(wear[wear > 0].mean()) if wear.any()
+        else 0.0,
+        "time_to_first_worn": float(ttfw if ttfw is not None
+                                    else steps + 1),
+        "worn_groups": float(np.asarray(worn).sum())
+        if worn is not None else 0.0,
+        "rotations": float(policy.rotations),
+        "write_energy_pj": h["energy_pj"],
+        "remap_energy_pj": remap_pj,
+        "stuck_at_errors": float(h["bit_errors"]),
+    }
+
+
+def run(steps: int = 160, shape: Tuple[int, int] = (8, 64), *,
+        group_cols: int = 4, budget: int = 0,
+        backend: str = "lanes_ref") -> Dict:
+    """The frontier: identity addressing vs the rotate wear policy on the
+    same hot-row workload, with and without an endurance budget."""
+    if budget <= 0:
+        budget = max(8, steps // 3)  # both arms can exhaust it un-leveled
+    none = _run_arm(steps, shape, rotate=False, group_cols=group_cols,
+                    budget=budget, backend=backend)
+    rot = _run_arm(steps, shape, rotate=True, group_cols=group_cols,
+                   budget=budget, backend=backend)
+    overhead = (rot["remap_energy_pj"]
+                / max(rot["write_energy_pj"], 1e-9))
+    claims = {
+        # the acceptance criterion: leveling strictly lowers worst wear
+        "rotate_lowers_max_wear":
+            rot["max_group_wear"] < none["max_group_wear"],
+        "rotate_survives_longer":
+            rot["time_to_first_worn"] > none["time_to_first_worn"],
+        "remap_overhead_visible_and_bounded":
+            0.0 < overhead < 1.0,
+        "unleveled_rows_wear_out": none["worn_groups"] > 0,
+    }
+    assert all(claims.values()), claims
+    return {"steps": steps, "budget": budget, "group_cols": group_cols,
+            "none": none, "rotate": rot,
+            "wear_leveling_gain": none["max_group_wear"]
+            / max(rot["max_group_wear"], 1.0),
+            "remap_overhead_frac": overhead,
+            "claims": claims}
+
+
+def bench_metrics(out: Dict) -> Dict[str, float]:
+    """Registration hook for benchmarks.run's BENCH_<n>.json report."""
+    m = {
+        "wear_leveling_gain": out["wear_leveling_gain"],
+        "remap_overhead_frac": out["remap_overhead_frac"],
+        "max_group_wear_none": out["none"]["max_group_wear"],
+        "max_group_wear_rotate": out["rotate"]["max_group_wear"],
+        "time_to_first_worn_none": out["none"]["time_to_first_worn"],
+        "time_to_first_worn_rotate": out["rotate"]["time_to_first_worn"],
+        "rotations": out["rotate"]["rotations"],
+        "remap_energy_pj": out["rotate"]["remap_energy_pj"],
+        "stuck_at_errors_none": out["none"]["stuck_at_errors"],
+    }
+    m.update({f"claim.{k}": v for k, v in out["claims"].items()})
+    return m
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1, default=float))

@@ -23,10 +23,10 @@ import time
 import traceback
 from pathlib import Path
 
-from benchmarks import (fig2_switching, fig6_thermal, fig12_waveform,
-                        fig13_access, fig14_energy, fig15_variation,
-                        kernel_bench, retention_sweep, serving_energy,
-                        table1)
+from benchmarks import (endurance_sweep, fig2_switching, fig6_thermal,
+                        fig12_waveform, fig13_access, fig14_energy,
+                        fig15_variation, kernel_bench, retention_sweep,
+                        serving_energy, table1)
 
 BENCHES = {
     "table1": lambda fast: table1.run(),
@@ -45,7 +45,16 @@ BENCHES = {
     "retention_sweep": lambda fast: retention_sweep.run(
         steps=8 if fast else 16,
         shape=(32, 64) if fast else (64, 128)),
+    "endurance_sweep": lambda fast: endurance_sweep.run(
+        steps=64 if fast else 160,
+        shape=(8, 32) if fast else (8, 64)),
 }
+
+#: the --quick profile: the curated sub-minute subset the CI bench-report
+#: lane runs on EVERY push, so the BENCH_<n>.json perf trajectory actually
+#: accumulates (implies --fast; one invocation, one JSON)
+QUICK_BENCHES = ("table1", "fig6_thermal", "kernel_bench",
+                 "retention_sweep", "endurance_sweep")
 
 #: modules exposing ``bench_metrics(out)`` — the registration hook for the
 #: machine-readable report
@@ -53,6 +62,7 @@ _METRIC_FNS = {
     "serving_energy": serving_energy.bench_metrics,
     "kernel_bench": kernel_bench.bench_metrics,
     "retention_sweep": retention_sweep.bench_metrics,
+    "endurance_sweep": endurance_sweep.bench_metrics,
 }
 
 
@@ -86,6 +96,9 @@ def _headline(name: str, out) -> str:
                 f"skip={out[k]['write_skip_rate']:.3f}")
     if name == "retention_sweep":
         return json.dumps(out["claims"])
+    if name == "endurance_sweep":
+        return (f"leveling_gain={out['wear_leveling_gain']:.1f}x "
+                f"remap_overhead={out['remap_overhead_frac']:.2f}")
     return ""
 
 
@@ -134,15 +147,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="the CI perf-trajectory profile: the curated "
+                         "fast subset in one invocation / one BENCH json")
     ap.add_argument("--out-dir", default=".",
                     help="directory the BENCH_<n>.json report lands in")
     args = ap.parse_args()
+    if args.quick:
+        args.fast = True
     failures = []
     results = {}
     t_suite = time.time()
     print("name,seconds,key_results")
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
+            continue
+        if args.quick and not args.only and name not in QUICK_BENCHES:
             continue
         t0 = time.time()
         try:
@@ -164,6 +184,7 @@ def main() -> None:
     path.write_text(json.dumps({
         "suite": "extent-repro-benchmarks",
         "fast": args.fast,
+        "quick": args.quick,
         "only": args.only,
         "wall_time_s": round(time.time() - t_suite, 3),
         "benchmarks": results,

@@ -7,7 +7,8 @@ Continuous batching over an arrival stream (the default):
       --quality chat=high [--no-extent] [--no-reduced] \
       [--backend oracle|lanes_ref|pallas|exact] [--soft-error-ber 1e-6] \
       [--ambient-k 350 --retention-scale 1000 --scrub-policy periodic \
-       --scrub-interval 8 --scrub-cols 0]
+       --scrub-interval 8 --scrub-cols 0] \
+      [--wear-policy rotate --endurance-budget 100 --remap-group-cols 8]
 
 Monolithic one-batch mode (the pre-slot-pool engine path):
 
@@ -25,7 +26,13 @@ surfaced as ``soft_strikes`` in the report. ``--retention-scale`` /
 ``--ambient-k`` enable the ``repro.reliability`` time-axis model (stored
 bits decay at the Δ(T) rate of their priority level) and
 ``--scrub-policy`` schedules background corrective re-writes whose energy
-lands in the report's lifetime ledger.
+lands in the report's lifetime ledger. ``--wear-policy rotate`` turns on
+the physical addressing layer (``repro.memory.address``): hot-row wear is
+tracked per physical row group and the logical→physical column remap
+rotates when it concentrates, with the migration energy booked as the
+ledger's remap component; ``--endurance-budget`` adds the stuck-at
+failure model (worn row groups stop accepting writes — lost bits land in
+the error counters and the wear report).
 """
 from __future__ import annotations
 
@@ -77,6 +84,25 @@ def main():
                     help="base scrub interval in decode steps")
     ap.add_argument("--scrub-cols", type=int, default=0,
                     help="columns per scrub pass (0 = whole leaves)")
+    # physical addressing: wear-leveling remap + endurance failure model
+    ap.add_argument("--wear-policy", default="none",
+                    choices=("none", "rotate"),
+                    help="wear-leveling policy over the logical→physical "
+                         "column remap (continuous mode): 'rotate' "
+                         "rotates the permutation when hot-row wear "
+                         "concentrates, paying a migration write booked "
+                         "as the lifetime ledger's remap component")
+    ap.add_argument("--endurance-budget", type=int, default=0,
+                    help="writes+scrubs a physical row group survives "
+                         "before going stuck-at (0 = unbounded)")
+    ap.add_argument("--remap-group-cols", type=int, default=8,
+                    help="ring columns per physical row group (the wear/"
+                         "failure granularity)")
+    ap.add_argument("--wear-check-interval", type=int, default=8,
+                    help="decode steps between device wear reads")
+    ap.add_argument("--hot-row-wear", type=int, default=16,
+                    help="max-group wear since the last rotation that "
+                         "arms the next one")
     ap.add_argument("--monolithic", action="store_true",
                     help="single fixed batch, no arrival stream")
     # arrival-stream simulation
@@ -108,7 +134,10 @@ def main():
             extent_enabled=not args.no_extent, backend=args.backend,
             soft_error_ber=args.soft_error_ber,
             soft_error_hardened=not args.soft_error_unhardened,
-            ambient_k=args.ambient_k, retention_scale=retention_scale)
+            ambient_k=args.ambient_k, retention_scale=retention_scale,
+            wear_policy=args.wear_policy,
+            endurance_budget=args.endurance_budget,
+            remap_group_cols=args.remap_group_cols)
 
     if args.monolithic:
         prompt = {"tokens": jax.random.randint(
@@ -159,8 +188,18 @@ def main():
         scrub_policy = make_scrub_policy(args.scrub_policy,
                                          interval=args.scrub_interval,
                                          cols_per_pass=args.scrub_cols)
+    wear_policy = None
+    if args.wear_policy != "none":
+        from repro.reliability import make_wear_policy
+        # rotate by a whole row group per rotation: the hot columns hop to
+        # fresh physical rows instead of shuffling inside the same group
+        wear_policy = make_wear_policy(
+            args.wear_policy, check_interval=args.wear_check_interval,
+            rotate_step=args.remap_group_cols,
+            hot_row_wear=args.hot_row_wear)
     sch = ContinuousScheduler(eng, capacity=args.capacity,
-                              scrub_policy=scrub_policy)
+                              scrub_policy=scrub_policy,
+                              wear_policy=wear_policy)
     report = sch.run(reqs)
 
     print(f"served {len(report['requests'])} requests in "
@@ -208,11 +247,21 @@ def main():
               f"(dwell {lt['dwell_s_per_step']:.0f} s/step, "
               f"policy {lt['scrub_policy']}): "
               f"write {lt['write_energy_pj']/1e6:.3f} uJ + "
-              f"scrub {lt['scrub_energy_pj']/1e6:.3f} uJ = "
+              f"scrub {lt['scrub_energy_pj']/1e6:.3f} uJ + "
+              f"remap {lt['remap_energy_pj']/1e6:.3f} uJ = "
               f"{lt['lifetime_energy_pj']/1e6:.3f} uJ; "
               f"{lt['retention_flips']} retention flips, "
               f"{lt['residual_decayed_bits']} still decayed after "
               f"{lt['scrub_passes']} scrub passes")
+    if "wear" in report:
+        w = report["wear"]
+        print(f"wear leveling (policy {w['policy']}, group "
+              f"{w['group_cols']} cols, budget "
+              f"{w['endurance_budget'] or 'unbounded'}): "
+              f"rotations={w['rotations']}, "
+              f"max group wear {w['max_group_wear']}, "
+              f"worn groups {w['worn_groups']}, "
+              f"remap {w['remap_energy_pj']/1e6:.3f} uJ")
 
 
 if __name__ == "__main__":

@@ -15,9 +15,14 @@ write circuit:
   * ``MemoryRegion``   — pytree-native stateful region (the ApproxStore
                          successor).
 
+  * ``AddressSpec`` / ``AddressState`` — the logical→physical column
+                         remap layer (wear-leveling rotation operands,
+                         row-group wear granularity, stuck-at gating).
+
 Nothing outside this package and ``repro/kernels`` touches the kernel ops
 or carries ``use_kernel``/``interpret`` booleans.
 """
+from repro.memory.address import AddressSpec, AddressState  # noqa: F401
 from repro.memory.backends import (  # noqa: F401
     Backend, LeafVectors, available_backends, get_backend, register_backend,
 )

@@ -1,0 +1,160 @@
+"""Physical addressing: the logical→physical remap layer of the substrate.
+
+Every path above this module addresses stored columns *logically*: the KV
+ring column at ``pos % C``, the scrub cursor, the checkpoint leaf. This
+module owns the mapping from those logical addresses to the *physical*
+rows of the modeled STT-RAM array, so endurance wear — which the device
+accumulates per physical row, not per logical name — can be tracked,
+spread, and exhausted honestly:
+
+  * the map is an invertible per-leaf column **rotation** (start-gap
+    style): ``phys = (logical + shift) % C``, ``logical = (phys - shift)
+    % C``. The per-leaf shifts live in an ``AddressState`` pytree of i32
+    device arrays that ride as *operands* of the compiled write/scrub —
+    exactly how ``WritePlan`` carries driver vectors — so a wear-leveling
+    rotation between bursts swaps an integer and NEVER retraces;
+  * physical rows are accounted in **row groups** of ``group_cols`` ring
+    columns per cache slot (each slot's ring is its own set of physical
+    rows, so groups are indexed ``slot * ceil(C/group_cols) + phys_col //
+    group_cols``). ``LifetimeState`` carries one write/scrub wear counter
+    per group — the per-leaf counters of the pre-address substrate,
+    refined to the granularity failure happens at;
+  * groups whose cumulative wear crosses ``endurance_budget`` are **worn**:
+    stuck-at rows whose bits no longer accept writes. The write path gates
+    stores through ``worn_*_mask`` — a worn bit keeps its old value, the
+    lost flips land in ``WriteStats.errors``, and (because the gated new
+    value equals the stored one) CMP charges no energy for the inhibited
+    drive, matching a controller that skips rows its bad-row table names.
+
+RNG layout-invariance contract: the remap permutes *addresses*, never RNG
+streams. The data tree stays the logical view (models read it untouched)
+and the counter RNG keeps hashing flat element indices of the logical
+tensor, so an identity-shift run is bit-identical to a plan with no
+address layer at all — rotation moves *which physical group a write wears
+out and which stuck-at rows a write hits*, not which bits the stochastic
+driver flips. See tests/test_wear.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AddressSpec:
+    """Static config of the physical addressing layer for one WritePlan.
+
+    ``group_cols``: ring columns per physical row group (the wear/failure
+    granularity). ``endurance_budget``: writes+scrubs a row group survives
+    before its rows go stuck-at; 0 means unbounded (wear is tracked but
+    nothing ever fails)."""
+    group_cols: int = 8
+    endurance_budget: int = 0
+
+    def col_groups(self, n_cols: int) -> int:
+        """Row groups per slot for an ``n_cols``-column ring."""
+        return -(-int(n_cols) // self.group_cols)
+
+    def n_groups(self, shape: Tuple[int, ...], seq_axis: Optional[int],
+                 batch_axis: int) -> int:
+        """Row groups of one leaf: ``slots * ceil(C / group_cols)`` for
+        ring leaves, one group per slot row otherwise."""
+        b = int(shape[batch_axis])
+        if seq_axis is None:
+            return b
+        return b * self.col_groups(shape[seq_axis])
+
+
+# ---------------------------------------------------------------------------
+# the permutation (all jit-safe; shift is a traced i32 operand)
+# ---------------------------------------------------------------------------
+
+def phys_col(logical: jax.Array, shift: jax.Array, n_cols: int) -> jax.Array:
+    """Logical ring column -> physical row index under the rotation."""
+    return (logical + shift) % n_cols
+
+
+def logical_col(phys: jax.Array, shift: jax.Array, n_cols: int) -> jax.Array:
+    """Inverse map: physical row -> the logical column it currently backs."""
+    return (phys - shift) % n_cols
+
+
+def column_group_ids(pos: jax.Array, shift: jax.Array, n_cols: int,
+                     spec: AddressSpec) -> jax.Array:
+    """Physical row-group id per slot for a column write at ``pos``:
+    ``(B,) i32`` of ``slot * Gc + phys // group_cols``."""
+    gc = spec.col_groups(n_cols)
+    p = phys_col(pos % n_cols, shift, n_cols)
+    return (jnp.arange(pos.shape[0], dtype=jnp.int32) * gc
+            + p // spec.group_cols)
+
+
+def worn_slot_mask(worn_row: jax.Array, pos: jax.Array, shift: jax.Array,
+                   n_cols: int, spec: AddressSpec) -> jax.Array:
+    """(B,) bool: is the physical group backing slot b's column-write at
+    ``pos[b]`` worn out? ``worn_row`` is this leaf's (G,) worn vector."""
+    return worn_row[column_group_ids(pos, shift, n_cols, spec)]
+
+
+def worn_element_mask(worn_row: jax.Array, shift: jax.Array,
+                      shape: Tuple[int, ...], seq_axis: Optional[int],
+                      batch_axis: int, spec: AddressSpec) -> jax.Array:
+    """Full-leaf bool mask (broadcastable to ``shape``) of elements backed
+    by worn physical groups — the stuck-at gate for full-tree writes."""
+    slot = jax.lax.broadcasted_iota(jnp.int32, shape, batch_axis)
+    if seq_axis is None:
+        return worn_row[slot]
+    n_cols = shape[seq_axis]
+    gc = spec.col_groups(n_cols)
+    col = jax.lax.broadcasted_iota(jnp.int32, shape, seq_axis)
+    g = slot * gc + phys_col(col, shift, n_cols) // spec.group_cols
+    return worn_row[g]
+
+
+def window_group_counts(cursor: jax.Array, cols: int, n_cols: int,
+                        n_slots: int, n_groups: int,
+                        spec: AddressSpec) -> jax.Array:
+    """Scrub-wear booking for a ``cols``-wide *physical* ring window
+    starting at ``cursor``: (n_groups,) i32 of how many row re-writes each
+    group absorbed (one per covered column per slot)."""
+    gc = spec.col_groups(n_cols)
+    pg = ((cursor + jnp.arange(cols, dtype=jnp.int32)) % n_cols
+          ) // spec.group_cols
+    g = (jnp.arange(n_slots, dtype=jnp.int32)[:, None] * gc
+         + pg[None, :]).ravel()
+    return jnp.zeros((n_groups,), jnp.int32).at[g].add(1)
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AddressState:
+    """Per-leaf permutation state, carried as device operands.
+
+    ``shifts``: (L,) i32 rotation offsets (0 = identity — bit-identical to
+    a plan with no address layer). ``rotations``: (L,) i32 rotation count
+    per leaf (telemetry; also the never-retrace witness in tests)."""
+    shifts: jax.Array
+    rotations: jax.Array
+
+    @classmethod
+    def identity(cls, n_leaves: int) -> "AddressState":
+        z = jnp.zeros((n_leaves,), jnp.int32)
+        return cls(shifts=z, rotations=z)
+
+    def rotate(self, rotatable: jax.Array, step: int = 1) -> "AddressState":
+        """Advance the permutation of every ``rotatable`` leaf by ``step``
+        columns. Pure operand arithmetic: the compiled consumers see new
+        values in the same (L,) i32 operand — no retrace."""
+        r = rotatable.astype(jnp.int32)
+        return AddressState(shifts=self.shifts + step * r,
+                            rotations=self.rotations + r)
+
+
+jax.tree_util.register_dataclass(
+    AddressState, data_fields=["shifts", "rotations"], meta_fields=[])

@@ -40,6 +40,7 @@ from repro.core import write_driver
 from repro.core.approx_store import inject_soft_errors
 from repro.core.priority import (Priority, bitplane_priorities, bits_of,
                                  kv_cache_policy, uint_type)
+from repro.memory import address as addr_mod
 from repro.memory.backends import Backend, LeafVectors, get_backend
 from repro.memory.stats import WriteStats
 
@@ -92,6 +93,22 @@ def _default_approx_if(leaf, tag: Priority) -> bool:
     return jnp.issubdtype(leaf.dtype, jnp.floating) and tag != Priority.EXACT
 
 
+def _stuck_gate(old, new, worn):
+    """Stuck-at gating for worn physical rows: elements under ``worn``
+    keep their stored value (the row no longer accepts writes) and every
+    bit the gated write *would* have changed counts as a failed write.
+    Returns (gated_new, lost_bit_count). Because the gated new equals the
+    stored old on worn rows, the downstream CMP diff write charges zero
+    flips/energy there — the controller skips rows its bad-row table
+    names, but the data loss is booked in ``WriteStats.errors``."""
+    ut = uint_type(old.dtype)
+    d = (jax.lax.bitcast_convert_type(old, ut)
+         ^ jax.lax.bitcast_convert_type(new, ut))
+    lost = jnp.sum(jnp.where(worn, jax.lax.population_count(d), ut(0))
+                   .astype(jnp.int32), dtype=jnp.int32)
+    return jnp.where(worn, old, new), lost
+
+
 def _soft_error_hook(key, x, ber: float, hardened: bool):
     """Post-write retention upsets + the strike count (popcount of the
     flipped-bit mask)."""
@@ -114,6 +131,9 @@ class WritePlan:
     batch_axis: int = 1
     soft_error_ber: float = 0.0
     soft_error_hardened: bool = True
+    #: physical addressing layer (repro.memory.address): None = no remap,
+    #: no stuck-at gating — the exact pre-address data path.
+    address_spec: Optional[addr_mod.AddressSpec] = None
     floor_vectors: Dict[Priority, Tuple[Optional[LeafVectors], ...]] = (
         dataclasses.field(default_factory=dict))
     _jit_write: Any = dataclasses.field(default=None, repr=False,
@@ -128,6 +148,7 @@ class WritePlan:
                  batch_axis: int = 1,
                  soft_error_ber: float = 0.0,
                  soft_error_hardened: bool = True,
+                 address_spec: Optional[addr_mod.AddressSpec] = None,
                  driver_cfg: Optional[write_driver.DriverConfig] = None,
                  approx_if: Callable[[Any, Priority], bool]
                  = _default_approx_if) -> "WritePlan":
@@ -163,7 +184,55 @@ class WritePlan:
                    leaf_seq_axis=seq_axis, batch_axis=batch_axis,
                    soft_error_ber=soft_error_ber,
                    soft_error_hardened=soft_error_hardened,
+                   address_spec=address_spec,
                    floor_vectors=floor_vectors)
+
+    # ------------------------------------------------------ address layer
+    def rotatable(self) -> Tuple[bool, ...]:
+        """Per-leaf flag: does the wear-leveling rotation apply? Only
+        approximate leaves with a ring (sequence) axis have a column
+        permutation to rotate."""
+        return tuple(lvl is not None and ax is not None
+                     for lvl, ax in zip(self.leaf_levels,
+                                        self.leaf_seq_axis))
+
+    def identity_address(self) -> addr_mod.AddressState:
+        """The identity permutation for this plan's leaf count —
+        bit-identical to running with no address layer at all."""
+        return addr_mod.AddressState.identity(len(self.leaf_levels))
+
+    def _worn_elem(self, i: int, leaf, shifts, worn) -> Optional[jax.Array]:
+        """Element-space stuck-at mask for leaf ``i`` under the address
+        operands, or None when gating is off/irrelevant."""
+        if worn is None or self.address_spec is None:
+            return None
+        return addr_mod.worn_element_mask(
+            worn[i], shifts[i], leaf.shape, self.leaf_seq_axis[i],
+            self.batch_axis, self.address_spec)
+
+    def migration_cost(self, tree: Any) -> Tuple[float, int]:
+        """Host constants (energy_pj, bits) of ONE start-gap migration:
+        one ``group_cols``-wide row group per ring leaf copied through the
+        controller's row buffer, every bit re-driven at the mean of the
+        plan's static 0→1/1→0 per-plane write prices. The ONE source of
+        the remap pricing — the serving scheduler and the endurance
+        benchmark both book rotations through it."""
+        assert self.address_spec is not None, "plan has no address layer"
+        import numpy as np
+        vectors = self.vectors_for(Priority.LOW)
+        pj, bits = 0.0, 0
+        flat = jax.tree.leaves(tree)
+        for i, (leaf, lvl, ax) in enumerate(zip(flat, self.leaf_levels,
+                                                self.leaf_seq_axis)):
+            if lvl is None or ax is None:
+                continue
+            C = leaf.shape[ax]
+            elems = leaf.size // C * min(self.address_spec.group_cols, C)
+            eb = (np.asarray(vectors[i].eb01)
+                  + np.asarray(vectors[i].eb10)) / 2.0
+            pj += float(elems) * float(eb.sum())
+            bits += elems * bits_of(leaf.dtype)
+        return pj, bits
 
     # -------------------------------------------------------------- operands
     def vectors_for(self, floor: Priority = Priority.LOW
@@ -192,13 +261,20 @@ class WritePlan:
         return stored, st
 
     def write(self, key, old_tree: Any, new_tree: Any,
-              vectors: Optional[Sequence] = None
+              vectors: Optional[Sequence] = None,
+              addr: Optional[Tuple[jax.Array, Optional[jax.Array]]] = None
               ) -> Tuple[Any, WriteStats]:
         """Jit-resident diff-write of a full tree (or a row subset with the
         same structure); returns (stored_tree, WriteStats). ``vectors`` is
-        a per-flat-leaf operand tuple, normally from ``vectors_for``."""
+        a per-flat-leaf operand tuple, normally from ``vectors_for``.
+        ``addr`` is the optional physical-addressing operand pair
+        ``(shifts (L,) i32, worn (L, G) bool-or-None)``: elements backed by
+        worn physical row groups are stuck-at (kept old, lost flips booked
+        to ``errors``). With identity shifts and no worn rows the stored
+        bits and stats are bit-identical to ``addr=None``."""
         if vectors is None:
             vectors = self.vectors_for(Priority.LOW)
+        shifts, worn = addr if addr is not None else (None, None)
         flat_old, treedef = jax.tree.flatten(old_tree)
         flat_new = treedef.flatten_up_to(new_tree)
         stored = []
@@ -208,14 +284,22 @@ class WritePlan:
             if lvl is None:
                 stored.append(n)  # EXACT fast path (recurrent states, ints)
                 continue
+            wm = self._worn_elem(i, o, shifts, worn)
+            lost = None
+            if wm is not None:
+                n, lost = _stuck_gate(o, n, wm)
             s, st = self._leaf_write(key, i, o, n, vectors[i])
+            if lost is not None:
+                st = dataclasses.replace(st, errors=st.errors + lost)
             stored.append(s)
             acc = acc + st
         return treedef.unflatten(stored), acc
 
     def write_columns(self, key, old_tree: Any, new_tree: Any,
                       pos: jax.Array,
-                      vectors: Optional[Sequence] = None
+                      vectors: Optional[Sequence] = None,
+                      addr: Optional[Tuple[jax.Array,
+                                           Optional[jax.Array]]] = None
                       ) -> Tuple[Any, WriteStats]:
         """Column-scoped decode diff-write: leaves with a sequence axis
         write only the ring column at ``pos % C`` (per slot along
@@ -223,9 +307,19 @@ class WritePlan:
         diff. Flip/energy stats are identical to ``write`` — the rest of
         the tree is bit-unchanged after a decode step, so CMP contributes
         exactly zero there — but the per-step cost drops from O(cache) to
-        O(token) lane work. ``pos`` is the (B,) position vector."""
+        O(token) lane work. ``pos`` is the (B,) position vector.
+
+        ``addr``: optional ``(shifts, worn)`` physical-addressing operands
+        (see ``write``). The written column's *address* maps through the
+        rotation to find its physical row group; a slot whose target group
+        is worn has its column write inhibited (stuck-at, lost flips in
+        ``errors``). The RNG stream is untouched — it hashes the gathered
+        column tensor's flat indices, which do not depend on the address —
+        so identity shifts reproduce ``addr=None`` bit-for-bit."""
         if vectors is None:
             vectors = self.vectors_for(Priority.LOW)
+        shifts, worn = addr if addr is not None else (None, None)
+        gate = worn is not None and self.address_spec is not None
         flat_old, treedef = jax.tree.flatten(old_tree)
         flat_new = treedef.flatten_up_to(new_tree)
         stored = []
@@ -236,8 +330,14 @@ class WritePlan:
                 stored.append(n)
                 continue
             ax = self.leaf_seq_axis[i]
+            lost = None
             if ax is None:
+                wm = self._worn_elem(i, o, shifts, worn)
+                if wm is not None:
+                    n, lost = _stuck_gate(o, n, wm)
                 s, st = self._leaf_write(key, i, o, n, vectors[i])
+                if lost is not None:
+                    st = dataclasses.replace(st, errors=st.errors + lost)
                 stored.append(s)
                 acc = acc + st
                 continue
@@ -249,7 +349,14 @@ class WritePlan:
             idx_g = jnp.broadcast_to(idx, gshape)
             o_col = jnp.take_along_axis(o, idx_g, axis=ax)
             n_col = jnp.take_along_axis(n, idx_g, axis=ax)
+            if gate:
+                wm = addr_mod.worn_slot_mask(
+                    worn[i], pos, shifts[i], C,
+                    self.address_spec).reshape(ishape)
+                n_col, lost = _stuck_gate(o_col, n_col, wm)
             s_col, st = self._leaf_write(key, i, o_col, n_col, vectors[i])
+            if lost is not None:
+                st = dataclasses.replace(st, errors=st.errors + lost)
             hit = jax.lax.broadcasted_iota(jnp.int32, o.shape, ax) == idx
             stored.append(jnp.where(hit, s_col, n))
             acc = acc + st

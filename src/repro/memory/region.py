@@ -91,6 +91,8 @@ class MemoryRegion:
                 masks=tuple(None if m is None else jnp.zeros_like(m)
                             for m in life.masks),
                 write_count=life.write_count + approx,
+                # a full write re-drives every physical row of the leaf
+                row_write_count=life.row_write_count + approx[:, None],
                 last_write_step=jnp.where(approx > 0, life.step,
                                           life.last_write_step))
         return dataclasses.replace(self, data=stored,

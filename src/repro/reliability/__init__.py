@@ -16,7 +16,12 @@ instant of the write; this package gives stored data a *lifetime*:
                     quality-floor-aware), wired into the serving
                     scheduler as idle-slot background work and into
                     checkpoint restore as a pre-restore integrity pass
-                    (``RestoreIntegrity``).
+                    (``RestoreIntegrity``);
+  * ``wear``      — wear-leveling policies over the per-physical-row-group
+                    endurance counters (``repro.memory.address``): when to
+                    rotate the logical→physical column permutation, paying
+                    a migration write booked to the lifetime ledger's
+                    ``remap`` component.
 
 This is the first subsystem where EXTENT's write-energy savings can be
 weighed against LIFETIME energy — writes + scrubs + uncorrected errors —
@@ -31,3 +36,6 @@ from repro.reliability.policy import (  # noqa: F401
     make_scrub_policy,
 )
 from repro.reliability.scrub import scrub_tree  # noqa: F401
+from repro.reliability.wear import (  # noqa: F401
+    RotateWearPolicy, WearPolicy, make_wear_policy,
+)

@@ -53,6 +53,7 @@ from repro.core import mtj, wer
 from repro.core.priority import (Priority, bitplane_priorities, bits_of,
                                  uint_type)
 from repro.kernels.extent_write.kernel import _hash_u32, _K_BIT, _K_ELEM
+from repro.memory import address as addr_mod
 from repro.memory.plan import WritePlan
 
 #: RNG sub-stream offsets (see module doc): retention decay and scrub keys
@@ -150,11 +151,23 @@ def decay_tensor(key: jax.Array, x: jax.Array, *, level: Priority,
 class LifetimeState:
     """Per-region lifetime state — a pytree of device arrays, scan-carried
     alongside the data it shadows (one entry per flat leaf of the region;
-    exact leaves carry ``None`` masks and zero rows in the counters)."""
+    exact leaves carry ``None`` masks and zero rows in the counters).
+
+    Endurance wear is tracked at TWO granularities since the physical
+    addressing layer (repro.memory.address): the coarse per-leaf
+    ``write_count``/``scrub_count`` of the pre-address substrate (whole-
+    tree telemetry, one unit per write/scrub pass), and the per-physical-
+    row-group ``row_write_count``/``row_scrub_count`` the wear-leveling
+    policy and the endurance-budget failure model operate on (one unit per
+    column write / scrubbed column, booked to the group the *rotated*
+    physical address lands in). Without an ``AddressSpec`` on the plan the
+    row counters degenerate to one group per leaf."""
     step: jax.Array               # i32: device decode-step clock
     masks: Tuple[Optional[jax.Array], ...]  # per-leaf decayed-bit XOR masks
     write_count: jax.Array        # (L,) i32 endurance wear: writes per leaf
     scrub_count: jax.Array        # (L,) i32 wear: scrub passes per leaf
+    row_write_count: jax.Array    # (L, G) i32 wear per physical row group
+    row_scrub_count: jax.Array    # (L, G) i32 scrubbed-column wear
     retention_flips: jax.Array    # i32: total sampled decay flips
     last_write_step: jax.Array    # (L,) i32
     last_scrub_step: jax.Array    # (L,) i32
@@ -170,10 +183,16 @@ class LifetimeState:
                     dtype=jnp.int32)
         return total
 
+    def row_wear(self) -> jax.Array:
+        """(L, G) i32 cumulative row-group wear: writes + scrub re-writes
+        both consume the same endurance budget."""
+        return self.row_write_count + self.row_scrub_count
+
 
 jax.tree_util.register_dataclass(
     LifetimeState,
     data_fields=["step", "masks", "write_count", "scrub_count",
+                 "row_write_count", "row_scrub_count",
                  "retention_flips", "last_write_step", "last_scrub_step"],
     meta_fields=[],
 )
@@ -228,6 +247,21 @@ class LifetimePlan:
             for dt, lvl in zip(self.leaf_dtypes, self.plan.leaf_levels))
 
     # ---------------------------------------------------------------- state
+    def n_row_groups(self, tree: Any) -> int:
+        """Padded row-group count G for the (L, G) wear counters: the max
+        over approximate leaves of the plan's address-layer group count
+        (1 with no ``AddressSpec`` — the degenerate one-group-per-leaf
+        layout of the pre-address substrate)."""
+        spec = self.plan.address_spec
+        if spec is None:
+            return 1
+        flat = jax.tree.leaves(tree)
+        gs = [spec.n_groups(l.shape, ax, self.plan.batch_axis)
+              for l, lvl, ax in zip(flat, self.plan.leaf_levels,
+                                    self.plan.leaf_seq_axis)
+              if lvl is not None]
+        return max(gs, default=1)
+
     def init_state(self, tree: Any) -> LifetimeState:
         """Fresh (just-written, zero-wear) state for a concrete tree."""
         flat = jax.tree.leaves(tree)
@@ -237,8 +271,10 @@ class LifetimePlan:
             for l, lvl in zip(flat, self.plan.leaf_levels))
         L = len(flat)
         zl = jnp.zeros((L,), jnp.int32)
+        zg = jnp.zeros((L, self.n_row_groups(tree)), jnp.int32)
         return LifetimeState(step=jnp.zeros((), jnp.int32), masks=masks,
                              write_count=zl, scrub_count=zl,
+                             row_write_count=zg, row_scrub_count=zg,
                              retention_flips=jnp.zeros((), jnp.int32),
                              last_write_step=zl, last_scrub_step=zl)
 
@@ -246,6 +282,98 @@ class LifetimePlan:
         """(L,) i32 1-for-approximate-leaf vector (compile-time const)."""
         return jnp.asarray([1 if lvl is not None else 0
                             for lvl in self.plan.leaf_levels], jnp.int32)
+
+    # ------------------------------------------------- physical addressing
+    def worn_groups(self, state: LifetimeState) -> Optional[jax.Array]:
+        """(L, G) bool stuck-at map from the endurance-budget failure
+        model: row groups whose cumulative write+scrub wear has exhausted
+        the plan's budget no longer accept writes. None when the address
+        layer is off or the budget is unbounded (a *static* decision, so
+        the no-failure path compiles with zero gating work)."""
+        spec = self.plan.address_spec
+        if spec is None or spec.endurance_budget <= 0:
+            return None
+        return state.row_wear() >= spec.endurance_budget
+
+    def record_column_write(self, state: LifetimeState, tree: Any,
+                            pos: jax.Array, active: jax.Array,
+                            shifts: jax.Array) -> LifetimeState:
+        """Book one decode-step column write into the per-physical-row-
+        group wear counters: each ACTIVE slot's write at ``pos % C`` maps
+        through the leaf's rotation to its physical row group. Jit-/scan-
+        resident (pure scatter-adds on the carried counters)."""
+        spec = self.plan.address_spec
+        if spec is None:
+            return state
+        flat = jax.tree.leaves(tree)
+        act = active.astype(jnp.int32)
+        rw = state.row_write_count
+        for i, (leaf, lvl, ax) in enumerate(zip(flat,
+                                                self.plan.leaf_levels,
+                                                self.plan.leaf_seq_axis)):
+            if lvl is None:
+                continue
+            if ax is None:
+                g = jnp.arange(pos.shape[0], dtype=jnp.int32)
+            else:
+                g = addr_mod.column_group_ids(pos, shifts[i],
+                                              leaf.shape[ax], spec)
+            rw = rw.at[i].set(rw[i].at[g].add(act))
+        return dataclasses.replace(state, row_write_count=rw)
+
+    def record_migration(self, state: LifetimeState, tree: Any,
+                         gap_start: int, cols: int) -> LifetimeState:
+        """Book one start-gap migration's row re-writes: the ``cols``-wide
+        physical window starting at ``gap_start`` is re-driven once per
+        slot of every ring leaf (the row-buffer copy a rotation performs).
+        Migration writes consume the same endurance budget as data writes
+        — wear leveling itself wears the rows it migrates onto. Host-
+        dispatched per rotation (rare), not part of the burst."""
+        spec = self.plan.address_spec
+        if spec is None:
+            return state
+        rw = state.row_write_count
+        flat = jax.tree.leaves(tree)
+        for i, (leaf, lvl, ax) in enumerate(zip(flat,
+                                                self.plan.leaf_levels,
+                                                self.plan.leaf_seq_axis)):
+            if lvl is None or ax is None:
+                continue
+            C = leaf.shape[ax]
+            inc = addr_mod.window_group_counts(
+                jnp.asarray(gap_start % C, jnp.int32), min(cols, C), C,
+                leaf.shape[self.plan.batch_axis], rw.shape[1], spec)
+            rw = rw.at[i].add(inc)
+        return dataclasses.replace(state, row_write_count=rw)
+
+    def slot_scores(self, state: LifetimeState, tree: Any) -> jax.Array:
+        """(B,) f32 per-slot placement score for wear-aware admission:
+        the hottest row-group wear backing each slot's rows plus its
+        residual decayed bits — higher = a worse home for a HIGH-quality
+        request. Device-resident; the scheduler syncs it at its periodic
+        wear checks, never per admission."""
+        spec = self.plan.address_spec or addr_mod.AddressSpec()
+        flat = jax.tree.leaves(tree)
+        bx = self.plan.batch_axis
+        B = flat[0].shape[bx]
+        wear_s = jnp.zeros((B,), jnp.float32)
+        decay_s = jnp.zeros((B,), jnp.float32)
+        wear = state.row_wear()
+        for i, (leaf, lvl, ax) in enumerate(zip(flat,
+                                                self.plan.leaf_levels,
+                                                self.plan.leaf_seq_axis)):
+            if lvl is None:
+                continue
+            gc = 1 if ax is None else spec.col_groups(leaf.shape[ax])
+            wear_s = jnp.maximum(wear_s, jnp.max(
+                wear[i, :B * gc].reshape(B, gc),
+                axis=1).astype(jnp.float32))
+            if state.masks[i] is not None:
+                m = jnp.moveaxis(state.masks[i], bx, 0).reshape(B, -1)
+                decay_s = decay_s + jnp.sum(
+                    jax.lax.population_count(m).astype(jnp.int32),
+                    axis=1).astype(jnp.float32)
+        return wear_s + decay_s
 
     # -------------------------------------------------------------- advance
     def advance(self, key: jax.Array, tree: Any, state: LifetimeState,

@@ -99,6 +99,16 @@ class ServeConfig:
     # the scheduler may run scrub passes against the accumulated decay.
     retention_scale: float = 0.0
     ambient_k: float = 300.0
+    # physical addressing (repro.memory.address): "rotate" enables the
+    # wear-leveling remap (the scheduler rotates the logical→physical
+    # column permutation when hot-row wear concentrates); endurance_budget
+    # > 0 enables the stuck-at failure model (row groups whose wear
+    # exhausts the budget stop accepting writes). Either turns the address
+    # layer on; with identity shifts and no worn rows the token/energy
+    # stream is bit-identical to wear_policy="none".
+    wear_policy: str = "none"
+    endurance_budget: int = 0
+    remap_group_cols: int = 8
 
 
 def _tag_cache(cache: Any) -> Any:
@@ -184,17 +194,34 @@ class ServingEngine:
         # floor swaps levels between bursts without ever retracing.
         cache_sds = jax.eval_shape(lambda: self.api.init_cache(
             1, self.scfg.max_seq))
+        # the physical addressing layer (repro.memory.address): on when a
+        # wear policy or an endurance budget asks for it. The remap shifts
+        # ride the burst as (L,) i32 OPERANDS — a wear-leveling rotation
+        # between bursts swaps integers, never retraces.
+        self.wear = (serve_cfg.wear_policy != "none"
+                     or serve_cfg.endurance_budget > 0)
+        addr_spec = None
+        if self.wear:
+            from repro.memory import AddressSpec
+            addr_spec = AddressSpec(
+                group_cols=serve_cfg.remap_group_cols,
+                endurance_budget=serve_cfg.endurance_budget)
         self.plan = WritePlan.for_tree(
             cache_sds, policy=kv_cache_policy, backend=serve_cfg.backend,
             axes=self.api.cache_axes(), batch_axis=BATCH_AXIS,
             soft_error_ber=serve_cfg.soft_error_ber,
-            soft_error_hardened=serve_cfg.soft_error_hardened)
+            soft_error_hardened=serve_cfg.soft_error_hardened,
+            address_spec=addr_spec)
         # the lifetime plan shadows the write plan when retention is on:
         # per-(leaf, floor, ambient) decay thresholds are operands, resolved
         # once — an ambient-temperature schedule swaps arrays between
-        # bursts, never retraces (repro.reliability.lifetime).
+        # bursts, never retraces (repro.reliability.lifetime). The wear
+        # layer needs the lifetime state too (it carries the row-group
+        # wear counters); with retention_scale == 0 the plan is immortal —
+        # ``advance`` is an identity and no decay RNG runs — but the
+        # counters still ride the scan.
         self.life_plan = None
-        if serve_cfg.retention_scale > 0.0:
+        if serve_cfg.retention_scale > 0.0 or self.wear:
             from repro.reliability import LifetimePlan
             self.life_plan = LifetimePlan.for_tree(
                 cache_sds, self.plan, ambient_k=serve_cfg.ambient_k,
@@ -202,6 +229,7 @@ class ServingEngine:
             self._scrub_fused = jax.jit(
                 self._make_scrub(), static_argnames=("enabled", "cols"))
             self._life_reset = jax.jit(self.life_plan.reset_rows)
+            self._slot_scores = jax.jit(self.life_plan.slot_scores)
         self._prefill_fused = jax.jit(self._make_fused_prefill(
             diff_old_rows=False))
         self._admit_fused = jax.jit(self._make_fused_prefill(
@@ -221,6 +249,12 @@ class ServingEngine:
         ``vectors_for_floor``. Only valid with retention enabled."""
         assert self.life_plan is not None, "retention_scale == 0"
         return self.life_plan.vectors_for(floor, ambient_k=ambient_k)
+
+    def remap_cost(self, tree: Any) -> Tuple[float, int]:
+        """Host constants (energy_pj, bits) of ONE wear-leveling rotation
+        — delegates to the plan's single migration-pricing source (see
+        ``WritePlan.migration_cost``)."""
+        return self.plan.migration_cost(tree)
 
     # ---------------------------------------------------------- fused steps
     def _make_fused_prefill(self, diff_old_rows: bool):
@@ -262,17 +296,32 @@ class ServingEngine:
         scheduler hit literally the same compiled computation.
         """
         retention = self.life_plan is not None
+        wear = self.wear
 
         def step_body(params, tok, cache, pos, key, acc, slot_acc, active,
-                      vectors, life, rvec):
+                      vectors, life, rvec, shifts=None):
             act_i = active.astype(jnp.int32)
             key, k_write, k_sample = jax.random.split(key, 3)
             logits, new_cache = self.api.decode_step(
                 params, tok, cache, pos, self.scfg.max_seq)
             new_cache = mask_rows(new_cache, cache, active)
             if self.scfg.extent_enabled:
-                new_cache, st = self.plan.write_columns(
-                    k_write, cache, new_cache, pos, vectors)
+                if wear:
+                    # physical addressing: the written column's address
+                    # maps through the remap shifts to its row group —
+                    # worn groups are stuck-at, and the write books
+                    # per-group endurance wear. Shifts/worn are operands
+                    # (worn derives from the carried life state), so a
+                    # rotation or a mid-burst failure never retraces.
+                    worn = self.life_plan.worn_groups(life)
+                    new_cache, st = self.plan.write_columns(
+                        k_write, cache, new_cache, pos, vectors,
+                        addr=(shifts, worn))
+                    life = self.life_plan.record_column_write(
+                        life, new_cache, pos, active, shifts)
+                else:
+                    new_cache, st = self.plan.write_columns(
+                        k_write, cache, new_cache, pos, vectors)
                 acc = acc + st
                 slot_acc = add_slot_stats(slot_acc, st, active)
             if retention:
@@ -292,7 +341,19 @@ class ServingEngine:
             tok2 = jnp.where(active, tok2, tok)
             return tok2, new_cache, pos + act_i, key, acc, slot_acc, life
 
-        if retention:
+        if wear:
+            def burst(params, tok, cache, pos, key, acc, slot_acc, active,
+                      vectors, life, rvec, shifts, *, n):
+                def body(carry, _):
+                    out = step_body(params, *carry[:6], active, vectors,
+                                    carry[6], rvec, shifts)
+                    return out, out[0]
+
+                carry = (tok, cache, pos, key, acc, slot_acc, life)
+                (tok, cache, pos, key, acc, slot_acc, life), toks = (
+                    jax.lax.scan(body, carry, None, length=n))
+                return tok, cache, pos, key, acc, slot_acc, life, toks
+        elif retention:
             def burst(params, tok, cache, pos, key, acc, slot_acc, active,
                       vectors, life, rvec, *, n):
                 def body(carry, _):
@@ -327,9 +388,19 @@ class ServingEngine:
         every vector are operands."""
         from repro.reliability import scrub_tree
 
-        def scrub(key, cache, life, vectors, cursor, *, enabled, cols):
-            return scrub_tree(key, cache, life, self.life_plan, vectors,
-                              enabled=enabled, cols=cols, cursor=cursor)
+        if self.wear:
+            def scrub(key, cache, life, vectors, cursor, shifts, *,
+                      enabled, cols):
+                # the cursor walks PHYSICAL rows; worn rows stay decayed
+                worn = self.life_plan.worn_groups(life)
+                return scrub_tree(key, cache, life, self.life_plan,
+                                  vectors, enabled=enabled, cols=cols,
+                                  cursor=cursor, addr=(shifts, worn))
+        else:
+            def scrub(key, cache, life, vectors, cursor, *, enabled, cols):
+                return scrub_tree(key, cache, life, self.life_plan,
+                                  vectors, enabled=enabled, cols=cols,
+                                  cursor=cursor)
 
         return scrub
 
@@ -376,7 +447,17 @@ class ServingEngine:
         life = (self.life_plan.init_state(cache)
                 if self.life_plan is not None else None)
         if mnt > 1:
-            if self.life_plan is not None:
+            if self.wear:
+                # monolithic generate keeps the identity permutation (no
+                # scheduler to rotate it) — bit-identical to wear off
+                # until a budget exhausts a row group
+                rvec = self.retention_vectors_for(Priority.LOW)
+                (_, cache, pos, key, acc, slot_acc, life,
+                 toks) = self._burst(
+                    self.params, tok, cache, pos, key, acc, slot_acc,
+                    active, vectors, life, rvec,
+                    self.plan.identity_address().shifts, n=mnt - 1)
+            elif self.life_plan is not None:
                 rvec = self.retention_vectors_for(Priority.LOW)
                 (_, cache, pos, key, acc, slot_acc, life,
                  toks) = self._burst(
@@ -411,5 +492,15 @@ class ServingEngine:
                 "dwell_s_per_step": self.scfg.retention_scale,
                 "flips": int(flips),
                 "decayed_bits": int(decayed),
+            }
+        if self.wear and life is not None:
+            wear = jax.device_get(life.row_wear())
+            worn = self.life_plan.worn_groups(life)
+            report["wear"] = {
+                "max_group_wear": int(wear.max()),
+                "worn_groups": (int(jax.device_get(worn).sum())
+                                if worn is not None else 0),
+                "endurance_budget": self.scfg.endurance_budget,
+                "group_cols": self.scfg.remap_group_cols,
             }
         return tokens, report

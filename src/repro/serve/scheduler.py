@@ -119,15 +119,18 @@ class ContinuousScheduler:
                  max_burst: Optional[int] = None,
                  scrub_policy: Optional[Any] = None,
                  ambient_schedule: Optional[Sequence[Tuple[int, float]]]
-                 = None):
+                 = None,
+                 wear_policy: Optional[Any] = None):
         assert capacity >= 1
         self.eng = engine
         self.pool = SlotPool(engine.api, capacity, engine.scfg.max_seq)
         self.max_burst = max_burst
         self.scrub_policy = scrub_policy
+        self.wear_policy = wear_policy
         self.ambient_schedule = (sorted(ambient_schedule)
                                  if ambient_schedule else None)
         self.life = None  # LifetimeState, owned per run()
+        self.addr = None  # AddressState (remap shifts), owned per run()
         self.meter = StepEnergyMeter()
         # per-rid runtime state. Token fragments are kept as LAZY device
         # array references ((array, column, take) tuples) and materialized
@@ -199,15 +202,74 @@ class ContinuousScheduler:
         cols = policy.cols_per_pass or None
         cursor = jnp.asarray(self._scrub_cursor, jnp.int32)
         k = jax.random.fold_in(key, 1_000_000 + self._scrub_passes)
-        self.pool.cache, self.life, st = eng._scrub_fused(
-            k, self.pool.cache, self.life, vectors, cursor,
-            enabled=enabled, cols=cols)
+        if eng.wear:
+            # address-layer scrub: the cursor walks physical rows through
+            # the current remap shifts; worn rows keep their decay
+            self.pool.cache, self.life, st = eng._scrub_fused(
+                k, self.pool.cache, self.life, vectors, cursor,
+                self.addr.shifts, enabled=enabled, cols=cols)
+        else:
+            self.pool.cache, self.life, st = eng._scrub_fused(
+                k, self.pool.cache, self.life, vectors, cursor,
+                enabled=enabled, cols=cols)
         self._acc_scrub = self._acc_scrub + st
         policy.record(clock)
         self._scrub_passes += 1
         if cols:
             self._scrub_cursor = (self._scrub_cursor + cols) % \
                 eng.scfg.max_seq
+
+    # ------------------------------------------------------- wear leveling
+    def _remap_stats(self) -> WriteStats:
+        """One rotation's migration write as a WriteStats increment (host
+        constants resolved once per run — see ServingEngine.remap_cost)."""
+        if self._remap_cost is None:
+            self._remap_cost = self.eng.remap_cost(self.pool.cache)
+        pj, bits = self._remap_cost
+        return WriteStats.for_bits(bits,
+                                   energy_pj=jnp.asarray(pj, jnp.float32))
+
+    def _maybe_wear_check(self, clock: int) -> None:
+        """Periodic wear checkpoint: sync the (L, G) row-group counters and
+        the per-slot placement scores (the ONE device read this subsystem
+        costs, amortized over ``check_interval`` steps), then ask the wear
+        policy whether the permutation should rotate. A rotation advances
+        the remap shifts — burst/scrub OPERANDS, so nothing retraces — and
+        books the start-gap migration write into the ``remap`` stream."""
+        eng, pol = self.eng, self.wear_policy
+        if not eng.wear or self.life is None:
+            return
+        interval = pol.check_interval if pol is not None else 16
+        if clock - self._last_wear_check < max(1, interval):
+            return
+        self._last_wear_check = clock
+        wear, scores = jax.device_get(
+            (self.life.row_wear(),
+             eng._slot_scores(self.life, self.pool.cache)))
+        self._slot_scores_host = scores
+        if pol is not None and pol.plan_rotation(clock, wear):
+            self.addr = self.addr.rotate(self._rotatable, pol.rotate_step)
+            self._acc_remap = self._acc_remap + self._remap_stats()
+            # the migration's row re-writes consume endurance too: book
+            # the gap window (the freshly re-driven physical rows)
+            self.life = eng.life_plan.record_migration(
+                self.life, self.pool.cache, self._gap_host,
+                pol.rotate_step)
+            self._gap_host += pol.rotate_step
+            pol.record(clock, wear)
+
+    def wear_state(self) -> Dict[str, Any]:
+        """Portable wear snapshot — the physical address map and the
+        row-group endurance counters, as a plain pytree of arrays a
+        ``train.checkpoint.Checkpointer`` can persist. Feed it back via
+        ``run(..., wear_state=...)`` so endurance wear survives a serving-
+        process restart (physical damage outlives any one arrival
+        stream)."""
+        assert self.eng.wear and self.life is not None
+        return {"shifts": self.addr.shifts,
+                "rotations": self.addr.rotations,
+                "row_write_count": self.life.row_write_count,
+                "row_scrub_count": self.life.row_scrub_count}
 
     # --------------------------------------------------------- event phases
     def _admit(self, pending, clock: int, key) -> Tuple[Any, int]:
@@ -227,7 +289,17 @@ class ContinuousScheduler:
         for group in groups.values():
             for r in group:
                 self._level[r.rid] = self._resolve_quality(r)
-            ids = self.pool.alloc(len(group))
+            # wear-aware admission: HIGH-quality requests steer away from
+            # slots backed by high-wear / high-residual-decay rows (scores
+            # from the last wear checkpoint — no extra sync here). LOW/MID
+            # admissions keep the lowest-id order the bit-parity contract
+            # rests on.
+            scores = None
+            if (self.eng.wear and self._slot_scores_host is not None
+                    and max(self._level[r.rid] for r in group)
+                    >= Priority.HIGH):
+                scores = self._slot_scores_host
+            ids = self.pool.alloc(len(group), scores=scores)
             vectors = self.eng.vectors_for_floor(
                 max(self._floor(),
                     max(self._level[r.rid] for r in group)))
@@ -304,11 +376,17 @@ class ContinuousScheduler:
         return len(done)
 
     # ----------------------------------------------------------------- run
-    def run(self, requests: Sequence[Request]) -> Dict[str, Any]:
+    def run(self, requests: Sequence[Request],
+            wear_state: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
         """Serve an arrival stream to completion; returns the serve report:
         per-request entries, pool/table statistics, and the aggregate
         energy ledger (streams bit-comparable with ``generate()`` when the
-        stream degenerates to one full-pool lockstep batch)."""
+        stream degenerates to one full-pool lockstep batch).
+
+        ``wear_state`` (a prior run's ``wear_state()`` snapshot, possibly
+        round-tripped through a checkpoint) restores the physical address
+        map and the row-group endurance counters — wear is device damage,
+        so it persists across serving processes."""
         eng, pool = self.eng, self.pool
         pending = collections.deque(
             sorted(requests, key=lambda r: (r.arrival, r.rid)))
@@ -319,12 +397,41 @@ class ContinuousScheduler:
         self._acc_prefill = WriteStats.zero()
         self._acc_decode = WriteStats.zero()
         self._acc_scrub = WriteStats.zero()
+        self._acc_remap = WriteStats.zero()
         self._scrub_passes = 0
         self._scrub_cursor = 0
+        self._last_wear_check = 0
+        self._slot_scores_host = None
+        self._remap_cost = None
+        self._gap_host = 0  # host mirror of the gap (pre-rotation shift)
         if self.scrub_policy is not None:
             self.scrub_policy.reset()  # the serving clock restarts at 0
+        if self.wear_policy is not None:
+            self.wear_policy.reset()
         self.life = (eng.life_plan.init_state(pool.cache)
                      if eng.life_plan is not None else None)
+        self.addr = eng.plan.identity_address() if eng.wear else None
+        self._rotatable = (jnp.asarray(eng.plan.rotatable())
+                           if eng.wear else None)
+        if wear_state is not None:
+            assert eng.wear and self.life is not None
+            from repro.memory import AddressState
+            self.addr = AddressState(
+                shifts=jnp.asarray(wear_state["shifts"], jnp.int32),
+                rotations=jnp.asarray(wear_state["rotations"], jnp.int32))
+            self.life = dataclasses.replace(
+                self.life,
+                row_write_count=jnp.asarray(
+                    wear_state["row_write_count"], jnp.int32),
+                row_scrub_count=jnp.asarray(
+                    wear_state["row_scrub_count"], jnp.int32))
+            self._gap_host = int(np.max(np.asarray(wear_state["shifts"])))
+            if self.wear_policy is not None:
+                # restored historical wear is not wear GAINED this run:
+                # without the rebase the first check would fire a
+                # spurious (unearned) rotation on every resume
+                self.wear_policy.rebase(
+                    jax.device_get(self.life.row_wear()))
         # engines outlive schedulers: zero the table's traffic counters so
         # THIS run's report never aggregates a previous arrival stream's
         # hits/misses/evictions (cached block->quality entries survive —
@@ -365,7 +472,15 @@ class ContinuousScheduler:
             n = max(int(n), 1)
             active = pool.active_mask()
             vectors = eng.vectors_for_floor(self._floor())
-            if self.life is not None:
+            if eng.wear:
+                rvec = eng.retention_vectors_for(
+                    self._floor(), ambient_k=self._ambient_at(clock))
+                (pool.tok, pool.cache, pool.pos, key, self._acc_decode,
+                 pool.slot_acc, self.life, toks) = eng._burst(
+                    eng.params, pool.tok, pool.cache, pool.pos, key,
+                    self._acc_decode, pool.slot_acc, active, vectors,
+                    self.life, rvec, self.addr.shifts, n=n)
+            elif self.life is not None:
                 rvec = eng.retention_vectors_for(
                     self._floor(), ambient_k=self._ambient_at(clock))
                 (pool.tok, pool.cache, pool.pos, key, self._acc_decode,
@@ -388,15 +503,19 @@ class ContinuousScheduler:
             bursts += 1
             self._complete(clock)
             self._maybe_scrub(clock, key)
+            self._maybe_wear_check(clock)
 
         # ----- aggregate ledger: one final device->host sync (bits_total
         # rides inside the accumulated WriteStats now)
-        pre_host, dec_host, scrub_host = jax.device_get(
-            (self._acc_prefill, self._acc_decode, self._acc_scrub))
+        pre_host, dec_host, scrub_host, remap_host = jax.device_get(
+            (self._acc_prefill, self._acc_decode, self._acc_scrub,
+             self._acc_remap))
         self.meter.add_stream("kv_prefill", pre_host)
         self.meter.add_stream("kv_decode", dec_host)
         if self.life is not None:
             self.meter.add_stream("kv_scrub", scrub_host)
+        if eng.wear:
+            self.meter.add_stream("kv_remap", remap_host)
         summary = self.meter.summary()
         summary.update({
             "requests": self._reports,
@@ -409,22 +528,40 @@ class ContinuousScheduler:
         if self.life is not None:
             # the LIFETIME ledger: what this stream cost over its whole
             # life — write energy plus the scrub energy spent defending it
-            # (plus the damage that slipped through, as counters)
+            # and the remap energy spent spreading its wear (plus the
+            # damage that slipped through, as counters)
             flips, decayed = jax.device_get(
                 (self.life.retention_flips, self.life.decayed_bits()))
             write_pj = (float(pre_host.energy_pj)
                         + float(dec_host.energy_pj))
             scrub_pj = float(scrub_host.energy_pj)
+            remap_pj = float(remap_host.energy_pj)
             summary["lifetime"] = {
                 "ambient_k": self.eng.scfg.ambient_k,
                 "dwell_s_per_step": self.eng.scfg.retention_scale,
                 "write_energy_pj": write_pj,
                 "scrub_energy_pj": scrub_pj,
-                "lifetime_energy_pj": write_pj + scrub_pj,
+                "remap_energy_pj": remap_pj,
+                "lifetime_energy_pj": write_pj + scrub_pj + remap_pj,
                 "retention_flips": int(flips),
                 "residual_decayed_bits": int(decayed),
                 "scrub_passes": self._scrub_passes,
                 "scrub_policy": (self.scrub_policy.name
                                  if self.scrub_policy else "none"),
+            }
+        if eng.wear:
+            wear = jax.device_get(self.life.row_wear())
+            worn = eng.life_plan.worn_groups(self.life)
+            summary["wear"] = {
+                "policy": (self.wear_policy.name
+                           if self.wear_policy else "none"),
+                "rotations": (self.wear_policy.rotations
+                              if self.wear_policy else 0),
+                "remap_energy_pj": float(remap_host.energy_pj),
+                "max_group_wear": int(wear.max()),
+                "worn_groups": (int(jax.device_get(worn).sum())
+                                if worn is not None else 0),
+                "endurance_budget": eng.scfg.endurance_budget,
+                "group_cols": eng.scfg.remap_group_cols,
             }
         return summary

@@ -96,10 +96,24 @@ class SlotPool:
     def busy(self) -> bool:
         return len(self._free) < self.capacity
 
-    def alloc(self, n: int) -> List[int]:
-        """Claim the n lowest free slot ids (ascending — see module doc)."""
+    def alloc(self, n: int,
+              scores: Optional[Sequence[float]] = None) -> List[int]:
+        """Claim n free slots. Default: the lowest ids (ascending — see
+        module doc; the lockstep bit-parity contract rests on it).
+
+        ``scores`` ((capacity,) host floats, higher = worse home) switches
+        to wear-aware placement: the freest slots by (score, id) — ties
+        fall back to lowest-id, so a uniform score vector reproduces the
+        default order exactly. The serving scheduler passes the per-slot
+        wear/residual-decay scores from its last wear checkpoint when a
+        HIGH-quality request is admitted under the address layer."""
         assert n <= len(self._free), (n, len(self._free))
-        ids = [heapq.heappop(self._free) for _ in range(n)]
+        if scores is None:
+            return [heapq.heappop(self._free) for _ in range(n)]
+        ids = sorted(self._free, key=lambda i: (float(scores[i]), i))[:n]
+        taken = set(ids)
+        self._free = [i for i in self._free if i not in taken]
+        heapq.heapify(self._free)
         return ids
 
     def release(self, slot_ids: Sequence[int]) -> None:

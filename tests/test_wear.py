@@ -1,0 +1,337 @@
+"""Physical addressing & wear leveling (repro.memory.address).
+
+The load-bearing contracts of the logical→physical remap layer:
+
+  * the permutation is invertible and identity-by-default — an identity-
+    shift run is BIT-IDENTICAL to a plan with no address layer at all, on
+    every registered backend (the remap permutes addresses, never RNG
+    streams: the counter hash sees flat element indices of the logical
+    tensor, which no shift changes);
+  * rotation swaps integer operands — it NEVER retraces the compiled
+    write (trace-counter witnessed, same idiom as the floor-swap test in
+    test_memory.py);
+  * wear books to the *physical* row group: rotating moves where the same
+    logical column's wear lands;
+  * worn (endurance-exhausted) row groups are stuck-at: writes are
+    inhibited at zero energy, the lost flips land in WriteStats.errors,
+    and scrub cannot resurrect them (their decay stays in the residual);
+  * the wear snapshot round-trips through the fault-tolerant checkpointer
+    (wear is physical damage — it must outlive a serving process).
+
+This module rides the LIGHT pytest shard (see .github/workflows/ci.yml):
+everything here is plan-level except one reduced-config serve test.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import memory
+from repro.core.priority import Priority
+from repro.memory.address import (AddressSpec, AddressState, logical_col,
+                                  phys_col)
+from repro.reliability import (LifetimePlan, RotateWearPolicy,
+                               make_wear_policy, scrub_tree)
+
+_AXES = {"k": ("layers", "batch", "kv_seq", "head_dim"),
+         "v": ("layers", "batch", "kv_seq", "head_dim")}
+
+
+def _tree(C=16, D=4, dtype=jnp.bfloat16):
+    return {"k": jnp.zeros((2, 3, C, D), dtype),
+            "v": jnp.zeros((2, 3, C, D), dtype)}
+
+
+def _rand_like(tree, seed):
+    return jax.tree.map(
+        lambda a: jax.random.normal(jax.random.PRNGKey(seed),
+                                    a.shape).astype(a.dtype), tree)
+
+
+def _plan(tree, spec=None, backend="lanes_ref"):
+    return memory.WritePlan.for_tree(
+        tree, policy=lambda p, l: Priority.LOW, backend=backend,
+        axes=_AXES, address_spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# permutation properties
+# ---------------------------------------------------------------------------
+
+class TestPermutation:
+    @pytest.mark.parametrize("C", [7, 16, 64])
+    @pytest.mark.parametrize("shift", [0, 1, 5, 16, 1000])
+    def test_invertible(self, C, shift):
+        cols = jnp.arange(C, dtype=jnp.int32)
+        s = jnp.asarray(shift, jnp.int32)
+        p = phys_col(cols, s, C)
+        # a bijection on [0, C) whose inverse is logical_col
+        assert sorted(np.asarray(p).tolist()) == list(range(C))
+        np.testing.assert_array_equal(
+            np.asarray(logical_col(p, s, C)), np.asarray(cols))
+
+    def test_rotation_never_retraces_and_never_retraces_back(self):
+        """Every distinct shift value reuses ONE compiled executable, and
+        a full revolution returns to the identity mapping (the rotation
+        never 'retraces its steps' onto still-hot rows until the whole
+        ring has been covered: C/step distinct mappings)."""
+        tree = _tree()
+        spec = AddressSpec(group_cols=4, endurance_budget=0)
+        plan = _plan(tree, spec)
+        lp = LifetimePlan.for_tree(tree, plan)
+        state = lp.init_state(tree)
+        new = _rand_like(tree, 1)
+        pos = jnp.zeros((3,), jnp.int32)
+        active = jnp.ones((3,), bool)
+        traces = {"n": 0}
+
+        @jax.jit
+        def step(key, old, new, shifts, state):
+            traces["n"] += 1
+            worn = lp.worn_groups(state)
+            stored, st = plan.write_columns(key, old, new, pos,
+                                            addr=(shifts, worn))
+            return stored, lp.record_column_write(state, stored, pos,
+                                                  active, shifts)
+
+        addr = plan.identity_address()
+        rotatable = jnp.asarray(plan.rotatable())
+        seen = set()
+        for _ in range(4):  # 4 rotations by 4 over C=16: a full revolution
+            step(jax.random.PRNGKey(0), tree, new, addr.shifts, state)
+            seen.add(int(addr.shifts[0]) % 16)
+            addr = addr.rotate(rotatable, 4)
+        assert traces["n"] == 1, "a rotation retraced the write"
+        assert len(seen) == 4, "rotation revisited a mapping early"
+        assert int(addr.shifts[0]) % 16 == 0  # full revolution closes
+
+    def test_rotate_only_moves_ring_leaves(self):
+        tree = {"k": jnp.zeros((2, 3, 8, 4), jnp.bfloat16),
+                "state": jnp.zeros((2, 3, 4), jnp.float32)}
+        plan = memory.WritePlan.for_tree(
+            tree, policy=lambda p, l: Priority.LOW,
+            axes={"k": ("layers", "batch", "kv_seq", "head_dim"),
+                  "state": None})
+        addr = plan.identity_address().rotate(
+            jnp.asarray(plan.rotatable()), 3)
+        assert np.asarray(addr.shifts).tolist() == [3, 0]
+
+
+# ---------------------------------------------------------------------------
+# identity-permutation bit-exactness (the PR 4 parity contract)
+# ---------------------------------------------------------------------------
+
+class TestIdentityBitExact:
+    @pytest.mark.parametrize("backend", ["oracle", "lanes_ref", "pallas",
+                                         "exact"])
+    def test_identity_matches_no_address_layer(self, backend):
+        tree = _tree()
+        spec = AddressSpec(group_cols=4, endurance_budget=100)
+        plan_a = _plan(tree, spec, backend)
+        plan_0 = _plan(tree, None, backend)
+        lp = LifetimePlan.for_tree(tree, plan_a)
+        state = lp.init_state(tree)
+        new = _rand_like(tree, 2)
+        key = jax.random.PRNGKey(3)
+        pos = jnp.asarray([5, 11, 5], jnp.int32)
+        addr = (plan_a.identity_address().shifts, lp.worn_groups(state))
+        s_a, w_a = plan_a.write_columns(key, tree, new, pos, addr=addr)
+        s_0, w_0 = plan_0.write_columns(key, tree, new, pos)
+        for a, b in zip(jax.tree.leaves(s_a), jax.tree.leaves(s_0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for f in ("energy_pj", "flips01", "flips10", "errors"):
+            assert float(getattr(w_a, f)) == float(getattr(w_0, f)), f
+        # the full-tree write path too
+        f_a, v_a = plan_a.write(key, tree, new, addr=addr)
+        f_0, v_0 = plan_0.write(key, tree, new)
+        for a, b in zip(jax.tree.leaves(f_a), jax.tree.leaves(f_0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert float(v_a.energy_pj) == float(v_0.energy_pj)
+
+
+# ---------------------------------------------------------------------------
+# wear accounting + the endurance-budget failure model
+# ---------------------------------------------------------------------------
+
+class TestWearAndFailure:
+    def _setup(self, budget=0, group_cols=4):
+        tree = _tree()
+        spec = AddressSpec(group_cols=group_cols,
+                           endurance_budget=budget)
+        plan = _plan(tree, spec)
+        lp = LifetimePlan.for_tree(tree, plan)
+        return tree, spec, plan, lp, lp.init_state(tree)
+
+    def test_wear_books_to_rotated_physical_group(self):
+        tree, spec, plan, lp, state = self._setup()
+        pos = jnp.asarray([1, 1, 1], jnp.int32)
+        active = jnp.ones((3,), bool)
+        shifts0 = plan.identity_address().shifts
+        st0 = lp.record_column_write(state, tree, pos, active, shifts0)
+        # identity: logical col 1 -> phys 1 -> group 0 of each slot (Gc=4)
+        w0 = np.asarray(st0.row_write_count)
+        assert w0[0, 0] == 1 and w0[0, 4] == 1 and w0[0, 8] == 1
+        # rotate by one group: the SAME logical column wears group 1 now
+        shifts1 = plan.identity_address().rotate(
+            jnp.asarray(plan.rotatable()), 4).shifts
+        st1 = lp.record_column_write(state, tree, pos, active, shifts1)
+        w1 = np.asarray(st1.row_write_count)
+        assert w1[0, 1] == 1 and w1[0, 5] == 1 and w1[0, 9] == 1
+        assert w1[0, 0] == 0
+        # inactive slots book nothing
+        st2 = lp.record_column_write(state, tree, pos,
+                                     jnp.asarray([True, False, True]),
+                                     shifts0)
+        assert np.asarray(st2.row_write_count)[0, 4] == 0
+
+    def test_worn_rows_are_stuck_at(self):
+        tree, spec, plan, lp, state = self._setup(budget=2)
+        pos = jnp.zeros((3,), jnp.int32)
+        active = jnp.ones((3,), bool)
+        shifts = plan.identity_address().shifts
+        # exhaust slot 0's first group only
+        rw = state.row_write_count.at[:, 0].set(2)
+        state = dataclasses.replace(state, row_write_count=rw)
+        worn = lp.worn_groups(state)
+        assert int(np.asarray(worn).sum()) == 2  # both leaves, group 0
+        old = _rand_like(tree, 4)
+        new = _rand_like(tree, 5)
+        stored, st = plan.write_columns(jax.random.PRNGKey(6), old, new,
+                                        pos, addr=(shifts, worn))
+        # slot 0's written column kept its OLD bits; slots 1/2 took new
+        for o, n, s in zip(jax.tree.leaves(old), jax.tree.leaves(new),
+                           jax.tree.leaves(stored)):
+            np.testing.assert_array_equal(np.asarray(s[:, 0, 0]),
+                                          np.asarray(o[:, 0, 0]))
+            assert not np.array_equal(np.asarray(s[:, 1, 0]),
+                                      np.asarray(o[:, 1, 0]))
+        # the inhibited flips are errors, and cost no energy: compare to
+        # the same write with only slots 1/2 active in the diff
+        assert int(st.errors) > 0
+        base_stored, base = plan.write_columns(
+            jax.random.PRNGKey(6), old, new, pos,
+            addr=(shifts, jnp.zeros_like(worn)))
+        assert float(st.energy_pj) < float(base.energy_pj)
+
+    def test_scrub_books_wear_and_respects_worn_rows(self):
+        tree, spec, plan, lp, state = self._setup(budget=4)
+        # decay some bits everywhere, then wear out slot 0 group 0
+        masks = tuple(
+            jnp.ones_like(m) if m is not None else None
+            for m in state.masks)
+        rw = state.row_write_count.at[:, 0].set(4)
+        state = dataclasses.replace(state, masks=masks,
+                                    row_write_count=rw)
+        worn = lp.worn_groups(state)
+        data = _rand_like(tree, 7)
+        out, st2, acc = scrub_tree(
+            jax.random.PRNGKey(8), data, state, lp,
+            plan.vectors_for(Priority.LOW), cols=4,
+            cursor=jnp.zeros((), jnp.int32),
+            addr=(plan.identity_address().shifts, worn))
+        # scrub wear booked per covered physical group
+        assert int(np.asarray(st2.row_scrub_count).sum()) > 0
+        # worn rows keep their decay: the residual mask in slot 0's first
+        # group columns is untouched (all-ones), scrubbed elsewhere
+        res = np.asarray(st2.masks[0])
+        assert (res[:, 0, :4] != 0).all(), "worn rows were resurrected"
+
+    def test_migration_books_row_wear(self):
+        """Rotation migrations consume the endurance budget too: the gap
+        window's row re-writes land in row_write_count for every slot."""
+        tree, spec, plan, lp, state = self._setup()
+        st2 = lp.record_migration(state, tree, 0, 4)
+        w = np.asarray(st2.row_write_count)
+        # gap window [0, 4) = group 0 of each slot, one unit per column
+        assert w[0, 0] == 4 and w[0, 4] == 4 and w[0, 8] == 4
+        assert w[0, 1] == 0
+
+    def test_policy_rebase_prevents_spurious_resume_rotation(self):
+        """Resuming from a persisted snapshot must not fire a rotation on
+        restored HISTORICAL wear — only wear gained this run triggers."""
+        pol = make_wear_policy("rotate", hot_row_wear=4)
+        wear = np.full((1, 4), 40)
+        pol.rebase(wear)
+        assert not pol.plan_rotation(1, wear)
+        assert pol.rotations == 0
+        assert pol.plan_rotation(2, wear + 4)
+
+    def test_wear_policy_triggers_on_gained_wear(self):
+        pol = make_wear_policy("rotate", check_interval=1, hot_row_wear=4)
+        assert isinstance(pol, RotateWearPolicy)
+        wear = np.zeros((2, 8), np.int64)
+        assert not pol.plan_rotation(1, wear)
+        wear[0, 0] = 4
+        assert pol.plan_rotation(2, wear)
+        pol.record(2, wear)
+        assert pol.rotations == 1
+        # historical wear does not re-trigger; only NEW wear does
+        assert not pol.plan_rotation(3, wear)
+        wear[0, 3] = 4
+        assert pol.plan_rotation(4, wear)
+        none = make_wear_policy("none")
+        assert not none.plan_rotation(5, wear)
+        with pytest.raises(KeyError):
+            make_wear_policy("bogus")
+
+
+# ---------------------------------------------------------------------------
+# serve integration + persistence
+# ---------------------------------------------------------------------------
+
+class TestServeWear:
+    def test_identity_serve_bit_identical_and_rotation_levels(self):
+        from repro.configs import get_config
+        from repro.serve import (ContinuousScheduler, ServeConfig,
+                                 ServingEngine, synthetic_requests)
+        cfg = get_config("qwen2.5-3b").reduced()
+
+        def engine(**kw):
+            return ServingEngine(cfg, ServeConfig(max_seq=24,
+                                                  max_new_tokens=5, **kw))
+
+        def reqs():
+            return synthetic_requests(cfg, 3, prompt_len=6, new_tokens=4,
+                                      arrival_every=2, seed=9)
+
+        r0 = ContinuousScheduler(engine(), capacity=2).run(reqs())
+        eng = engine(wear_policy="rotate", remap_group_cols=4)
+        sch = ContinuousScheduler(
+            eng, capacity=2,
+            wear_policy=make_wear_policy("rotate", check_interval=2,
+                                         rotate_step=4, hot_row_wear=2))
+        r1 = sch.run(reqs())
+        # identity permutation, unbounded budget: the data/token streams
+        # are bit-identical to wear off — remap energy rides separately
+        for s in ("kv_prefill", "kv_decode"):
+            for k in ("energy_pj", "bits_written", "bit_errors"):
+                assert r0["streams"][s][k] == r1["streams"][s][k], (s, k)
+        t0 = [r0["requests"][i]["tokens"] for i in sorted(r0["requests"])]
+        t1 = [r1["requests"][i]["tokens"] for i in sorted(r1["requests"])]
+        assert t0 == t1
+        assert r1["wear"]["rotations"] >= 1
+        assert r1["wear"]["remap_energy_pj"] > 0
+        assert (r1["lifetime"]["remap_energy_pj"]
+                == r1["wear"]["remap_energy_pj"])
+        # wear snapshot persists through the fault-tolerant checkpointer
+        snap = sch.wear_state()
+        from repro.train.checkpoint import Checkpointer
+        import tempfile
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d, async_save=False)
+            ck.save(1, snap)
+            restored, _ = ck.restore(jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), snap))
+        for k in snap:
+            np.testing.assert_array_equal(np.asarray(snap[k]),
+                                          np.asarray(restored[k]))
+        # feeding it back resumes the wear clock: accumulated damage and
+        # the rotated map carry into the next arrival stream
+        sch.run(reqs(), wear_state=restored)
+        resumed = sch.wear_state()
+        assert (int(np.asarray(resumed["row_write_count"]).sum())
+                > int(np.asarray(snap["row_write_count"]).sum()))
+        assert int(np.asarray(resumed["rotations"]).max()) >= \
+            int(np.asarray(snap["rotations"]).max())
