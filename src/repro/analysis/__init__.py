@@ -1,0 +1,28 @@
+"""repro.analysis — the repo-specific AST invariant linter.
+
+Fault-model-style static coverage of the contracts the reproduction
+lives by (cf. the STT-MRAM testing-survey argument that a fault *model*
+beats spot checks — cover the failure class, not the instance):
+
+  * ``operand-discipline``       — jit/scan constants ride as operands
+                                   (floor swaps / rotations never retrace);
+  * ``no-host-sync-in-scan``     — zero host transfers in traced code,
+                                   audited once-per-event syncs in serve/;
+  * ``rng-stream-hygiene``       — one fold-constant registry
+                                   (``repro.memory.rng_streams``), flat
+                                   logical indices only;
+  * ``registry-discipline``      — writes flow through the
+                                   ``repro.memory`` backend registry;
+  * ``pytree-carry-discipline``  — scan-carried dataclasses are frozen
+                                   registered pytrees.
+
+Pure stdlib — importable (and runnable: ``python -m repro.analysis``)
+without jax. Waiver syntax and the engine's contract: see ``engine.py``.
+"""
+from repro.analysis.engine import (  # noqa: F401
+    Finding, RepoContext, Report, Rule, SourceFile, all_rules, find_root,
+    register_rule, run_analysis,
+)
+from repro.analysis.reporters import (  # noqa: F401
+    render_json, render_text, to_json_dict,
+)

@@ -1,0 +1,99 @@
+"""R2 no-host-sync-in-scan — zero host transfers inside traced code, and
+an audited once-per-event budget in the serving/reliability zone.
+
+Two tiers:
+
+  * **traced regions** (jit bodies, scan steps, their local call graph):
+    any host transfer — ``jax.device_get``, ``np.asarray``/``np.array``,
+    ``.item()``, ``.block_until_ready()``, ``print`` — is a hard
+    violation: it forces a device round-trip *per traced step* and
+    serializes the pipeline (the class behind PR 4's ``transfer_guard``
+    test). ``float()``/``int()``/``bool()`` of a traced positional
+    parameter is flagged too (kwonly params are the repo's static-arg
+    idiom and exempt).
+
+  * **the zero-sync zone** (``src/repro/serve/``,
+    ``src/repro/reliability/``): explicit transfer APIs are flagged
+    *everywhere*, host paths included. The serving loop's contract is one
+    sync per scheduler event — each intentional sync carries a
+    ``# repro: allow(no-host-sync-in-scan): …`` waiver naming its budget,
+    so the set of syncs is enumerable by grep and audited in review.
+
+``jax.ensure_compile_time_eval`` blocks are exempt (resolve-once
+calibration is host math by design).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import (Finding, RepoContext, Rule, SourceFile,
+                                   register_rule)
+from repro.analysis.visitors import dotted, walk_calls
+
+TRANSFER_CALLS = {"jax.device_get"}
+NUMPY_CTORS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+SYNC_METHODS = {"item", "block_until_ready"}
+COERCIONS = {"float", "int", "bool"}
+
+ZONE_PREFIXES = ("src/repro/serve/", "src/repro/reliability/")
+
+
+def _sync_name(call: ast.Call) -> str:
+    fn = dotted(call.func)
+    if fn in TRANSFER_CALLS or fn in NUMPY_CTORS:
+        return fn
+    if (isinstance(call.func, ast.Attribute)
+            and call.func.attr in SYNC_METHODS and not call.args):
+        return f".{call.func.attr}()"
+    return ""
+
+
+class HostSync(Rule):
+    name = "no-host-sync-in-scan"
+    contract = ("decode scans perform zero host transfers; the serving "
+                "zone syncs once per scheduler event, each sync waived "
+                "with its budget")
+
+    def check(self, sf: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+        tm = sf.trace_map()
+        in_zone = sf.rel.startswith(ZONE_PREFIXES)
+        for call in walk_calls(sf.tree):
+            if tm.under_compile_time_eval(call):
+                continue
+            sync = _sync_name(call)
+            hit = tm.traced_region_of(call)
+            if hit is not None:
+                region, kind = hit
+                fn = dotted(call.func)
+                if sync:
+                    yield self.finding(
+                        sf, call,
+                        f"{sync} inside a {kind} body: a host transfer "
+                        "per traced step serializes the device pipeline "
+                        "— accumulate on device and sync once per event")
+                elif fn == "print":
+                    yield self.finding(
+                        sf, call,
+                        f"print() inside a {kind} body forces a host "
+                        "sync of its traced arguments — use "
+                        "jax.debug.print for trace-safe logging")
+                elif (fn in COERCIONS and len(call.args) == 1
+                      and isinstance(call.args[0], ast.Name)
+                      and call.args[0].id in tm.params_of(region)
+                      and call.args[0].id not in tm.kwonly_of(region)):
+                    yield self.finding(
+                        sf, call,
+                        f"{fn}() of traced parameter "
+                        f"'{call.args[0].id}' inside a {kind} body is a "
+                        "blocking host coercion (kwonly/static args are "
+                        "exempt — mark static operands static_argnames)")
+            elif in_zone and sync:
+                yield self.finding(
+                    sf, call,
+                    f"{sync} on a host path of the zero-sync serving "
+                    "zone: keep to the one per-event sync and waive it "
+                    "with its amortization budget")
+
+
+register_rule(HostSync())

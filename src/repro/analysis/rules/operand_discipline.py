@@ -1,0 +1,86 @@
+"""R1 operand-discipline — traced constants must ride as operands.
+
+The contract (PR 3/5): driver vectors, remap shifts, decay thresholds —
+anything a scheduler may swap between bursts — are *arguments* of the
+compiled call, never closed-in constants. A value materialized inside a
+``@jax.jit`` body or a ``lax.scan`` step gets baked into the executable:
+the next floor swap or rotation recompiles, and the trace-counting parity
+tests only guard the cases they pin. This rule flags the class:
+
+  * array constructors (``jnp.asarray``/``jnp.array``/np equivalents)
+    applied to a literal data table inside a traced region;
+  * array constructors applied to ``self.*``/``cls.*`` or to a name
+    closed over from an enclosing *function* scope — per-instance or
+    per-closure mutable state entering the trace as a constant;
+  * ``jax.random.PRNGKey`` inside a traced region — a constant key baked
+    into the executable (thread the carried key via split/fold_in).
+
+Module-level names are exempt (true constants never retrace), as is
+anything under ``jax.ensure_compile_time_eval`` (the sanctioned
+resolve-once idiom of ``plan.leaf_vectors``).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+from repro.analysis.engine import (Finding, RepoContext, Rule, SourceFile,
+                                   register_rule)
+from repro.analysis.visitors import (dotted, literal_table, root_name,
+                                     walk_calls)
+
+ARRAY_CTORS = {
+    "jnp.array", "jnp.asarray", "np.array", "np.asarray",
+    "numpy.array", "numpy.asarray", "jax.numpy.array", "jax.numpy.asarray",
+}
+
+
+class OperandDiscipline(Rule):
+    name = "operand-discipline"
+    contract = ("values a caller may vary between compiled calls must be "
+                "operands of the jit/scan, not closed-in constants")
+
+    def check(self, sf: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+        tm = sf.trace_map()
+        for call in walk_calls(sf.tree):
+            hit = tm.traced_region_of(call)
+            if hit is None or tm.under_compile_time_eval(call):
+                continue
+            region, kind = hit
+            fn = dotted(call.func)
+            if fn == "jax.random.PRNGKey":
+                yield self.finding(
+                    sf, call,
+                    f"jax.random.PRNGKey inside a {kind} body: the seed "
+                    "bakes into the executable and every step draws the "
+                    "same bits — thread the carried key (split/fold_in)")
+                continue
+            if fn not in ARRAY_CTORS or not call.args:
+                continue
+            arg = call.args[0]
+            if literal_table(arg):
+                yield self.finding(
+                    sf, call,
+                    f"literal constant table materialized inside a {kind} "
+                    "body: construct it once outside the trace and pass "
+                    "it as an operand (the retrace class behind the "
+                    "driver-vector contract)")
+                continue
+            root = root_name(arg)
+            if root in ("self", "cls"):
+                yield self.finding(
+                    sf, call,
+                    f"{fn}({root}.…) inside a {kind} body closes "
+                    "per-instance state into the trace: a later attribute "
+                    "change silently retraces (or worse, doesn't) — pass "
+                    "it as an operand")
+            elif (root is not None
+                  and root not in tm.locals_of(region)
+                  and root in tm.closure_locals(region)):
+                yield self.finding(
+                    sf, call,
+                    f"{fn}({root}) closes over an enclosing function's "
+                    f"local inside a {kind} body — closed-over host state "
+                    "bakes into the executable; pass it as an operand")
+
+
+register_rule(OperandDiscipline())

@@ -1,0 +1,107 @@
+"""R5 pytree-carry-discipline — scan-carried state classes are frozen
+registered pytrees.
+
+``WriteStats``, ``LifetimeState``, ``AddressState`` ride ``lax.scan``
+carries and jit signatures. That only stays sound if the class is (a) a
+*registered* pytree (so tracing sees leaves, not an opaque object) and
+(b) ``frozen=True`` (functional updates via ``dataclasses.replace`` —
+in-place mutation of a carried object desyncs the traced value from the
+Python object, and an unfrozen dataclass is unhashable-by-mutation in jit
+static args). Field order is the flatten order, so it is part of the
+checkpoint/carry ABI; freezing also keeps accidental field mutation from
+reordering anything at runtime.
+
+Checks:
+  * a class registered via ``jax.tree_util.register_dataclass`` /
+    ``register_pytree_node(_class)`` that is declared with
+    ``@dataclasses.dataclass`` must say ``frozen=True``;
+  * ``register_dataclass`` applied to a class that is not a dataclass in
+    the registering module is flagged (the call requires dataclass
+    semantics — stable, introspectable field order).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Tuple
+
+from repro.analysis.engine import (Finding, RepoContext, Rule, SourceFile,
+                                   register_rule)
+from repro.analysis.visitors import dotted, walk_calls
+
+DATACLASS_NAMES = {"dataclasses.dataclass", "dataclass"}
+REGISTER_CALLS = {
+    "jax.tree_util.register_dataclass", "tree_util.register_dataclass",
+    "register_dataclass", "jax.tree_util.register_pytree_node",
+    "tree_util.register_pytree_node", "register_pytree_node",
+    "jax.tree_util.register_pytree_with_keys",
+}
+REGISTER_DECORATORS = {
+    "jax.tree_util.register_pytree_node_class",
+    "tree_util.register_pytree_node_class", "register_pytree_node_class",
+    "jax.tree_util.register_pytree_with_keys_class",
+}
+
+
+def _dataclass_frozen(cls: ast.ClassDef) -> Optional[bool]:
+    """None if not a dataclass; else the frozen= flag."""
+    for dec in cls.decorator_list:
+        if dotted(dec) in DATACLASS_NAMES:
+            return False
+        if isinstance(dec, ast.Call) and dotted(dec.func) in DATACLASS_NAMES:
+            for kw in dec.keywords:
+                if (kw.arg == "frozen"
+                        and isinstance(kw.value, ast.Constant)):
+                    return bool(kw.value.value)
+            return False
+    return None
+
+
+class PytreeCarryDiscipline(Rule):
+    name = "pytree-carry-discipline"
+    contract = ("pytree-registered dataclasses (scan carries, jit "
+                "signatures) are frozen with a stable field order")
+
+    def check(self, sf: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+        classes: Dict[str, Tuple[ast.ClassDef, Optional[bool]]] = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef):
+                classes[node.name] = (node, _dataclass_frozen(node))
+        for name, (cls, frozen) in classes.items():
+            for dec in cls.decorator_list:
+                if dotted(dec) in REGISTER_DECORATORS:
+                    if frozen is False:
+                        yield self.finding(
+                            sf, cls,
+                            f"pytree class {name} is an unfrozen "
+                            "dataclass — carried state must be "
+                            "frozen=True (functional replace, stable "
+                            "field order)")
+        for call in walk_calls(sf.tree):
+            if dotted(call.func) not in REGISTER_CALLS or not call.args:
+                continue
+            target = call.args[0]
+            if not isinstance(target, ast.Name):
+                continue
+            entry = classes.get(target.id)
+            if entry is None:
+                continue  # registered for a class defined elsewhere
+            cls, frozen = entry
+            is_dc_register = (dotted(call.func) or "").endswith(
+                "register_dataclass")
+            if frozen is False:
+                yield self.finding(
+                    sf, call,
+                    f"{target.id} is registered as a pytree but declared "
+                    "@dataclass without frozen=True — scan-carried state "
+                    "must be immutable (mutation desyncs the traced "
+                    "value; field order is the carry ABI)")
+            elif frozen is None and is_dc_register:
+                yield self.finding(
+                    sf, call,
+                    f"register_dataclass({target.id}) but {target.id} is "
+                    "not declared as a dataclass here — the registry "
+                    "relies on dataclass field order for flatten "
+                    "stability")
+
+
+register_rule(PytreeCarryDiscipline())

@@ -1,0 +1,74 @@
+"""R4 registry-discipline — all writes flow through the repro.memory
+backend registry.
+
+PR 3's boundary, formerly a CI grep: nothing outside ``repro/memory`` and
+``repro/kernels`` imports the EXTENT write-path kernel internals
+(``repro.kernels.extent_write.*``, ``repro.kernels.scrub.*``) or carries
+the pre-substrate ``use_kernel=``/``interpret=`` booleans. Consumers pick
+an implementation by registry *name* (``ServeConfig.backend``,
+``--backend``) so that a new backend — or a device-model swap — lands in
+one place. The grep caught the instances it matched; this rule catches
+the class (aliased imports, new kwargs call sites, lazy imports inside
+functions) and carries waivers for the places that are genuinely *about*
+the kernels (none in src/ today).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import (Finding, RepoContext, Rule, SourceFile,
+                                   register_rule)
+from repro.analysis.visitors import dotted, walk_calls
+
+ALLOWED_PREFIXES = ("src/repro/memory/", "src/repro/kernels/")
+PRIVATE_MODULES = ("repro.kernels.extent_write", "repro.kernels.scrub")
+BANNED_KWARGS = {"use_kernel", "interpret"}
+BANNED_NAMES = {"approx_write_lanes"}
+
+
+class RegistryDiscipline(Rule):
+    name = "registry-discipline"
+    contract = ("the EXTENT write path is reached only through the "
+                "repro.memory backend registry; kernel internals stay "
+                "inside memory/ + kernels/")
+
+    def check(self, sf: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+        if sf.rel.startswith(ALLOWED_PREFIXES):
+            return
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod.startswith(PRIVATE_MODULES):
+                    yield self.finding(
+                        sf, node,
+                        f"import of write-path kernel internals "
+                        f"'{mod}' outside memory/ + kernels/ — go "
+                        "through the repro.memory backend registry "
+                        "(get_backend / WritePlan)")
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.startswith(PRIVATE_MODULES):
+                        yield self.finding(
+                            sf, node,
+                            f"import of write-path kernel internals "
+                            f"'{a.name}' outside memory/ + kernels/ — go "
+                            "through the repro.memory backend registry")
+        for call in walk_calls(sf.tree):
+            for kw in call.keywords:
+                if kw.arg in BANNED_KWARGS:
+                    yield self.finding(
+                        sf, call,
+                        f"pre-substrate '{kw.arg}=' boolean outside "
+                        "memory/ + kernels/: backend selection is a "
+                        "registry name, not a kernel flag")
+            fn = dotted(call.func) or ""
+            if fn.split(".")[-1] in BANNED_NAMES:
+                yield self.finding(
+                    sf, call,
+                    f"direct call of kernel entry '{fn}' outside "
+                    "memory/ + kernels/ — writes flow through the "
+                    "registry")
+
+
+register_rule(RegistryDiscipline())

@@ -1,0 +1,238 @@
+"""AST visitor framework shared by the repro.analysis rules.
+
+The heart is the :class:`TraceMap`: a per-module map of which function
+bodies execute *inside a JAX trace* — the regions where the repo's
+jit-operand and zero-host-sync contracts apply. Detection is repo-idiom
+aware:
+
+  * defs decorated with ``@jax.jit`` / ``@functools.partial(jax.jit, ...)``;
+  * functions/lambdas passed to ``jax.jit(...)`` by name;
+  * loop bodies handed to ``jax.lax.scan`` / ``fori_loop`` / ``while_loop``
+    / ``cond`` (the engine's ``def body`` idiom);
+  * the local call graph: a plain-name call from a traced region to a def
+    in an enclosing scope of the same module marks the callee traced too
+    (``burst -> body -> step_body`` in serve/engine.py), to a fixpoint.
+
+Everything here is stdlib-only: the linter must run in environments
+without jax installed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set, Tuple
+
+#: callables whose (first) argument is compiled — jit entry points.
+JIT_NAMES = {"jax.jit", "jit", "jax.pmap", "pmap"}
+
+#: control-flow primitives -> indices of their traced body arguments.
+LOOP_BODY_ARGS = {
+    "jax.lax.scan": (0,),
+    "lax.scan": (0,),
+    "jax.lax.fori_loop": (2,),
+    "lax.fori_loop": (2,),
+    "jax.lax.while_loop": (0, 1),
+    "lax.while_loop": (0, 1),
+    "jax.lax.cond": (1, 2),
+    "lax.cond": (1, 2),
+}
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+_SCOPE_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda, ast.Module)
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Name/Attribute chain (``jax.random.fold_in``),
+    or None for anything more dynamic."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """Leftmost identifier of an expression chain: ``self.plan.vectors``
+    -> ``self``; ``x[0].y`` -> ``x``."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def literal_table(node: ast.AST) -> bool:
+    """Is this a non-empty list/tuple of compile-time constants (a data
+    table baked into the expression)?"""
+    if not isinstance(node, (ast.List, ast.Tuple)) or not node.elts:
+        return False
+    return all(isinstance(e, ast.Constant)
+               or (isinstance(e, ast.UnaryOp)
+                   and isinstance(e.operand, ast.Constant))
+               for e in node.elts)
+
+
+class TraceMap:
+    """Traced-region map for one module (see module doc)."""
+
+    def __init__(self, tree: ast.Module):
+        self.tree = tree
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        # defs indexed by the scope (function/module) that contains them
+        self.scope_defs: Dict[ast.AST, Dict[str, ast.AST]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.scope_defs.setdefault(
+                    self.enclosing_scope(node), {})[node.name] = node
+        self.traced: Dict[ast.AST, str] = {}
+        self._mark_entry_points()
+        self._propagate_call_graph()
+        self._locals_cache: Dict[ast.AST, Set[str]] = {}
+
+    # ----------------------------------------------------------- structure
+    def enclosing_scope(self, node: ast.AST) -> ast.AST:
+        """Nearest enclosing function (or the module) *containing* node."""
+        cur = self.parents.get(node)
+        while cur is not None and not isinstance(cur, _SCOPE_NODES):
+            cur = self.parents.get(cur)
+        return cur if cur is not None else self.tree
+
+    def resolve(self, name: str, from_node: ast.AST) -> Optional[ast.AST]:
+        """Resolve a plain name to a def visible from ``from_node``'s
+        scope chain (innermost first)."""
+        scope = self.enclosing_scope(from_node)
+        while scope is not None:
+            hit = self.scope_defs.get(scope, {}).get(name)
+            if hit is not None:
+                return hit
+            if isinstance(scope, ast.Module):
+                return None
+            scope = self.enclosing_scope(scope)
+        return None
+
+    # ------------------------------------------------------ trace detection
+    def _mark(self, target: ast.AST, kind: str, origin: ast.AST) -> None:
+        if isinstance(target, ast.Lambda):
+            self.traced.setdefault(target, kind)
+        elif isinstance(target, ast.Name):
+            fn = self.resolve(target.id, origin)
+            if fn is not None:
+                self.traced.setdefault(fn, kind)
+
+    def _mark_entry_points(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    d = dotted(dec)
+                    if d in JIT_NAMES:
+                        self.traced.setdefault(node, "jit")
+                    elif isinstance(dec, ast.Call):
+                        f = dotted(dec.func)
+                        if f in JIT_NAMES:
+                            self.traced.setdefault(node, "jit")
+                        elif (f in ("functools.partial", "partial")
+                              and dec.args
+                              and dotted(dec.args[0]) in JIT_NAMES):
+                            self.traced.setdefault(node, "jit")
+            elif isinstance(node, ast.Call):
+                f = dotted(node.func)
+                if f in JIT_NAMES and node.args:
+                    self._mark(node.args[0], "jit", node)
+                elif f in LOOP_BODY_ARGS:
+                    kind = "scan" if f.endswith("scan") else "loop"
+                    for idx in LOOP_BODY_ARGS[f]:
+                        if idx < len(node.args):
+                            self._mark(node.args[idx], kind, node)
+
+    def _propagate_call_graph(self) -> None:
+        """Fixpoint: plain-name calls out of traced regions mark their
+        locally-resolvable callees traced (same kind)."""
+        changed = True
+        while changed:
+            changed = False
+            for fn, kind in list(self.traced.items()):
+                for node in ast.walk(fn):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    if not isinstance(node.func, ast.Name):
+                        continue
+                    callee = self.resolve(node.func.id, node)
+                    if callee is not None and callee not in self.traced:
+                        self.traced[callee] = kind
+                        changed = True
+
+    # ------------------------------------------------------------- queries
+    def traced_region_of(self, node: ast.AST) -> Optional[Tuple[ast.AST,
+                                                                str]]:
+        """(region function, kind) when ``node``'s nearest enclosing
+        function body executes under a trace, else None."""
+        scope = self.enclosing_scope(node)
+        if isinstance(scope, _FUNC_NODES) and scope in self.traced:
+            return scope, self.traced[scope]
+        return None
+
+    def under_compile_time_eval(self, node: ast.AST) -> bool:
+        """Is node inside a ``with jax.ensure_compile_time_eval():`` block
+        (host-side calibration is sanctioned there)?"""
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, ast.With):
+                for item in cur.items:
+                    if (isinstance(item.context_expr, ast.Call)
+                            and dotted(item.context_expr.func)
+                            == "jax.ensure_compile_time_eval"):
+                        return True
+            cur = self.parents.get(cur)
+        return False
+
+    def params_of(self, fn: ast.AST) -> Set[str]:
+        a = fn.args
+        names = [p.arg for p in a.posonlyargs + a.args]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return set(names)
+
+    def kwonly_of(self, fn: ast.AST) -> Set[str]:
+        """Keyword-only params — the repo's static-argument idiom
+        (``static_argnames`` at the jit call site), exempt from
+        traced-value checks."""
+        return {p.arg for p in fn.args.kwonlyargs}
+
+    def locals_of(self, fn: ast.AST) -> Set[str]:
+        """Names bound anywhere inside ``fn`` (params included) — an
+        over-approximation that errs toward fewer findings."""
+        cached = self._locals_cache.get(fn)
+        if cached is not None:
+            return cached
+        names = set(self.params_of(fn)) | set(self.kwonly_of(fn))
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name) and isinstance(node.ctx,
+                                                         ast.Store):
+                names.add(node.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                names.add(node.name)
+        self._locals_cache[fn] = names
+        return names
+
+    def closure_locals(self, region: ast.AST) -> Set[str]:
+        """Names bound in functions strictly *enclosing* the region — the
+        closed-over mutable-state candidates (module globals excluded)."""
+        names: Set[str] = set()
+        scope = self.enclosing_scope(region)
+        while isinstance(scope, _FUNC_NODES):
+            names |= self.locals_of(scope)
+            scope = self.enclosing_scope(scope)
+        return names
+
+
+def walk_calls(tree: ast.AST) -> Iterator[ast.Call]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node

@@ -22,6 +22,7 @@ write circuit:
 Nothing outside this package and ``repro/kernels`` touches the kernel ops
 or carries ``use_kernel``/``interpret`` booleans.
 """
+from repro.memory import rng_streams  # noqa: F401
 from repro.memory.address import AddressSpec, AddressState  # noqa: F401
 from repro.memory.backends import (  # noqa: F401
     Backend, LeafVectors, available_backends, get_backend, register_backend,

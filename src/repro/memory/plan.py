@@ -42,11 +42,8 @@ from repro.core.priority import (Priority, bitplane_priorities, bits_of,
                                  kv_cache_policy, uint_type)
 from repro.memory import address as addr_mod
 from repro.memory.backends import Backend, LeafVectors, get_backend
+from repro.memory.rng_streams import SOFT_ERROR_OFFSET as _SOFT_KEY_OFFSET
 from repro.memory.stats import WriteStats
-
-#: RNG sub-stream offset for the soft-error hook: write keys fold in the
-#: leaf index directly, the hook folds in _SOFT_KEY_OFFSET + index.
-_SOFT_KEY_OFFSET = 1_000_003
 
 
 def leaf_vectors(dtype, level, cfg: Optional[write_driver.DriverConfig] = None,

@@ -1,0 +1,102 @@
+"""RNG sub-stream registry — the single source of fold constants.
+
+Every subsystem that needs its own randomness forks a sub-stream by
+folding a constant offset into a parent key. The bit-parity contracts
+(lockstep pool==batch, retention-off identity, remap/shard invariance)
+require that schedule to be *fixed and collision-free*: two subsystems
+folding the same offset into the same parent key silently share bits, and
+a new subsystem picking an ad-hoc literal can collide with one it never
+heard of. So every offset lives here, with its parent-key **domain** —
+the lint rule ``rng-stream-hygiene`` flags magic fold literals anywhere
+else and checks this table for (domain, offset) collisions.
+
+Domains (who the parent key is):
+
+  * ``step-write-key``       — the per-step write key the burst splits
+                               (``k_write``); WritePlan folds the flat
+                               leaf index ``i`` directly (offset 0), and
+                               every shadow subsystem (soft error,
+                               retention decay, scrub) offsets far above
+                               any real leaf count;
+  * ``serve-decode-root``    — the scheduler's carried decode key
+                               (scrub passes fold off it between bursts);
+  * ``checkpoint-save-root`` — ``PRNGKey(extent_seed + step)``; save
+                               folds the leaf index directly;
+  * ``checkpoint-restore-root`` — ``PRNGKey(extent_seed)``; the restore
+                               integrity pass forks per-step then
+                               per-leaf streams off it. Offsets here may
+                               numerically equal a ``step-write-key``
+                               offset — different parent, disjoint bits.
+
+The murmur3 **counter hash** the lane kernels and the retention sampler
+share is re-exported here too: it is the substrate's RNG primitive (it
+must hash flat *logical* element/lane indices — never physical/remapped
+ones), and re-exporting it keeps ``repro.reliability`` off the kernel
+internals (``registry-discipline``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+from repro.kernels.extent_write.kernel import (  # noqa: F401
+    _K_BIT as K_BIT,
+    _K_ELEM as K_ELEM,
+    _hash_u32 as hash_u32,
+)
+
+
+class Stream(NamedTuple):
+    name: str
+    offset: int
+    domain: str
+    doc: str
+
+
+#: WritePlan folds the flat leaf index directly into the step write key.
+WRITE_LEAF_OFFSET = 0
+#: WritePlan's post-write soft-error hook (retention upsets).
+SOFT_ERROR_OFFSET = 1_000_003
+#: LifetimePlan.advance per-leaf decay sub-streams (PR 4).
+RETENTION_OFFSET = 2_000_003
+#: scrub_tree per-leaf corrective-re-write sub-streams (PR 4).
+SCRUB_OFFSET = 3_000_017
+#: ContinuousScheduler's per-pass scrub key, folded off the decode root.
+SCHEDULER_SCRUB_PASS_OFFSET = 1_000_000
+#: Checkpointer.restore per-step integrity stream (disjoint from
+#: save(step+1)'s PRNGKey(extent_seed + step) write streams).
+CHECKPOINT_RESTORE_OFFSET = 4_000_037
+#: restore-integrity scrub per-leaf stream (off the restore step key —
+#: numerically equal to SOFT_ERROR_OFFSET, different parent domain).
+RESTORE_SCRUB_OFFSET = 1_000_003
+
+STREAMS: Tuple[Stream, ...] = (
+    Stream("write-leaf", WRITE_LEAF_OFFSET, "step-write-key",
+           "WritePlan leaf writes: fold_in(k_write, i)"),
+    Stream("soft-error", SOFT_ERROR_OFFSET, "step-write-key",
+           "WritePlan post-write upset hook: fold_in(k_write, off + i)"),
+    Stream("retention-decay", RETENTION_OFFSET, "step-write-key",
+           "LifetimePlan.advance decay sampler: fold_in(k_write, off + i)"),
+    Stream("scrub-correct", SCRUB_OFFSET, "step-write-key",
+           "scrub_tree corrective re-writes: fold_in(k, off + i)"),
+    Stream("scheduler-scrub-pass", SCHEDULER_SCRUB_PASS_OFFSET,
+           "serve-decode-root",
+           "one key per scrub pass: fold_in(key, off + pass_index)"),
+    Stream("checkpoint-restore", CHECKPOINT_RESTORE_OFFSET,
+           "checkpoint-restore-root",
+           "restore integrity per step: fold_in(root, off + step)"),
+    Stream("restore-scrub", RESTORE_SCRUB_OFFSET,
+           "checkpoint-restore-step",
+           "restore scrub per leaf: fold_in(step_key, off + i)"),
+)
+
+
+def validate() -> None:
+    """Assert the registry is collision-free — (domain, offset) unique.
+    Cheap enough to call from tests; the lint rule performs the same
+    check statically."""
+    seen = {}
+    for s in STREAMS:
+        key = (s.domain, s.offset)
+        assert key not in seen, (
+            f"stream '{s.name}' collides with '{seen[key]}' on {key}")
+        seen[key] = s.name

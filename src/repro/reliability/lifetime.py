@@ -52,14 +52,19 @@ import numpy as np
 from repro.core import mtj, wer
 from repro.core.priority import (Priority, bitplane_priorities, bits_of,
                                  uint_type)
-from repro.kernels.extent_write.kernel import _hash_u32, _K_BIT, _K_ELEM
 from repro.memory import address as addr_mod
 from repro.memory.plan import WritePlan
-
-#: RNG sub-stream offsets (see module doc): retention decay and scrub keys
-#: fold these plus the flat leaf index into the step key.
-_RET_KEY_OFFSET = 2_000_003
-_SCRUB_KEY_OFFSET = 3_000_017
+# RNG sub-stream offsets and the shared murmur counter hash come from the
+# ONE registry (rng_streams — see rng-stream-hygiene): the decay sampler
+# uses the same hash as the lane kernels, re-exported through the
+# substrate so reliability code never touches kernel internals.
+from repro.memory.rng_streams import (
+    K_BIT as _K_BIT,
+    K_ELEM as _K_ELEM,
+    RETENTION_OFFSET as _RET_KEY_OFFSET,
+    SCRUB_OFFSET as _SCRUB_KEY_OFFSET,
+    hash_u32 as _hash_u32,
+)
 
 #: per-priority Delta derate: the approximation floor sets the decay clock.
 RETENTION_DERATE = {

@@ -39,9 +39,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.memory import address as addr_mod
+from repro.memory.rng_streams import SCRUB_OFFSET as _SCRUB_KEY_OFFSET
 from repro.memory.stats import WriteStats
-from repro.reliability.lifetime import (LifetimePlan, LifetimeState,
-                                        _SCRUB_KEY_OFFSET)
+from repro.reliability.lifetime import LifetimePlan, LifetimeState
 
 
 def _take_cols(leaf: jax.Array, ax: int, idx: jax.Array) -> jax.Array:

@@ -56,14 +56,16 @@ class WearPolicy:
         """A rotation just happened at ``clock``."""
         self.rotations += 1
         self.last_rotation = clock
-        self._wear_mark = np.array(row_wear, copy=True)
+        # repro: allow(no-host-sync-in-scan): host copy of an already-synced
+        self._wear_mark = np.array(row_wear, copy=True)  # wear snapshot
 
     def rebase(self, row_wear: np.ndarray) -> None:
         """Re-anchor the gain baseline WITHOUT counting a rotation — called
         when a run resumes from a persisted wear snapshot, so historical
         wear restored from the checkpoint is not mistaken for wear gained
         since the (never-happened) last rotation of this run."""
-        self._wear_mark = np.array(row_wear, copy=True)
+        # repro: allow(no-host-sync-in-scan): host copy of an already-synced
+        self._wear_mark = np.array(row_wear, copy=True)  # wear snapshot
 
     def _gained(self, row_wear: np.ndarray) -> float:
         """Hottest per-group wear GAIN since the last rotation (not the

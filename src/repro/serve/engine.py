@@ -479,14 +479,27 @@ class ServingEngine:
             if life is not None:
                 rep["lifetime_state"] = life
             return tokens, rep
+        # everything the report needs crosses the device boundary in one
+        # batched transfer — the token loop itself performed zero
+        fetch: Dict[str, Any] = {}
         if self.scfg.extent_enabled:
-            pre_host, dec_host = jax.device_get((pre_acc, acc))
+            fetch["streams"] = (pre_acc, acc)
+        if life is not None:
+            fetch["retention"] = (life.retention_flips,
+                                  life.decayed_bits())
+            if self.wear:
+                worn = self.life_plan.worn_groups(life)
+                fetch["wear"] = (life.row_wear(),
+                                 None if worn is None else worn.sum())
+        # repro: allow(no-host-sync-in-scan): THE once-per-generate sync
+        host = jax.device_get(fetch)
+        if self.scfg.extent_enabled:
+            pre_host, dec_host = host["streams"]
             self.meter.add_stream("kv_prefill", pre_host)
             self.meter.add_stream("kv_decode", dec_host)
         report = self.meter.summary()
         if life is not None:
-            flips, decayed = jax.device_get(
-                (life.retention_flips, life.decayed_bits()))
+            flips, decayed = host["retention"]
             report["retention"] = {
                 "ambient_k": self.scfg.ambient_k,
                 "dwell_s_per_step": self.scfg.retention_scale,
@@ -494,12 +507,11 @@ class ServingEngine:
                 "decayed_bits": int(decayed),
             }
         if self.wear and life is not None:
-            wear = jax.device_get(life.row_wear())
-            worn = self.life_plan.worn_groups(life)
+            wear, worn_sum = host["wear"]
             report["wear"] = {
                 "max_group_wear": int(wear.max()),
-                "worn_groups": (int(jax.device_get(worn).sum())
-                                if worn is not None else 0),
+                "worn_groups": (int(worn_sum)
+                                if worn_sum is not None else 0),
                 "endurance_budget": self.scfg.endurance_budget,
                 "group_cols": self.scfg.remap_group_cols,
             }

@@ -42,6 +42,7 @@ import numpy as np
 
 from repro import memory
 from repro.core.priority import Priority, checkpoint_policy, tag_pytree
+from repro.memory import rng_streams
 
 COMPLETE = "COMPLETE"
 _STEP_RE = re.compile(r"^step_(\d{9})$")
@@ -197,11 +198,13 @@ class Checkpointer:
                   "scrub_energy_pj": 0.0, "residual_decayed_bits": 0}
         acc = None  # device-resident scrub WriteStats; ONE sync at the end
         flips_acc = residual_acc = None
-        # restore-integrity RNG: fold the step under a disjoint offset —
-        # PRNGKey(extent_seed + step + 1) would collide with save(step+1)'s
-        # per-leaf write streams (save uses PRNGKey(extent_seed + step))
-        key = jax.random.fold_in(jax.random.PRNGKey(self.extent_seed),
-                                 4_000_037 + step)
+        # restore-integrity RNG: fold the step under a disjoint registry
+        # offset — PRNGKey(extent_seed + step + 1) would collide with
+        # save(step+1)'s per-leaf write streams (save uses
+        # PRNGKey(extent_seed + step))
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.extent_seed),
+            rng_streams.CHECKPOINT_RESTORE_OFFSET + step)
         out = []
         for i, (path, like) in enumerate(flat):
             e = by_path[path]
@@ -226,7 +229,8 @@ class Checkpointer:
                         be = memory.get_backend(self.extent_backend)
                         lv = memory.leaf_vectors(want, level)
                         leaf, residual, st = be.leaf_scrub(
-                            jax.random.fold_in(key, 1_000_003 + i),
+                            jax.random.fold_in(
+                                key, rng_streams.RESTORE_SCRUB_OFFSET + i),
                             leaf, mask, lv)
                         acc = st if acc is None else acc + st
                     res_bits = jnp.sum(jax.lax.population_count(
