@@ -25,8 +25,8 @@ from pathlib import Path
 
 from benchmarks import (endurance_sweep, fig2_switching, fig6_thermal,
                         fig12_waveform, fig13_access, fig14_energy,
-                        fig15_variation, kernel_bench, retention_sweep,
-                        serving_energy, table1)
+                        fig15_variation, kernel_bench, prefix_reuse,
+                        retention_sweep, serving_energy, table1)
 
 BENCHES = {
     "table1": lambda fast: table1.run(),
@@ -48,13 +48,14 @@ BENCHES = {
     "endurance_sweep": lambda fast: endurance_sweep.run(
         steps=64 if fast else 160,
         shape=(8, 32) if fast else (8, 64)),
+    "prefix_reuse": lambda fast: prefix_reuse.run(n=12 if fast else 16),
 }
 
 #: the --quick profile: the curated sub-minute subset the CI bench-report
 #: lane runs on EVERY push, so the BENCH_<n>.json perf trajectory actually
 #: accumulates (implies --fast; one invocation, one JSON)
 QUICK_BENCHES = ("table1", "fig6_thermal", "kernel_bench",
-                 "retention_sweep", "endurance_sweep")
+                 "retention_sweep", "endurance_sweep", "prefix_reuse")
 
 #: modules exposing ``bench_metrics(out)`` — the registration hook for the
 #: machine-readable report
@@ -63,6 +64,7 @@ _METRIC_FNS = {
     "kernel_bench": kernel_bench.bench_metrics,
     "retention_sweep": retention_sweep.bench_metrics,
     "endurance_sweep": endurance_sweep.bench_metrics,
+    "prefix_reuse": prefix_reuse.bench_metrics,
 }
 
 
@@ -99,6 +101,10 @@ def _headline(name: str, out) -> str:
     if name == "endurance_sweep":
         return (f"leveling_gain={out['wear_leveling_gain']:.1f}x "
                 f"remap_overhead={out['remap_overhead_frac']:.2f}")
+    if name == "prefix_reuse":
+        return (f"admission_energy_reduction="
+                f"{out['admission_energy_reduction']:.3f} "
+                f"hit_rate={out['prefix']['hit_rate']:.2f}")
     return ""
 
 

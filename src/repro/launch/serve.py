@@ -8,7 +8,9 @@ Continuous batching over an arrival stream (the default):
       [--backend oracle|lanes_ref|pallas|exact] [--soft-error-ber 1e-6] \
       [--ambient-k 350 --retention-scale 1000 --scrub-policy periodic \
        --scrub-interval 8 --scrub-cols 0] \
-      [--wear-policy rotate --endurance-budget 100 --remap-group-cols 8]
+      [--wear-policy rotate --endurance-budget 100 --remap-group-cols 8] \
+      [--prefix-cache --prefix-chunk 8 --prefix-table-size 256 \
+       --shared-prefix 8]
 
 Monolithic one-batch mode (the pre-slot-pool engine path):
 
@@ -32,7 +34,12 @@ tracked per physical row group and the logical→physical column remap
 rotates when it concentrates, with the migration energy booked as the
 ledger's remap component; ``--endurance-budget`` adds the stuck-at
 failure model (worn row groups stop accepting writes — lost bits land in
-the error counters and the wear report).
+the error counters and the wear report). ``--prefix-cache`` enables the
+content-addressable prefix cache (``repro.serve.prefix``): admission
+matches each request's leading prompt chunks against a CAM-style table
+and links hits to already-resident KV columns instead of re-writing them;
+``--shared-prefix N`` makes the synthetic arrival stream share its first
+N prompt tokens so the cache has something to hit.
 """
 from __future__ import annotations
 
@@ -103,6 +110,20 @@ def main():
     ap.add_argument("--hot-row-wear", type=int, default=16,
                     help="max-group wear since the last rotation that "
                          "arms the next one")
+    # content-addressable prefix cache: cross-request KV write reuse
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="link matched prompt prefixes to resident KV "
+                         "columns at admission instead of re-writing "
+                         "them (continuous mode)")
+    ap.add_argument("--prefix-chunk", type=int, default=8,
+                    help="prompt tokens per CAM digest chunk (the match "
+                         "granularity)")
+    ap.add_argument("--prefix-table-size", type=int, default=256,
+                    help="CAM match-table entries (LRU under pressure)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="leading prompt tokens shared across the "
+                         "synthetic arrival stream (0 = fully unique "
+                         "prompts, nothing for the prefix cache to hit)")
     ap.add_argument("--monolithic", action="store_true",
                     help="single fixed batch, no arrival stream")
     # arrival-stream simulation
@@ -137,7 +158,10 @@ def main():
             ambient_k=args.ambient_k, retention_scale=retention_scale,
             wear_policy=args.wear_policy,
             endurance_budget=args.endurance_budget,
-            remap_group_cols=args.remap_group_cols)
+            remap_group_cols=args.remap_group_cols,
+            prefix_cache=args.prefix_cache,
+            prefix_chunk=args.prefix_chunk,
+            prefix_table_size=args.prefix_table_size)
 
     if args.monolithic:
         prompt = {"tokens": jax.random.randint(
@@ -182,6 +206,16 @@ def main():
         cfg, args.requests, prompt_len=args.prompt_len,
         new_tokens=args.new_tokens, arrival_every=args.arrival_every,
         app_ids=apps)
+    if args.shared_prefix > 0:
+        # overwrite each prompt's head with one common system prefix —
+        # the cross-request overlap the prefix cache exists to exploit
+        shared = jax.random.randint(
+            jax.random.PRNGKey(1234), (1, args.shared_prefix), 0,
+            cfg.vocab_size)
+        for r in reqs:
+            r.prompt["tokens"] = jnp.concatenate(
+                [shared, r.prompt["tokens"][:, args.shared_prefix:]],
+                axis=1)
     scrub_policy = None
     if args.scrub_policy != "none":
         from repro.reliability import make_scrub_policy
@@ -241,6 +275,19 @@ def main():
             if scope != "serve":
                 print(f"  [{scope}] {c['hits']} hits / "
                       f"{c['misses']} misses")
+    if "prefix" in report:
+        p = report["prefix"]
+        print(f"prefix cache (chunk {p['chunk']}, table "
+              f"{p['table_size']}): hits={p['hits']} "
+              f"misses={p['misses']} (hit rate {p['hit_rate']:.2f}), "
+              f"{p['linked_admissions']} linked admissions "
+              f"({p['linked_cols']} cols), {p['stale_drops']} stale "
+              f"drops, {p['evictions']} evictions")
+        print(f"  write energy saved {p['write_energy_saved_pj']/1e3:.1f}"
+              f" nJ - cow {p['cow_energy_pj']/1e3:.1f} nJ "
+              f"({p['cow_events']} events) - cam search "
+              f"{p['cam_energy_pj']/1e3:.3f} nJ = net "
+              f"{p['net_energy_saved_pj']/1e3:.1f} nJ")
     if "lifetime" in report:
         lt = report["lifetime"]
         print(f"lifetime ledger @ {lt['ambient_k']:.0f} K "

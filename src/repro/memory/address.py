@@ -114,6 +114,26 @@ def worn_element_mask(worn_row: jax.Array, shift: jax.Array,
     return worn_row[g]
 
 
+def slot_window_group_counts(idx: jax.Array, start: jax.Array,
+                             end: jax.Array, shift: jax.Array, n_cols: int,
+                             n_groups: int, spec: AddressSpec) -> jax.Array:
+    """Admission-wear booking for per-slot *logical* column windows: slot
+    ``idx[b]`` re-drove the ring columns ``[start[b], end[b])`` of one
+    leaf (an admission prefill; with a prefix link, ``start`` excludes the
+    linked columns so shared prefix columns wear ONCE, at their owner's
+    admission). Returns (n_groups,) i32 of row re-writes per physical
+    group, each window mapped through the rotation like every other wear
+    booking. All operands traced — jit-safe."""
+    gc = spec.col_groups(n_cols)
+    col = jnp.arange(n_cols, dtype=jnp.int32)
+    wrote = ((col[None, :] >= start[:, None])
+             & (col[None, :] < end[:, None]))
+    g = (idx[:, None] * gc
+         + phys_col(col, shift, n_cols)[None, :] // spec.group_cols)
+    return jnp.zeros((n_groups,), jnp.int32).at[g.ravel()].add(
+        wrote.astype(jnp.int32).ravel())
+
+
 def window_group_counts(cursor: jax.Array, cols: int, n_cols: int,
                         n_slots: int, n_groups: int,
                         spec: AddressSpec) -> jax.Array:

@@ -231,6 +231,33 @@ class WritePlan:
             bits += elems * bits_of(leaf.dtype)
         return pj, bits
 
+    def alias_saving(self, tree: Any, cols: int) -> Tuple[float, int]:
+        """Host constants (energy_pj, bits) of driving ``cols`` leading
+        ring columns of ONE slot across the sequence-axis leaves, every
+        bit priced at the mean of the plan's static 0→1/1→0 per-plane
+        write prices — the modeled full-drive cost of the columns a
+        prefix link skips. The ONE source of the prefix-cache pricing:
+        the serving scheduler books both its *saved-write* estimate and
+        its *copy-on-write* materialization charge through this (the same
+        columns, the same price — a CoW pays back exactly what the link
+        was credited)."""
+        import numpy as np
+        vectors = self.vectors_for(Priority.LOW)
+        pj, bits = 0.0, 0
+        flat = jax.tree.leaves(tree)
+        for i, (leaf, lvl, ax) in enumerate(zip(flat, self.leaf_levels,
+                                                self.leaf_seq_axis)):
+            if lvl is None or ax is None:
+                continue
+            C = leaf.shape[ax]
+            B = leaf.shape[self.batch_axis]
+            elems = leaf.size // (C * B) * min(int(cols), C)
+            eb = (np.asarray(vectors[i].eb01)
+                  + np.asarray(vectors[i].eb10)) / 2.0
+            pj += float(elems) * float(eb.sum())
+            bits += elems * bits_of(leaf.dtype)
+        return pj, bits
+
     # -------------------------------------------------------------- operands
     def vectors_for(self, floor: Priority = Priority.LOW
                     ) -> Tuple[Optional[LeafVectors], ...]:
@@ -257,9 +284,26 @@ class WritePlan:
                                      soft_strikes=st.soft_strikes + strikes)
         return stored, st
 
+    def _alias_keep(self, i: int, leaf, alias_cols) -> Optional[jax.Array]:
+        """Column-alias mask for leaf ``i``: True on the leading
+        ``alias_cols[slot]`` ring columns (broadcastable to the leaf).
+        Aliased columns are *linked* to columns already resident elsewhere
+        in the array (serve/prefix.py): the write carries the stored value
+        through unchanged, so CMP charges zero energy/flips/WER there —
+        the skipped write never happens. None when aliasing is off or the
+        leaf has no ring axis (nothing to link column-wise)."""
+        ax = self.leaf_seq_axis[i]
+        if alias_cols is None or ax is None:
+            return None
+        ishape = [1] * leaf.ndim
+        ishape[self.batch_axis] = alias_cols.shape[0]
+        return (jax.lax.broadcasted_iota(jnp.int32, leaf.shape, ax)
+                < alias_cols.reshape(ishape))
+
     def write(self, key, old_tree: Any, new_tree: Any,
               vectors: Optional[Sequence] = None,
-              addr: Optional[Tuple[jax.Array, Optional[jax.Array]]] = None
+              addr: Optional[Tuple[jax.Array, Optional[jax.Array]]] = None,
+              alias_cols: Optional[jax.Array] = None
               ) -> Tuple[Any, WriteStats]:
         """Jit-resident diff-write of a full tree (or a row subset with the
         same structure); returns (stored_tree, WriteStats). ``vectors`` is
@@ -268,7 +312,17 @@ class WritePlan:
         ``(shifts (L,) i32, worn (L, G) bool-or-None)``: elements backed by
         worn physical row groups are stuck-at (kept old, lost flips booked
         to ``errors``). With identity shifts and no worn rows the stored
-        bits and stats are bit-identical to ``addr=None``."""
+        bits and stats are bit-identical to ``addr=None``.
+
+        ``alias_cols`` is the optional (B,) i32 column-alias OPERAND of the
+        prefix cache: per slot, the leading ``alias_cols[b]`` ring columns
+        of every sequence-axis leaf are column-*linked* — the stored (old)
+        value is kept bit-for-bit and the write is skipped, so those
+        columns cost exactly zero energy/flips/WER under CMP. The RNG
+        streams hash flat logical element indices and every per-element
+        decision is element-local, so all NON-aliased elements store bits
+        identical to the unaliased call; an all-zero ``alias_cols`` is a
+        bit-exact identity with ``alias_cols=None``."""
         if vectors is None:
             vectors = self.vectors_for(Priority.LOW)
         shifts, worn = addr if addr is not None else (None, None)
@@ -281,6 +335,11 @@ class WritePlan:
             if lvl is None:
                 stored.append(n)  # EXACT fast path (recurrent states, ints)
                 continue
+            keep = self._alias_keep(i, o, alias_cols)
+            if keep is not None:
+                # linked columns re-store the resident bits: identical
+                # old/new means the CMP diff write skips them entirely
+                n = jnp.where(keep, o, n)
             wm = self._worn_elem(i, o, shifts, worn)
             lost = None
             if wm is not None:
@@ -296,7 +355,8 @@ class WritePlan:
                       pos: jax.Array,
                       vectors: Optional[Sequence] = None,
                       addr: Optional[Tuple[jax.Array,
-                                           Optional[jax.Array]]] = None
+                                           Optional[jax.Array]]] = None,
+                      alias_cols: Optional[jax.Array] = None
                       ) -> Tuple[Any, WriteStats]:
         """Column-scoped decode diff-write: leaves with a sequence axis
         write only the ring column at ``pos % C`` (per slot along
@@ -312,7 +372,13 @@ class WritePlan:
         is worn has its column write inhibited (stuck-at, lost flips in
         ``errors``). The RNG stream is untouched — it hashes the gathered
         column tensor's flat indices, which do not depend on the address —
-        so identity shifts reproduce ``addr=None`` bit-for-bit."""
+        so identity shifts reproduce ``addr=None`` bit-for-bit.
+
+        ``alias_cols``: optional (B,) i32 column-alias operand (see
+        ``write``) — a slot whose target column lies inside its linked
+        prefix (``pos[b] < alias_cols[b]``) keeps the resident bits and
+        skips the write at zero cost. All-zero alias is a bit-exact
+        identity with ``alias_cols=None``."""
         if vectors is None:
             vectors = self.vectors_for(Priority.LOW)
         shifts, worn = addr if addr is not None else (None, None)
@@ -346,6 +412,9 @@ class WritePlan:
             idx_g = jnp.broadcast_to(idx, gshape)
             o_col = jnp.take_along_axis(o, idx_g, axis=ax)
             n_col = jnp.take_along_axis(n, idx_g, axis=ax)
+            if alias_cols is not None:
+                keep = (pos < alias_cols).reshape(ishape)
+                n_col = jnp.where(keep, o_col, n_col)
             if gate:
                 wm = addr_mod.worn_slot_mask(
                     worn[i], pos, shifts[i], C,

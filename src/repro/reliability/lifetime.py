@@ -326,6 +326,44 @@ class LifetimePlan:
             rw = rw.at[i].set(rw[i].at[g].add(act))
         return dataclasses.replace(state, row_write_count=rw)
 
+    def record_admission_write(self, state: LifetimeState, tree: Any,
+                               idx: jax.Array, start: jax.Array,
+                               end: jax.Array, shifts: jax.Array
+                               ) -> LifetimeState:
+        """Book one admission prefill's column drives into the per-
+        physical-row-group wear counters: admitted slot ``idx[b]`` re-
+        drove the logical ring columns ``[start[b], end[b])`` of every
+        ring leaf. With a prefix link, ``start`` is the linked depth — the
+        shared columns below it are NOT re-driven, so their wear is
+        accounted exactly once, at the owning admission (the wear-once
+        contract of serve/prefix.py; shared prefix rows still become the
+        pool's hottest rows through their owner's counters, which is the
+        adversarial workload the rotate policy levels). Non-ring
+        approximate leaves book one whole-row drive per admitted slot.
+
+        Only the prefix-cache serving path calls this: prefix-off runs
+        keep the decode-only booking the wear PR shipped with, preserving
+        bit-parity with its wear trajectories."""
+        spec = self.plan.address_spec
+        if spec is None:
+            return state
+        flat = jax.tree.leaves(tree)
+        rw = state.row_write_count
+        ones = jnp.ones(idx.shape, jnp.int32)
+        for i, (leaf, lvl, ax) in enumerate(zip(flat,
+                                                self.plan.leaf_levels,
+                                                self.plan.leaf_seq_axis)):
+            if lvl is None:
+                continue
+            if ax is None:
+                rw = rw.at[i].set(rw[i].at[idx].add(ones))
+            else:
+                inc = addr_mod.slot_window_group_counts(
+                    idx, start, end, shifts[i], leaf.shape[ax],
+                    rw.shape[1], spec)
+                rw = rw.at[i].add(inc)
+        return dataclasses.replace(state, row_write_count=rw)
+
     def record_migration(self, state: LifetimeState, tree: Any,
                          gap_start: int, cols: int) -> LifetimeState:
         """Book one start-gap migration's row re-writes: the ``cols``-wide
@@ -473,6 +511,39 @@ class LifetimePlan:
                 jnp.moveaxis(m, ax, 0).at[idx].set(0), 0, ax)
             for m in state.masks)
         return dataclasses.replace(state, masks=masks)
+
+    def reset_rows_linked(self, state: LifetimeState, idx: jax.Array,
+                          src: jax.Array, cols: jax.Array
+                          ) -> LifetimeState:
+        """Admission decay-mask install for prefix-linked slots: the
+        freshly prefill-written rows ``idx`` restart from zero like
+        ``reset_rows``, EXCEPT each slot's leading ``cols[b]`` ring
+        columns — those were *linked*, carrying slot ``src[b]``'s current
+        stored bits, so they inherit its decay record for the same
+        columns. Bits and masks stay consistent: a later scrub pass
+        corrects the linked copy toward the owner's originally-written
+        value, exactly as it corrects the owner. All-zero ``cols``
+        reproduces ``reset_rows(state, idx)`` bit-for-bit."""
+        bx = self.plan.batch_axis
+        masks = list(state.masks)
+        for i, m in enumerate(masks):
+            if m is None:
+                continue
+            m0 = jnp.moveaxis(m, bx, 0)
+            sel = m0[src]
+            ax = self.plan.leaf_seq_axis[i]
+            if ax is None:
+                new = jnp.zeros_like(sel)
+            else:
+                ax_m = 1 + (ax if ax < bx else ax - 1)
+                rshape = [1] * sel.ndim
+                rshape[0] = cols.shape[0]
+                keep = (jax.lax.broadcasted_iota(jnp.int32, sel.shape,
+                                                 ax_m)
+                        < cols.reshape(rshape))
+                new = jnp.where(keep, sel, jnp.zeros_like(sel))
+            masks[i] = jnp.moveaxis(m0.at[idx].set(new), 0, bx)
+        return dataclasses.replace(state, masks=tuple(masks))
 
 
 @dataclasses.dataclass(frozen=True)

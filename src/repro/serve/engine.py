@@ -109,6 +109,16 @@ class ServeConfig:
     wear_policy: str = "none"
     endurance_budget: int = 0
     remap_group_cols: int = 8
+    # content-addressable prefix cache (repro.serve.prefix): admission
+    # resolves the request's leading prompt chunks against a CAM-style
+    # match table and, on a hit, LINKS the leading KV columns to already-
+    # resident physical columns instead of re-writing them (zero energy,
+    # zero WER exposure for the skipped columns; refcounted ownership +
+    # copy-on-write in the slot pool). Off by default — prefix-off runs
+    # are bit-identical to an engine without the subsystem.
+    prefix_cache: bool = False
+    prefix_chunk: int = 8
+    prefix_table_size: int = 256
 
 
 def _tag_cache(cache: Any) -> Any:
@@ -235,6 +245,17 @@ class ServingEngine:
         self._admit_fused = jax.jit(self._make_fused_prefill(
             diff_old_rows=True))
         self._burst = jax.jit(self._make_burst(), static_argnames=("n",))
+        # prefix-cache admission path (serve/prefix.py). Registered
+        # unconditionally — jit compiles lazily, so prefix-off runs never
+        # trace these and stay bit-identical to the pre-prefix engine.
+        self._admit_linked_fused = jax.jit(self._make_linked_prefill())
+        self._splice_rows = jax.jit(self._make_splice())
+        if self.life_plan is not None:
+            self._life_reset_linked = jax.jit(
+                self.life_plan.reset_rows_linked)
+            if self.wear:
+                self._life_admit = jax.jit(
+                    self.life_plan.record_admission_write)
 
     # ------------------------------------------------------------ write plan
     def vectors_for_floor(self, floor: Priority = Priority.LOW) -> Tuple:
@@ -283,6 +304,52 @@ class ServingEngine:
             return prefill
         return lambda params, batch, key, vectors: prefill(
             params, batch, None, key, vectors)
+
+    def _make_linked_prefill(self):
+        """Admission prefill with prefix-linked leading columns.
+
+        Identical to the ``diff_old_rows=True`` fused prefill — same RNG
+        split schedule, same model prefill, same sampler — except the
+        extent write takes ``alias_cols`` ((B,) i32): for slot lane b the
+        first ``alias_cols[b]`` ring columns keep their OLD bits (which
+        the caller pre-spliced to the link owner's resident columns via
+        ``_splice_rows``), so CMP sees zero changed bits there — zero
+        write energy, zero WER exposure, exactly the paper's
+        redundant-write elimination applied across requests. With
+        ``alias_cols == 0`` everywhere the where-mask is empty and the
+        computation is bit-identical to ``_admit_fused``.
+        """
+        def prefill(params, batch, old_rows, key, vectors, alias_cols):
+            key, k_write, k_sample = jax.random.split(key, 3)
+            logits, cache = self.api.prefill(params, batch,
+                                             self.scfg.max_seq)
+            acc = WriteStats.zero()
+            if self.scfg.extent_enabled:
+                cache, acc = self.plan.write(k_write, old_rows, cache,
+                                             vectors, alias_cols=alias_cols)
+            tok = self._sample(k_sample, logits)
+            return tok, cache, key, acc
+
+        return prefill
+
+    def _make_splice(self):
+        """Graft the link owners' resident prefix columns into extracted
+        admission rows: per approximate ring leaf, lane b's columns
+        ``[0, alias_cols[b])`` take ``owner_rows``'s bits, the rest keep
+        ``old_rows``'s. The spliced tree is the linked prefill's ``old`` —
+        its aliased columns are *stored as-is* (the owner's exact current
+        bits, realized write errors and decay included) and diff as
+        identical under CMP."""
+        def splice(old_rows, owner_rows, alias_cols):
+            flat_old, treedef = jax.tree.flatten(old_rows)
+            flat_own = treedef.flatten_up_to(owner_rows)
+            out = []
+            for i, (o, w) in enumerate(zip(flat_old, flat_own)):
+                keep = self.plan._alias_keep(i, o, alias_cols)
+                out.append(o if keep is None else jnp.where(keep, w, o))
+            return treedef.unflatten(out)
+
+        return splice
 
     def _make_burst(self):
         """A decode burst: ``n`` fused steps as ONE ``lax.scan`` call.

@@ -40,6 +40,7 @@ from repro.core.energy_model import StepEnergyMeter
 from repro.core.priority import Priority
 from repro.memory import WriteStats, rng_streams
 from repro.serve.engine import ServingEngine
+from repro.serve.prefix import PrefixCache, PrefixConfig, PrefixMatch
 from repro.serve.slots import SlotPool
 
 
@@ -131,6 +132,15 @@ class ContinuousScheduler:
                                  if ambient_schedule else None)
         self.life = None  # LifetimeState, owned per run()
         self.addr = None  # AddressState (remap shifts), owned per run()
+        # content-addressable prefix cache (serve/prefix.py): admission
+        # resolves prompt-prefix digests against resident slot columns and
+        # links matches instead of re-writing them. None = prefix off —
+        # every admission takes the pre-prefix code path untouched.
+        self.prefix: Optional[PrefixCache] = None
+        if engine.scfg.prefix_cache:
+            self.prefix = PrefixCache(PrefixConfig(
+                chunk=engine.scfg.prefix_chunk,
+                table_size=engine.scfg.prefix_table_size))
         self.meter = StepEnergyMeter()
         # per-rid runtime state. Token fragments are kept as LAZY device
         # array references ((array, column, take) tuples) and materialized
@@ -274,6 +284,90 @@ class ContinuousScheduler:
                 "row_write_count": self.life.row_write_count,
                 "row_scrub_count": self.life.row_scrub_count}
 
+    # ---------------------------------------------------------- prefix cache
+    def _resolve_prefix(self, group: Sequence[Request]
+                        ) -> Tuple[List[Optional[PrefixMatch]], List[Any]]:
+        """Match every group member's prompt prefix against the CAM.
+
+        Returns (matches, signature chains), both aligned with ``group``.
+        A match names a slot whose resident leading columns are
+        bit-identical to what this request's prefill would store there
+        (same prefix inputs + causal attention ⇒ identical prefix KV), so
+        admission may link instead of write."""
+        matches: List[Optional[PrefixMatch]] = []
+        sigs: List[Any] = []
+        for r in group:
+            # ONE admission-time prompt read per request — a
+            # host-predictable scheduler event whose cost amortizes over
+            # the request's whole decode; the digests feed every prefix
+            # decision for this request.
+            # repro: allow(no-host-sync-in-scan): once-per-admission read
+            host_prompt = jax.device_get(r.prompt)
+            s = self.prefix.signatures(host_prompt)
+            sigs.append(s)
+            matches.append(self.prefix.lookup(
+                s, valid=lambda slot, gen:
+                    self.pool.generation[slot] == gen,
+                max_cols=self.eng.prompt_len(r.prompt)))
+        return matches, sigs
+
+    def _alias_price(self, cols: int) -> Tuple[float, int]:
+        """Memoized (energy_pj, bits) of ``cols`` linked columns — the ONE
+        pricing source (WritePlan.alias_saving) for both the link credit
+        and the copy-on-write charge, so they cancel exactly."""
+        p = self._alias_cost_cache.get(cols)
+        if p is None:
+            p = self._alias_cost_cache[cols] = self.eng.plan.alias_saving(
+                self.pool.cache, cols)
+        return p
+
+    def _cow_owner(self, owner: int) -> None:
+        """Copy-on-write detach of every linker of ``owner``: the moment
+        the linkers' own rows are actually driven. Books one full column
+        write per detached linker — energy via the same pricing the link
+        was credited at (net zero for the detached share) plus the
+        admission endurance wear of the now-owned columns."""
+        for linker, cols in self.pool.cow_detach(owner):
+            pj, bits = self._alias_price(cols)
+            self._acc_cow = self._acc_cow + WriteStats.for_bits(
+                bits, energy_pj=jnp.asarray(pj, jnp.float32))
+            self._cow_events += 1
+            if self.eng.wear and self.life is not None:
+                self.life = self.eng._life_admit(
+                    self.life, self.pool.cache,
+                    jnp.asarray([linker], jnp.int32),
+                    jnp.asarray([0], jnp.int32),
+                    jnp.asarray([cols], jnp.int32), self.addr.shifts)
+
+    def _make_room(self, n: int, matches: List[Optional[PrefixMatch]],
+                   exclude: set) -> None:
+        """Guarantee ``n`` allocatable slots before ``alloc``: first CoW
+        link-blocked free slots (cheapest first = lowest id), then drop
+        matches whose owner exclusion is starving capacity. Terminates:
+        after every blocked slot is detached and every match dropped,
+        allocatable == free_slots ≥ n (the admission bound)."""
+        while self.pool.allocatable(exclude) < n:
+            blocked = [i for i in self.pool.blocked_free()
+                       if i not in exclude]
+            if blocked:
+                self._cow_owner(blocked[0])
+                continue
+            dropped = False
+            for j, m in enumerate(matches):
+                if m is None:
+                    continue
+                matches[j] = None
+                if (m.slot in exclude and not any(
+                        mm is not None and mm.slot == m.slot
+                        for mm in matches)):
+                    exclude.discard(m.slot)
+                    if (self.pool.col_refs[m.slot] > 0
+                            and self.pool.slot_req[m.slot] is None):
+                        self._cow_owner(m.slot)  # free but still blocked
+                dropped = True
+                break
+            assert dropped, (n, sorted(exclude))
+
     # --------------------------------------------------------- event phases
     def _admit(self, pending, clock: int, key) -> Tuple[Any, int]:
         """Admit every arrived request that fits, grouped by prompt shape
@@ -292,6 +386,17 @@ class ContinuousScheduler:
         for group in groups.values():
             for r in group:
                 self._level[r.rid] = self._resolve_quality(r)
+            # prefix resolution: match each member's prompt chain against
+            # the CAM, exclude match owners from allocation (linking to a
+            # slot about to be overwritten would be self-defeating), and
+            # CoW/drop until the group fits the allocatable slots.
+            matches: List[Optional[PrefixMatch]] = [None] * len(group)
+            sigs: List[Any] = []
+            exclude: set = set()
+            if self.prefix is not None:
+                matches, sigs = self._resolve_prefix(group)
+                exclude = {m.slot for m in matches if m is not None}
+                self._make_room(len(group), matches, exclude)
             # wear-aware admission: HIGH-quality requests steer away from
             # slots backed by high-wear / high-residual-decay rows (scores
             # from the last wear checkpoint — no extra sync here). LOW/MID
@@ -302,23 +407,72 @@ class ContinuousScheduler:
                     and max(self._level[r.rid] for r in group)
                     >= Priority.HIGH):
                 scores = self._slot_scores_host
-            ids = self.pool.alloc(len(group), scores=scores)
+            ids = self.pool.alloc(len(group), scores=scores,
+                                  exclude=sorted(exclude))
             vectors = self.eng.vectors_for_floor(
                 max(self._floor(),
                     max(self._level[r.rid] for r in group)))
             batch = _stack_prompts(group)
             old_rows = self.pool.extract_rows(ids)
-            tok, rows, key, acc = self.eng._admit_fused(
-                self.eng.params, batch, old_rows, key, vectors)
+            pos0 = [self.eng.prompt_len(r.prompt) for r in group]
+            any_link = any(m is not None for m in matches)
+            if any_link:
+                # linked admission: splice the owners' resident prefix
+                # columns into the evicted rows, then write with those
+                # columns aliased — CMP sees zero changed bits there, so
+                # the linked prefix costs zero energy and zero WER
+                # exposure. RNG split schedule identical to _admit_fused.
+                owner_ids = [m.slot if m is not None else ids[j]
+                             for j, m in enumerate(matches)]
+                alias_list = [m.cols if m is not None else 0
+                              for m in matches]
+                alias = jnp.asarray(alias_list, jnp.int32)
+                owner_rows = self.pool.extract_rows(owner_ids)
+                old_rows = self.eng._splice_rows(old_rows, owner_rows,
+                                                 alias)
+                tok, rows, key, acc = self.eng._admit_linked_fused(
+                    self.eng.params, batch, old_rows, key, vectors, alias)
+            else:
+                alias_list = [0] * len(group)
+                tok, rows, key, acc = self.eng._admit_fused(
+                    self.eng.params, batch, old_rows, key, vectors)
             self._acc_prefill = self.pool.admit(
-                ids, group, rows, tok,
-                [self.eng.prompt_len(r.prompt) for r in group],
-                acc, self._acc_prefill)
+                ids, group, rows, tok, pos0, acc, self._acc_prefill)
             if self.life is not None:
                 # the admitted rows were just prefill-written: their decay
-                # record restarts from zero (jitted, stays on device)
-                self.life = self.eng._life_reset(
-                    self.life, jnp.asarray(ids, jnp.int32))
+                # record restarts from zero (jitted, stays on device) —
+                # linked columns instead inherit the owner's decay record
+                # (their bits ARE the owner's stored bits, decay included)
+                idx = jnp.asarray(ids, jnp.int32)
+                if any_link:
+                    self.life = self.eng._life_reset_linked(
+                        self.life, idx,
+                        jnp.asarray(owner_ids, jnp.int32),
+                        jnp.asarray(alias_list, jnp.int32))
+                else:
+                    self.life = self.eng._life_reset(self.life, idx)
+                if self.prefix is not None and self.eng.wear:
+                    # endurance booking of the prompt-window row drives,
+                    # minus the linked columns — shared physical columns
+                    # wear ONCE, at their owner's admission
+                    self.life = self.eng._life_admit(
+                        self.life, self.pool.cache, idx,
+                        jnp.asarray(alias_list, jnp.int32),
+                        jnp.asarray(pos0, jnp.int32), self.addr.shifts)
+            if self.prefix is not None:
+                for j, r in enumerate(group):
+                    m = matches[j]
+                    if m is not None:
+                        self.pool.link(ids[j], m.slot, m.cols)
+                        pj, bits = self._alias_price(m.cols)
+                        self._saved_pj += pj
+                        self._saved_bits += bits
+                        self._linked_admissions += 1
+                        self._linked_cols += m.cols
+                    self.prefix.insert(
+                        sigs[j], ids[j], self.pool.generation[ids[j]],
+                        col_offset=pos0[j]
+                        - r.prompt["tokens"].shape[1])
             for j, r in enumerate(group):
                 self._tokens[r.rid] = [(tok, j, 1)]
                 self._remaining[r.rid] = r.new_tokens - 1
@@ -403,6 +557,15 @@ class ContinuousScheduler:
         self._acc_decode = WriteStats.zero()
         self._acc_scrub = WriteStats.zero()
         self._acc_remap = WriteStats.zero()
+        self._acc_cow = WriteStats.zero()
+        self._saved_pj = 0.0
+        self._saved_bits = 0
+        self._linked_admissions = 0
+        self._linked_cols = 0
+        self._cow_events = 0
+        self._alias_cost_cache: Dict[int, Tuple[float, int]] = {}
+        if self.prefix is not None:
+            self.prefix.reset_stats()  # same contract as the extent table
         self._scrub_passes = 0
         self._scrub_cursor = 0
         self._last_wear_check = 0
@@ -518,6 +681,8 @@ class ContinuousScheduler:
         fetch: Dict[str, Any] = {
             "streams": (self._acc_prefill, self._acc_decode,
                         self._acc_scrub, self._acc_remap)}
+        if self.prefix is not None:
+            fetch["cow"] = self._acc_cow
         if self.life is not None:
             fetch["retention"] = (self.life.retention_flips,
                                   self.life.decayed_bits())
@@ -534,6 +699,8 @@ class ContinuousScheduler:
             self.meter.add_stream("kv_scrub", scrub_host)
         if eng.wear:
             self.meter.add_stream("kv_remap", remap_host)
+        if self.prefix is not None:
+            self.meter.add_stream("kv_prefix_cow", host["cow"])
         summary = self.meter.summary()
         summary.update({
             "requests": self._reports,
@@ -543,6 +710,26 @@ class ContinuousScheduler:
             "pool": pool.stats(),
             "extent_table": eng.controller.table.stats(),
         })
+        if self.prefix is not None:
+            # the PREFIX ledger: what cross-request linking earned, net of
+            # what the mechanism itself cost — CAM search energy plus the
+            # copy-on-write writes that paid back detached links
+            pstats = self.prefix.stats()
+            cow_pj = float(host["cow"].energy_pj)
+            summary["prefix"] = {
+                "enabled": True,
+                "chunk": eng.scfg.prefix_chunk,
+                "table_size": eng.scfg.prefix_table_size,
+                **pstats,
+                "linked_admissions": self._linked_admissions,
+                "linked_cols": self._linked_cols,
+                "write_energy_saved_pj": self._saved_pj,
+                "saved_bits": self._saved_bits,
+                "cow_events": self._cow_events,
+                "cow_energy_pj": cow_pj,
+                "net_energy_saved_pj": (self._saved_pj - cow_pj
+                                        - pstats["cam_energy_pj"]),
+            }
         if self.life is not None:
             # the LIFETIME ledger: what this stream cost over its whole
             # life — write energy plus the scrub energy spent defending it

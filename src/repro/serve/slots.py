@@ -81,6 +81,17 @@ class SlotPool:
         self.slot_req: List[Optional[Any]] = [None] * capacity
         self._free: List[int] = list(range(capacity))
         heapq.heapify(self._free)
+        # refcounted column ownership (serve/prefix.py): ``col_refs[s]``
+        # counts the slots currently *linking* their leading KV columns to
+        # slot s's resident columns; a free slot with inbound links is
+        # BLOCKED from allocation (overwriting it would corrupt every
+        # linker) until its links drop or are copy-on-write detached.
+        # ``links[linker] = (owner, cols)`` records the outbound link;
+        # ``generation[s]`` bumps per admission so stale prefix-cache
+        # entries naming an overwritten slot are droppable by comparison.
+        self.col_refs: List[int] = [0] * capacity
+        self.links: Dict[int, tuple] = {}
+        self.generation: List[int] = [0] * capacity
         # occupancy telemetry for the serve report
         self.admissions = 0
         self.completions = 0
@@ -96,8 +107,22 @@ class SlotPool:
     def busy(self) -> bool:
         return len(self._free) < self.capacity
 
+    def blocked_free(self) -> List[int]:
+        """Free slots pinned by inbound prefix links (ascending): holders
+        of shared columns that must survive until their linkers complete
+        or a copy-on-write detaches them."""
+        return sorted(i for i in self._free if self.col_refs[i] > 0)
+
+    def allocatable(self, exclude: Sequence[int] = ()) -> int:
+        """Free slots actually claimable right now: not link-blocked, not
+        in ``exclude`` (the match owners of an in-flight admission)."""
+        avoid = set(exclude)
+        return sum(1 for i in self._free
+                   if self.col_refs[i] == 0 and i not in avoid)
+
     def alloc(self, n: int,
-              scores: Optional[Sequence[float]] = None) -> List[int]:
+              scores: Optional[Sequence[float]] = None,
+              exclude: Sequence[int] = ()) -> List[int]:
         """Claim n free slots. Default: the lowest ids (ascending — see
         module doc; the lockstep bit-parity contract rests on it).
 
@@ -106,15 +131,64 @@ class SlotPool:
         fall back to lowest-id, so a uniform score vector reproduces the
         default order exactly. The serving scheduler passes the per-slot
         wear/residual-decay scores from its last wear checkpoint when a
-        HIGH-quality request is admitted under the address layer."""
-        assert n <= len(self._free), (n, len(self._free))
-        if scores is None:
-            return [heapq.heappop(self._free) for _ in range(n)]
-        ids = sorted(self._free, key=lambda i: (float(scores[i]), i))[:n]
+        HIGH-quality request is admitted under the address layer.
+
+        Link-blocked slots (``col_refs > 0``) and ``exclude`` members are
+        never handed out — eviction of a shared prefix owner is blocked
+        while its refcount is positive. With no links and no exclusions
+        (every prefix-off run) the order is bit-identical to the original
+        free-list discipline."""
+        avoid = {i for i in self._free if self.col_refs[i] > 0}
+        avoid.update(exclude)
+        if not avoid:
+            assert n <= len(self._free), (n, len(self._free))
+            if scores is None:
+                return [heapq.heappop(self._free) for _ in range(n)]
+            ids = sorted(self._free,
+                         key=lambda i: (float(scores[i]), i))[:n]
+        else:
+            cand = [i for i in self._free if i not in avoid]
+            assert n <= len(cand), (n, len(cand), sorted(avoid))
+            if scores is None:
+                ids = sorted(cand)[:n]
+            else:
+                ids = sorted(cand, key=lambda i: (float(scores[i]), i))[:n]
         taken = set(ids)
         self._free = [i for i in self._free if i not in taken]
         heapq.heapify(self._free)
         return ids
+
+    # ------------------------------------------------------- prefix links
+    def link(self, linker: int, owner: int, cols: int) -> None:
+        """Record that ``linker``'s leading ``cols`` KV columns are backed
+        by ``owner``'s physical columns. The owner's refcount blocks its
+        eviction until every linker completes or is CoW-detached."""
+        assert linker not in self.links, linker
+        if linker == owner:
+            return  # re-admission into the owner slot shares nothing new
+        self.links[linker] = (owner, cols)
+        self.col_refs[owner] += 1
+
+    def unlink(self, linker: int) -> None:
+        """Drop ``linker``'s outbound link (completion or CoW): the owner
+        loses one inbound ref and may become evictable again."""
+        owner, _ = self.links.pop(linker)
+        assert self.col_refs[owner] > 0, owner
+        self.col_refs[owner] -= 1
+
+    def cow_detach(self, owner: int) -> List[tuple]:
+        """Copy-on-write: detach every linker of ``owner`` so its columns
+        may be overwritten. The linkers' rows already mirror the shared
+        bits on device — physically this is the moment each linker's own
+        rows are actually driven, so the caller books one full column
+        write per returned ``(linker, cols)`` through the plan's
+        ``alias_saving`` pricing (paying back exactly what the link was
+        credited) plus the admission wear of those columns."""
+        out = [(lk, cols) for lk, (ow, cols) in self.links.items()
+               if ow == owner]
+        for lk, _ in out:
+            self.unlink(lk)
+        return sorted(out)
 
     def release(self, slot_ids: Sequence[int]) -> None:
         """Return slots to the free list — pure host bookkeeping (the
@@ -122,10 +196,16 @@ class SlotPool:
         single jitted admission update; a freed slot's stale ledger row is
         never read). Cache rows keep their stale bits on purpose: the next
         admission diffs against them (redundant-write elimination over a
-        long-lived shared cache)."""
+        long-lived shared cache) and the prefix cache may keep *linking*
+        new requests to a released slot's resident prefix columns until an
+        admission overwrites them (generation check). A completing slot
+        drops its own outbound link; inbound links survive release — they
+        pin the slot's columns, not its occupancy."""
         for i in slot_ids:
             assert self.slot_req[i] is not None, i
             self.slot_req[i] = None
+            if i in self.links:
+                self.unlink(i)
             heapq.heappush(self._free, i)
         self.completions += len(slot_ids)
 
@@ -153,7 +233,11 @@ class SlotPool:
             jnp.asarray(list(pos0), jnp.int32), idx, acc)
         for i, r in zip(slot_ids, requests):
             assert self.slot_req[i] is None, i
+            assert self.col_refs[i] == 0, (i, self.col_refs[i])
             self.slot_req[i] = r
+            # the slot's previous resident bits are gone: invalidate every
+            # prefix-cache entry naming them (generation comparison)
+            self.generation[i] += 1
         self.admissions += len(slot_ids)
         self.peak_occupancy = max(self.peak_occupancy,
                                   self.capacity - len(self._free))

@@ -1,0 +1,431 @@
+"""Content-addressable prefix cache: cross-request KV reuse (PR 7).
+
+The load-bearing contracts:
+
+  * prefix-off is BIT-IDENTICAL to the pre-prefix scheduler on every
+    backend, and prefix-on with no overlap is bit-identical to prefix-off
+    — the subsystem must be invisible unless a match actually links;
+  * a linked admission reproduces the owner's *stored* bits exactly —
+    realized write errors and retention decay included — because linking
+    copies the owner's resident columns instead of re-driving them (the
+    cross-request analogue of the lockstep-parity contract);
+  * linked columns cost exactly zero write energy/flips/WER under CMP,
+    while non-aliased elements store bits identical to the unaliased
+    call (the RNG hashes flat logical indices — layout invariance);
+  * refcounted ownership: link-blocked slots are never allocated, CoW
+    detaches linkers when their owner must be overwritten (charged at
+    exactly the credited price), shared columns wear ONCE.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.priority import Priority
+from repro.memory import WriteStats
+from repro.serve import (ContinuousScheduler, PrefixCache, PrefixConfig,
+                         Request, ServeConfig, ServingEngine)
+from repro.serve.engine import BATCH_AXIS
+
+BACKENDS = ("oracle", "lanes_ref", "pallas", "exact")
+
+
+def _engine(max_seq=24, mnt=10, **kw):
+    cfg = get_config("qwen2.5-3b").reduced()
+    return cfg, ServingEngine(cfg, ServeConfig(max_seq=max_seq,
+                                               max_new_tokens=mnt, **kw))
+
+
+def _req(cfg, rid, toks, nt, arrival):
+    return Request(rid=rid, prompt={"tokens": toks}, new_tokens=nt,
+                   arrival=arrival)
+
+
+def _shared_stream(cfg, specs, shared_tokens=8, tail=4, seed=11):
+    """Requests sharing a ``shared_tokens`` system prefix with unique
+    tails; ``specs`` is [(new_tokens, arrival), ...]."""
+    shared = jax.random.randint(jax.random.PRNGKey(seed),
+                                (1, shared_tokens), 0, cfg.vocab_size)
+    out = []
+    for i, (nt, arrival) in enumerate(specs):
+        t = jax.random.randint(jax.random.PRNGKey(seed + 13 * i + 1),
+                               (1, tail), 0, cfg.vocab_size)
+        out.append(_req(cfg, i, jnp.concatenate([shared, t], axis=1),
+                        nt, arrival))
+    return out
+
+
+def _disjoint_requests(cfg, n, prompt_len=12, new_tokens=3, every=4,
+                       seed=11):
+    return [_req(cfg, i,
+                 jax.random.randint(jax.random.PRNGKey(seed + 13 * i),
+                                    (1, prompt_len), 0, cfg.vocab_size),
+                 new_tokens, i * every)
+            for i in range(n)]
+
+
+def _totals(rep):
+    return {k: rep["total"][k] for k in ("energy_pj", "bits_written",
+                                         "bits_total", "bit_errors")}
+
+
+def _zero_stats():
+    return WriteStats.zero()
+
+
+# ---------------------------------------------------------------------------
+# prefix-off / never-matching invisibility (per backend)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_prefix_on_without_overlap_is_bit_exact_with_off(backend):
+    """Enabled-but-never-matching must equal disabled bit-for-bit on every
+    backend: no match means every admission takes the identical compiled
+    path with the identical RNG schedule (and the default-config arm IS
+    the pre-prefix scheduler — prefix-off parity with HEAD)."""
+    cfg, eng_off = _engine(backend=backend)
+    reqs = _disjoint_requests(cfg, 3)
+    rep_off = ContinuousScheduler(eng_off, capacity=2).run(reqs)
+
+    _, eng_on = _engine(backend=backend, prefix_cache=True,
+                        prefix_chunk=8)
+    rep_on = ContinuousScheduler(eng_on, capacity=2).run(reqs)
+
+    assert _totals(rep_off) == _totals(rep_on)
+    for r in reqs:
+        assert (rep_off["requests"][r.rid]["tokens"]
+                == rep_on["requests"][r.rid]["tokens"])
+    assert rep_on["prefix"]["hits"] == 0
+    assert "prefix" not in rep_off
+
+
+def test_zero_alias_is_bit_exact_identity_on_write():
+    """alias_cols of zeros and alias_cols=None produce identical stored
+    bits and stats — the identity the linked path's parity rests on. A
+    half-window alias keeps the OLD bits on aliased columns (free under
+    CMP) while non-aliased elements store bits identical to the unaliased
+    call (element-local RNG decisions)."""
+    cfg, eng = _engine(max_seq=16)
+    plan = eng.plan
+    cache = eng.api.init_cache(2, 16)
+    rand = lambda a, s: (jax.random.normal(jax.random.PRNGKey(s), a.shape,
+                                           a.dtype)
+                         if jnp.issubdtype(a.dtype, jnp.floating) else a)
+    old = jax.tree.map(lambda a: rand(a, 1), cache)
+    new = jax.tree.map(lambda a: rand(a, 2), cache)
+    vec = plan.vectors_for(Priority.LOW)
+    key = jax.random.PRNGKey(3)
+
+    s_none, st_none = plan.write(key, old, new, vec)
+    s_zero, st_zero = plan.write(key, old, new, vec,
+                                 alias_cols=jnp.zeros((2,), jnp.int32))
+    for a, b in zip(jax.tree.leaves(s_none), jax.tree.leaves(s_zero)):
+        assert bool(jnp.all(a == b))
+    assert float(st_none.energy_pj) == float(st_zero.energy_pj)
+    assert int(st_none.errors) == int(st_zero.errors)
+
+    s_half, st_half = plan.write(key, old, new, vec,
+                                 alias_cols=jnp.full((2,), 8, jnp.int32))
+    assert float(st_half.energy_pj) < float(st_none.energy_pj)
+    for i, (sh, sn, o) in enumerate(zip(jax.tree.leaves(s_half),
+                                        jax.tree.leaves(s_none),
+                                        jax.tree.leaves(old))):
+        ax = plan.leaf_seq_axis[i]
+        if plan.leaf_levels[i] is None or ax is None:
+            continue
+        keep = jax.lax.broadcasted_iota(jnp.int32, sh.shape, ax) < 8
+        assert bool(jnp.all(jnp.where(keep, sh == o, True)))
+        assert bool(jnp.all(jnp.where(keep, True, sh == sn)))
+
+
+# ---------------------------------------------------------------------------
+# linked admission reproduces the owner's stored bits exactly
+# ---------------------------------------------------------------------------
+
+def _linked_bits_match(scfg_kw):
+    """Owner (rid 0) completes exactly when the sharer (rid 1) arrives, so
+    the link targets the *released-but-resident* prefix columns, and the
+    sharer is the last scheduler event (new_tokens=1: no burst after its
+    admission mutates any bits). Compare the linker's stored prefix
+    columns against the owner slot's resident columns bit-for-bit."""
+    cfg, eng = _engine(prefix_cache=True, prefix_chunk=8, **scfg_kw)
+    reqs = _shared_stream(cfg, [(4, 0), (1, 3)])
+    sch = ContinuousScheduler(eng, capacity=3)
+    rep = sch.run(reqs)
+    assert rep["prefix"]["hits"] == 1
+    assert rep["prefix"]["linked_admissions"] == 1
+    assert rep["prefix"]["linked_cols"] == 8
+    owner = rep["requests"][0]["slot"]
+    linker = rep["requests"][1]["slot"]
+    assert owner != linker
+    for i, leaf in enumerate(jax.tree.leaves(sch.pool.cache)):
+        ax = eng.plan.leaf_seq_axis[i]
+        if eng.plan.leaf_levels[i] is None or ax is None:
+            continue
+        # batch axis to front; the original seq axis ax (> BATCH_AXIS)
+        # lands at ax-1 once the slot index drops the leading dim
+        a = jnp.moveaxis(leaf, BATCH_AXIS, 0)
+        sel = [slice(None)] * (a.ndim - 1)
+        sel[ax - 1] = slice(0, 8)
+        assert bool(jnp.all(a[linker][tuple(sel)] == a[owner][tuple(sel)]))
+    return rep
+
+
+def test_linked_admission_reproduces_owner_bits():
+    _linked_bits_match({})
+
+
+def test_linked_admission_reproduces_owner_bits_after_decay():
+    """With retention decay on, the owner's resident bits at link time
+    include realized decay flips — the linker mirrors those too (it copies
+    the CURRENT stored bits, not the originally-written ones), and its
+    decay record inherits the owner's via reset_rows_linked."""
+    rep = _linked_bits_match({"retention_scale": 1e4, "ambient_k": 400.0})
+    assert rep["lifetime"]["retention_flips"] > 0  # decay actually ran
+
+
+def test_linked_admission_saves_write_energy():
+    """A sharer admitted while the owner still decodes lands on a cold
+    slot: prefix-off pays the full cold-drive, prefix-on links 8 of its
+    12 columns. The prefill stream must come out cheaper and the ledger
+    must book the saving net of the CAM search."""
+    cfg, eng_off = _engine()
+    reqs = _shared_stream(cfg, [(10, 0), (1, 3), (1, 5)])
+    rep_off = ContinuousScheduler(eng_off, capacity=3).run(reqs)
+    _, eng_on = _engine(prefix_cache=True, prefix_chunk=8)
+    rep_on = ContinuousScheduler(eng_on, capacity=3).run(reqs)
+    p = rep_on["prefix"]
+    assert p["hits"] == 2 and p["linked_admissions"] == 2
+    assert p["write_energy_saved_pj"] > 0
+    assert p["cow_events"] == 0
+    assert p["net_energy_saved_pj"] < p["write_energy_saved_pj"]  # CAM
+    assert (rep_on["streams"]["kv_prefill"]["energy_pj"]
+            < rep_off["streams"]["kv_prefill"]["energy_pj"])
+
+
+# ---------------------------------------------------------------------------
+# slot-pool ownership: refcounts, blocked allocation, CoW
+# ---------------------------------------------------------------------------
+
+class _FakeApi:
+    def init_cache(self, capacity, max_seq):
+        return {"k": jnp.zeros((1, capacity, max_seq, 2), jnp.float32)}
+
+
+def _pool(capacity=4):
+    from repro.serve.slots import SlotPool
+    return SlotPool(_FakeApi(), capacity, max_seq=8)
+
+
+def _rows(n):
+    return {"k": jnp.ones((1, n, 8, 2), jnp.float32)}
+
+
+def test_pool_link_blocks_allocation_until_unlink():
+    pool = _pool()
+    pool.link(2, 0, cols=4)
+    assert pool.col_refs[0] == 1
+    assert pool.blocked_free() == [0]
+    assert pool.allocatable() == 3
+    assert pool.alloc(2) == [1, 2]             # 0 skipped while blocked
+    pool.unlink(2)
+    assert pool.col_refs[0] == 0
+    assert pool.alloc(1) == [0]                # unblocked again
+
+
+def test_pool_self_link_is_noop():
+    pool = _pool()
+    pool.link(1, 1, cols=4)                    # re-admitted into owner slot
+    assert pool.col_refs[1] == 0 and not pool.links
+
+
+def test_pool_exclude_generation_and_admit():
+    pool = _pool()
+    assert pool.alloc(1, exclude=[0]) == [1]
+    ids = pool.alloc(1)
+    assert ids == [0]
+    g0 = pool.generation[0]
+    pool.admit(ids, [object()], _rows(1), jnp.zeros((1,), jnp.int32), [4],
+               _zero_stats(), _zero_stats())
+    assert pool.generation[0] == g0 + 1        # stale CAM entries droppable
+    got = np.asarray(pool.cache["k"])[:, 0]
+    np.testing.assert_array_equal(got, np.ones_like(got))
+
+
+def test_pool_cow_detach_returns_linkers_and_spares_chains():
+    pool = _pool()
+    pool.link(1, 0, cols=4)
+    pool.link(2, 0, cols=6)
+    pool.link(3, 2, cols=2)                    # different owner, untouched
+    assert pool.cow_detach(0) == [(1, 4), (2, 6)]
+    assert pool.col_refs[0] == 0
+    assert pool.links == {3: (2, 2)}
+    assert pool.blocked_free() == [2]
+
+
+def test_pool_release_drops_outbound_link_only():
+    pool = _pool()
+    ids = pool.alloc(2)
+    pool.admit(ids, [object(), object()], _rows(2),
+               jnp.zeros((2,), jnp.int32), [4, 4], _zero_stats(),
+               _zero_stats())
+    pool.link(ids[1], ids[0], cols=4)
+    pool.release([ids[1]])                     # linker completes
+    assert pool.col_refs[ids[0]] == 0          # outbound link dropped
+    pool.link(3, ids[0], cols=4)
+    pool.release([ids[0]])                     # owner completes
+    assert pool.col_refs[ids[0]] == 1          # inbound link SURVIVES
+    assert pool.blocked_free() == [ids[0]]
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write under capacity pressure (scheduler-level, deterministic)
+# ---------------------------------------------------------------------------
+
+def test_cow_fires_under_capacity_pressure_and_cancels_credit():
+    """Capacity 2: rid 1 links rid 0's released slot (now blocked); when
+    rid 2 (no overlap) arrives, the only free slot is the blocked owner —
+    admission must CoW-detach the linker to proceed, charging back exactly
+    what the link was credited (one pricing source), so the net ledger is
+    the CAM search alone (negative)."""
+    cfg, eng = _engine(prefix_cache=True, prefix_chunk=8)
+    reqs = _shared_stream(cfg, [(4, 0), (6, 3)])
+    reqs.append(_req(cfg, 2,
+                     jax.random.randint(jax.random.PRNGKey(99), (1, 12),
+                                        0, cfg.vocab_size), 1, 4))
+    rep = ContinuousScheduler(eng, capacity=2).run(reqs)
+    assert len(rep["requests"]) == 3           # stream completed
+    p = rep["prefix"]
+    assert p["linked_admissions"] == 1
+    assert p["cow_events"] == 1
+    assert p["cow_energy_pj"] > 0
+    assert rep["streams"]["kv_prefix_cow"]["energy_pj"] > 0
+    # the CoW charge pays back the link credit (same columns, same price;
+    # tolerance = f32 accumulation of the device-side stream)
+    assert abs(p["cow_energy_pj"] - p["write_energy_saved_pj"]) <= \
+        1e-3 * p["write_energy_saved_pj"]
+    assert p["net_energy_saved_pj"] < 0        # only the CAM search remains
+
+
+# ---------------------------------------------------------------------------
+# wear: shared columns wear once
+# ---------------------------------------------------------------------------
+
+def test_admission_wear_books_window_minus_linked_columns():
+    from repro.memory.address import AddressSpec, slot_window_group_counts
+    spec = AddressSpec(group_cols=2)
+    g = np.asarray(slot_window_group_counts(
+        jnp.asarray([0, 1], jnp.int32),
+        jnp.asarray([0, 4], jnp.int32),       # slot 1 linked 4 columns
+        jnp.asarray([8, 8], jnp.int32),
+        jnp.asarray(0, jnp.int32), n_cols=8, n_groups=8, spec=spec))
+    assert g[:4].tolist() == [2, 2, 2, 2]      # slot 0: all 8 cols
+    assert g[4:].tolist() == [0, 0, 2, 2]      # slot 1: cols 4..8 only
+    assert int(g.sum()) == 8 + 4               # shared columns wear ONCE
+
+
+def test_wear_prefix_run_completes_and_reports():
+    cfg, eng = _engine(prefix_cache=True, prefix_chunk=8,
+                       wear_policy="rotate", remap_group_cols=4)
+    reqs = _shared_stream(cfg, [(6, 0), (1, 3)])
+    rep = ContinuousScheduler(eng, capacity=3).run(reqs)
+    assert rep["prefix"]["hits"] == 1
+    assert rep["wear"]["max_group_wear"] > 0
+
+
+# ---------------------------------------------------------------------------
+# lifetime: linked columns inherit the owner's decay record
+# ---------------------------------------------------------------------------
+
+def test_reset_rows_linked_zero_cols_matches_reset_rows():
+    cfg, eng = _engine(retention_scale=1.0)
+    lp = eng.life_plan
+    cache = eng.api.init_cache(3, 16)
+    st = lp.init_state(cache)
+    masks = tuple(
+        (jax.random.randint(jax.random.PRNGKey(i), m.shape, 0, 255
+                            ).astype(m.dtype) if m is not None else None)
+        for i, m in enumerate(st.masks))
+    st = dataclasses.replace(st, masks=masks)
+    idx = jnp.asarray([1], jnp.int32)
+    src = jnp.asarray([0], jnp.int32)
+
+    a = lp.reset_rows_linked(st, idx, src, jnp.asarray([0], jnp.int32))
+    b = lp.reset_rows(st, idx)
+    for ma, mb in zip(a.masks, b.masks):
+        if ma is not None:
+            assert bool(jnp.all(ma == mb))
+
+    c = lp.reset_rows_linked(st, idx, src, jnp.asarray([4], jnp.int32))
+    bx = lp.plan.batch_axis
+    for i, m in enumerate(c.masks):
+        if m is None:
+            continue
+        m1 = jnp.moveaxis(m, bx, 0)[1]
+        s0 = jnp.moveaxis(masks[i], bx, 0)[0]
+        ax = lp.plan.leaf_seq_axis[i]
+        if ax is None:
+            assert bool(jnp.all(m1 == 0))
+            continue
+        keep = jax.lax.broadcasted_iota(jnp.int32, m1.shape, ax - 1) < 4
+        assert bool(jnp.all(jnp.where(keep, m1 == s0, m1 == 0)))
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache unit behavior (CAM model)
+# ---------------------------------------------------------------------------
+
+def _sig(cache, toks):
+    return cache.signatures({"tokens": np.asarray([toks])})
+
+
+def test_prefix_cache_cumulative_digests_and_lru():
+    pc = PrefixCache(PrefixConfig(chunk=2, table_size=3))
+    s1 = _sig(pc, [1, 2, 3, 4])
+    s2 = _sig(pc, [1, 2, 9, 9])
+    assert s1[0][0] == s2[0][0]                # shared first chunk
+    assert s1[1][0] != s2[1][0]                # diverged second chunk
+    assert [t for _, t in s1] == [2, 4]
+
+    pc.insert(s1, slot=0, generation=0)
+    assert pc.insertions == 2
+    m = pc.lookup(s2, valid=lambda s, g: True)
+    assert (m.slot, m.cols, m.tokens) == (0, 2, 2)
+    assert pc.hits == 1
+    assert pc.cam_energy_pj > 0
+    # capacity 3: inserting two more match lines evicts the LRU one
+    pc.insert(_sig(pc, [7, 7, 7, 7]), slot=1, generation=0)
+    assert pc.evictions == 1
+    assert pc.stats()["occupancy"] == 3
+
+
+def test_prefix_cache_stale_generation_dropped():
+    pc = PrefixCache(PrefixConfig(chunk=2, table_size=8))
+    s = _sig(pc, [1, 2, 3, 4])
+    pc.insert(s, slot=0, generation=0)
+    m = pc.lookup(s, valid=lambda slot, gen: gen == 1)  # slot overwritten
+    assert m is None
+    assert pc.stale_drops == 2                 # both depths dropped
+    assert pc.misses == 1
+    assert pc.stats()["occupancy"] == 0        # dropped lines are gone
+
+
+def test_prefix_cache_max_cols_and_offset():
+    pc = PrefixCache(PrefixConfig(chunk=2, table_size=8))
+    s = _sig(pc, [1, 2, 3, 4])
+    pc.insert(s, slot=3, generation=0, col_offset=5)   # multimodal offset
+    m = pc.lookup(s, valid=lambda *_: True)
+    assert (m.slot, m.cols, m.tokens) == (3, 9, 4)     # deepest: 5 + 4
+    assert pc.lookup(s, valid=lambda *_: True, max_cols=6) is None
+
+
+def test_prefix_cache_extra_leaf_digest_separates_multimodal():
+    pc = PrefixCache(PrefixConfig(chunk=2, table_size=8))
+    a = pc.signatures({"tokens": np.asarray([[1, 2]]),
+                       "image_embeds": np.zeros((1, 2, 3), np.float32)})
+    b = pc.signatures({"tokens": np.asarray([[1, 2]]),
+                       "image_embeds": np.ones((1, 2, 3), np.float32)})
+    assert a[0][0] != b[0][0]                  # same tokens, different ctx
