@@ -26,7 +26,8 @@ from pathlib import Path
 from benchmarks import (endurance_sweep, fig2_switching, fig6_thermal,
                         fig12_waveform, fig13_access, fig14_energy,
                         fig15_variation, kernel_bench, prefix_reuse,
-                        retention_sweep, serving_energy, table1)
+                        retention_sweep, serving_energy, table1,
+                        workload_mixes)
 
 BENCHES = {
     "table1": lambda fast: table1.run(),
@@ -49,13 +50,16 @@ BENCHES = {
         steps=64 if fast else 160,
         shape=(8, 32) if fast else (8, 64)),
     "prefix_reuse": lambda fast: prefix_reuse.run(n=12 if fast else 16),
+    "workload_mixes": lambda fast: workload_mixes.run(
+        events=4 if fast else 6),
 }
 
 #: the --quick profile: the curated sub-minute subset the CI bench-report
 #: lane runs on EVERY push, so the BENCH_<n>.json perf trajectory actually
 #: accumulates (implies --fast; one invocation, one JSON)
 QUICK_BENCHES = ("table1", "fig6_thermal", "kernel_bench",
-                 "retention_sweep", "endurance_sweep", "prefix_reuse")
+                 "retention_sweep", "endurance_sweep", "prefix_reuse",
+                 "workload_mixes")
 
 #: modules exposing ``bench_metrics(out)`` — the registration hook for the
 #: machine-readable report
@@ -65,6 +69,7 @@ _METRIC_FNS = {
     "retention_sweep": retention_sweep.bench_metrics,
     "endurance_sweep": endurance_sweep.bench_metrics,
     "prefix_reuse": prefix_reuse.bench_metrics,
+    "workload_mixes": workload_mixes.bench_metrics,
 }
 
 
@@ -105,6 +110,13 @@ def _headline(name: str, out) -> str:
         return (f"admission_energy_reduction="
                 f"{out['admission_energy_reduction']:.3f} "
                 f"hit_rate={out['prefix']['hit_rate']:.2f}")
+    if name == "workload_mixes":
+        adv = out["adversarial"]
+        return (f"mixes={len(out['ramp'])} "
+                f"pressure={out['ramp'][0]['pressure']:.2f}→"
+                f"{out['ramp'][-1]['pressure']:.2f} "
+                f"adversarial_worn none={adv['none']['worn_groups']:.0f} "
+                f"rotate={adv['rotate']['worn_groups']:.0f}")
     return ""
 
 

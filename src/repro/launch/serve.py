@@ -12,6 +12,15 @@ Continuous batching over an arrival stream (the default):
       [--prefix-cache --prefix-chunk 8 --prefix-table-size 256 \
        --shared-prefix 8]
 
+Trace-driven workloads (repro.workload):
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --workload bursty --requests 12 --workload-seed 7   # generate
+  PYTHONPATH=src python -m repro.launch.serve \
+      --trace-record /tmp/stream.jsonl                    # record
+  PYTHONPATH=src python -m repro.launch.serve \
+      --trace /tmp/stream.jsonl                           # replay (bit-exact)
+
 Monolithic one-batch mode (the pre-slot-pool engine path):
 
   PYTHONPATH=src python -m repro.launch.serve --monolithic --batch 4
@@ -126,6 +135,20 @@ def main():
                          "prompts, nothing for the prefix cache to hit)")
     ap.add_argument("--monolithic", action="store_true",
                     help="single fixed batch, no arrival stream")
+    # trace-driven workloads (repro.workload): replay, generate, record
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="replay a recorded workload trace (JSONL) as the "
+                         "arrival stream instead of the synthetic default")
+    ap.add_argument("--workload", default=None, metavar="PRESET",
+                    help="generate the arrival stream from a workload "
+                         "preset (steady, diurnal, bursty, heavy_tail, "
+                         "chat_batch, shared_system_prompt)")
+    ap.add_argument("--workload-seed", type=int, default=0,
+                    help="root seed for --workload generation (a (preset, "
+                         "seed) pair IS the trace — fully deterministic)")
+    ap.add_argument("--trace-record", default=None, metavar="PATH",
+                    help="record the served arrival stream as a "
+                         "replayable trace file")
     # arrival-stream simulation
     ap.add_argument("--requests", type=int, default=6,
                     help="number of requests in the arrival stream")
@@ -149,9 +172,11 @@ def main():
     if args.scrub_policy != "none" and retention_scale == 0.0:
         retention_scale = 1000.0  # scrubbing without decay is a no-op
 
-    def serve_cfg(max_seq: int) -> ServeConfig:
+    def serve_cfg(max_seq: int, new_tokens: int = None) -> ServeConfig:
         return ServeConfig(
-            max_seq=max_seq, max_new_tokens=args.new_tokens,
+            max_seq=max_seq,
+            max_new_tokens=(new_tokens if new_tokens is not None
+                            else args.new_tokens),
             extent_enabled=not args.no_extent, backend=args.backend,
             soft_error_ber=args.soft_error_ber,
             soft_error_hardened=not args.soft_error_unhardened,
@@ -194,19 +219,45 @@ def main():
                       f"({'hardened' if not args.soft_error_unhardened else 'unhardened'} driver)")
         return
 
-    # ----- continuous batching over a simulated arrival stream
-    max_seq = args.prompt_len + args.new_tokens + (
-        cfg.num_image_tokens if cfg.family == "vlm" else 0)
-    eng = ServingEngine(cfg, serve_cfg(max_seq))
+    # ----- continuous batching over an arrival stream: a replayed trace,
+    # a generated workload preset, or the synthetic default
+    from repro.workload import (TraceSource, load_trace, make_workload,
+                                pressure_score, record_requests,
+                                save_trace)
+    if args.trace and args.workload:
+        ap.error("--trace and --workload are mutually exclusive")
+    trace = None
+    if args.trace:
+        trace = load_trace(args.trace)
+        stream_desc = f"trace {args.trace}"
+    elif args.workload:
+        trace = make_workload(args.workload, cfg, args.requests,
+                              seed=args.workload_seed)
+        stream_desc = (f"workload {args.workload} "
+                       f"(seed {args.workload_seed})")
+    else:
+        stream_desc = "synthetic"
+
+    vlm_extra = cfg.num_image_tokens if cfg.family == "vlm" else 0
+    if trace is not None:
+        max_seq = trace.max_seq() + vlm_extra
+        eng = ServingEngine(cfg, serve_cfg(max_seq,
+                                           trace.max_new_tokens()))
+    else:
+        max_seq = args.prompt_len + args.new_tokens + vlm_extra
+        eng = ServingEngine(cfg, serve_cfg(max_seq))
     apps = [a for a in args.apps.split(",") if a] or [None]
     for spec in args.quality:
         app, _, level = spec.partition("=")
         eng.controller.tag("kv_request", app, Priority.coerce(level))
-    reqs = synthetic_requests(
-        cfg, args.requests, prompt_len=args.prompt_len,
-        new_tokens=args.new_tokens, arrival_every=args.arrival_every,
-        app_ids=apps)
-    if args.shared_prefix > 0:
+    if trace is not None:
+        reqs = TraceSource(trace, cfg)
+    else:
+        reqs = synthetic_requests(
+            cfg, args.requests, prompt_len=args.prompt_len,
+            new_tokens=args.new_tokens, arrival_every=args.arrival_every,
+            app_ids=apps)
+    if args.shared_prefix > 0 and trace is None:
         # overwrite each prompt's head with one common system prefix —
         # the cross-request overlap the prefix cache exists to exploit
         shared = jax.random.randint(
@@ -234,6 +285,18 @@ def main():
     sch = ContinuousScheduler(eng, capacity=args.capacity,
                               scrub_policy=scrub_policy,
                               wear_policy=wear_policy)
+    # every stream is recordable/scorable: the synthetic default is read
+    # back into a trace (one host read per request, pre-serve), trace and
+    # workload modes already have one
+    rec = trace if trace is not None else record_requests(
+        reqs, cfg, meta={"source": "synthetic",
+                         "arrival_every": args.arrival_every})
+    if args.trace_record:
+        save_trace(rec, args.trace_record)
+        print(f"recorded trace -> {args.trace_record} "
+              f"({len(rec.events)} events)")
+    print(f"workload: {stream_desc}, {len(rec.events)} events, "
+          f"pressure={pressure_score(rec):.4f}")
     report = sch.run(reqs)
 
     print(f"served {len(report['requests'])} requests in "

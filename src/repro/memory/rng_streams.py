@@ -50,6 +50,13 @@ class Stream(NamedTuple):
     offset: int
     domain: str
     doc: str
+    #: how many consecutive fold constants the stream actually occupies:
+    #: the per-leaf/per-index streams fold ``offset + i`` off their parent
+    #: key, so they reserve the half-open murmur counter-hash range
+    #: [offset, offset + span) — a later stream whose offset lands INSIDE
+    #: another stream's range silently shares bits with its tail indices,
+    #: which exact (domain, offset) equality can never catch.
+    span: int = 1
 
 
 #: WritePlan folds the flat leaf index directly into the step write key.
@@ -68,35 +75,71 @@ CHECKPOINT_RESTORE_OFFSET = 4_000_037
 #: restore-integrity scrub per-leaf stream (off the restore step key —
 #: numerically equal to SOFT_ERROR_OFFSET, different parent domain).
 RESTORE_SCRUB_OFFSET = 1_000_003
+#: repro.workload trace generators: per-event sub-streams folded off the
+#: workload root key (``PRNGKey(workload_seed)``), so every generated
+#: trace is bit-reproducible from (preset, seed) alone.
+WORKLOAD_OFFSET = 5_000_011
+
+#: the conventional spacing of the per-index counter-hash sub-streams: a
+#: stream folding ``offset + i`` owns the next million fold constants.
+INDEX_SPAN = 1_000_000
 
 STREAMS: Tuple[Stream, ...] = (
     Stream("write-leaf", WRITE_LEAF_OFFSET, "step-write-key",
-           "WritePlan leaf writes: fold_in(k_write, i)"),
+           "WritePlan leaf writes: fold_in(k_write, i)", span=INDEX_SPAN),
     Stream("soft-error", SOFT_ERROR_OFFSET, "step-write-key",
-           "WritePlan post-write upset hook: fold_in(k_write, off + i)"),
+           "WritePlan post-write upset hook: fold_in(k_write, off + i)",
+           span=INDEX_SPAN),
     Stream("retention-decay", RETENTION_OFFSET, "step-write-key",
-           "LifetimePlan.advance decay sampler: fold_in(k_write, off + i)"),
+           "LifetimePlan.advance decay sampler: fold_in(k_write, off + i)",
+           span=INDEX_SPAN),
     Stream("scrub-correct", SCRUB_OFFSET, "step-write-key",
-           "scrub_tree corrective re-writes: fold_in(k, off + i)"),
+           "scrub_tree corrective re-writes: fold_in(k, off + i)",
+           span=INDEX_SPAN),
     Stream("scheduler-scrub-pass", SCHEDULER_SCRUB_PASS_OFFSET,
            "serve-decode-root",
-           "one key per scrub pass: fold_in(key, off + pass_index)"),
+           "one key per scrub pass: fold_in(key, off + pass_index)",
+           span=INDEX_SPAN),
     Stream("checkpoint-restore", CHECKPOINT_RESTORE_OFFSET,
            "checkpoint-restore-root",
-           "restore integrity per step: fold_in(root, off + step)"),
+           "restore integrity per step: fold_in(root, off + step)",
+           span=INDEX_SPAN),
     Stream("restore-scrub", RESTORE_SCRUB_OFFSET,
            "checkpoint-restore-step",
-           "restore scrub per leaf: fold_in(step_key, off + i)"),
+           "restore scrub per leaf: fold_in(step_key, off + i)",
+           span=INDEX_SPAN),
+    Stream("workload-event", WORKLOAD_OFFSET, "workload-root",
+           "trace generators per event: fold_in(root, off + event_index)",
+           span=INDEX_SPAN),
 )
 
 
-def validate() -> None:
-    """Assert the registry is collision-free — (domain, offset) unique.
-    Cheap enough to call from tests; the lint rule performs the same
-    check statically."""
+def validate(streams: Tuple[Stream, ...] = None) -> None:
+    """Assert the registry is collision-free.
+
+    Two checks per parent-key domain: no two streams share an offset, and
+    no stream's offset lands inside another stream's reserved counter-hash
+    *range* ``[offset, offset + span)`` — the per-index streams (soft
+    error, retention, scrub, workload events, …) fold ``offset + i``, so a
+    new constant that merely avoids exact equality can still collide with
+    index ``i`` of an existing stream. Cheap enough to call from tests;
+    the lint rule performs the exact-offset check statically."""
+    streams = STREAMS if streams is None else streams
     seen = {}
-    for s in STREAMS:
+    for s in streams:
         key = (s.domain, s.offset)
         assert key not in seen, (
             f"stream '{s.name}' collides with '{seen[key]}' on {key}")
         seen[key] = s.name
+    by_domain = {}
+    for s in streams:
+        by_domain.setdefault(s.domain, []).append(s)
+    for domain, group in by_domain.items():
+        group = sorted(group, key=lambda s: s.offset)
+        for a, b in zip(group, group[1:]):
+            assert a.offset + a.span <= b.offset, (
+                f"stream '{b.name}' (offset {b.offset}) lands inside "
+                f"'{a.name}'s reserved range [{a.offset}, "
+                f"{a.offset + a.span}) in domain '{domain}' — its fold "
+                f"constants collide with '{a.name}' at index "
+                f"{b.offset - a.offset}")

@@ -1,6 +1,7 @@
 from repro.serve.engine import ServeConfig, ServingEngine  # noqa: F401
 from repro.serve.prefix import (PrefixCache, PrefixConfig,  # noqa: F401
                                 PrefixMatch)
-from repro.serve.scheduler import (ContinuousScheduler, Request,  # noqa: F401
-                                   synthetic_requests)
+from repro.serve.scheduler import (ArrivalQueue,  # noqa: F401
+                                   ContinuousScheduler, Request,
+                                   as_arrival_source, synthetic_requests)
 from repro.serve.slots import SlotPool  # noqa: F401

@@ -57,6 +57,12 @@ class Request:
     arrival: int = 0
     app_id: Optional[Hashable] = None
     quality: Optional[Priority] = None
+    # workload-trace provenance (repro.workload): ``session`` groups
+    # requests of one conversation; ``modal_seed`` is the PRNGKey seed the
+    # non-token prompt leaves (vlm/audio) were generated from, recorded so
+    # a trace can regenerate them bit-exactly instead of serializing them.
+    session: Optional[int] = None
+    modal_seed: Optional[int] = None
 
 
 def synthetic_requests(cfg, n: int, *, prompt_len: int = 12,
@@ -72,20 +78,61 @@ def synthetic_requests(cfg, n: int, *, prompt_len: int = 12,
         prompt = {"tokens": jax.random.randint(
             jax.random.PRNGKey(seed + 17 * i), (1, prompt_len), 0,
             cfg.vocab_size)}
+        modal_seed = None
         if cfg.family == "vlm":
+            modal_seed = seed + 17 * i + 1
             prompt["image_embeds"] = jax.random.normal(
-                jax.random.PRNGKey(seed + 17 * i + 1),
+                jax.random.PRNGKey(modal_seed),
                 (1, cfg.num_image_tokens, cfg.vision_dim), jnp.float32)
         if cfg.family == "audio":
+            modal_seed = seed + 17 * i + 1
             prompt["frames"] = jax.random.normal(
-                jax.random.PRNGKey(seed + 17 * i + 1),
+                jax.random.PRNGKey(modal_seed),
                 (1, 24, cfg.d_model), jnp.float32)
         out.append(Request(
             rid=i, prompt=prompt, new_tokens=new_tokens,
             arrival=i * arrival_every,
             app_id=app_ids[i % len(app_ids)] if app_ids else None,
-            quality=qualities[i % len(qualities)] if qualities else None))
+            quality=qualities[i % len(qualities)] if qualities else None,
+            session=i, modal_seed=modal_seed))
     return out
+
+
+class ArrivalQueue:
+    """The materialized-list arrival source (the scheduler's default).
+
+    ``ContinuousScheduler.run`` consumes arrival streams through a small
+    host-side protocol — ``next_arrival()`` (peek the next arrival step,
+    None when drained), ``popleft()`` (take the next request in
+    (arrival, rid) order), and truthiness — so a trace iterator
+    (``repro.workload.replay.TraceSource``) can feed the same loop as a
+    plain request list without the scheduler knowing the difference.
+    Everything the protocol touches is host metadata; the one-sync-per-
+    event discipline is a property of the loop, not of the source."""
+
+    def __init__(self, requests: Sequence[Request]):
+        self._q = collections.deque(
+            sorted(requests, key=lambda r: (r.arrival, r.rid)))
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def next_arrival(self) -> Optional[int]:
+        return self._q[0].arrival if self._q else None
+
+    def popleft(self) -> Request:
+        return self._q.popleft()
+
+
+def as_arrival_source(requests) -> Any:
+    """Wrap a request list in an ``ArrivalQueue``; objects already
+    speaking the arrival-source protocol pass through untouched."""
+    if hasattr(requests, "next_arrival") and hasattr(requests, "popleft"):
+        return requests
+    return ArrivalQueue(requests)
 
 
 def _prompt_signature(prompt: Dict[str, jax.Array]) -> Tuple:
@@ -374,8 +421,10 @@ class ContinuousScheduler:
         (one fused prefill per group). Returns (key, immediate completions
         handled)."""
         admissible: List[Request] = []
-        while (pending and pending[0].arrival <= clock
-               and len(admissible) < self.pool.free_slots()):
+        while len(admissible) < self.pool.free_slots():
+            nxt = pending.next_arrival()
+            if nxt is None or nxt > clock:
+                break
             admissible.append(pending.popleft())
         if not admissible:
             return key, 0
@@ -542,13 +591,17 @@ class ContinuousScheduler:
         energy ledger (streams bit-comparable with ``generate()`` when the
         stream degenerates to one full-pool lockstep batch).
 
+        ``requests`` is either a materialized request list (wrapped in an
+        ``ArrivalQueue``) or any object speaking the arrival-source
+        protocol — e.g. ``repro.workload.replay.TraceSource``, which
+        materializes each prompt only at admission.
+
         ``wear_state`` (a prior run's ``wear_state()`` snapshot, possibly
         round-tripped through a checkpoint) restores the physical address
         map and the row-group endurance counters — wear is device damage,
         so it persists across serving processes."""
         eng, pool = self.eng, self.pool
-        pending = collections.deque(
-            sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        pending = as_arrival_source(requests)
         key = jax.random.PRNGKey(eng.scfg.seed + 1)
         clock = 0
         decode_steps = 0
@@ -609,14 +662,15 @@ class ContinuousScheduler:
         eng.controller.table.reset_stats()
 
         while pending or pool.busy():
-            if (not pool.busy()) and pending and pending[0].arrival > clock:
-                clock = pending[0].arrival  # idle: fast-forward to arrival
+            nxt = pending.next_arrival()
+            if (not pool.busy()) and nxt is not None and nxt > clock:
+                clock = nxt  # idle: fast-forward to arrival
             # admit until nothing else fits (immediate completions can free
             # slots for requests already waiting in the queue)
             while True:
                 key, n_done = self._admit(pending, clock, key)
-                if not (n_done and pending
-                        and pending[0].arrival <= clock
+                nxt = pending.next_arrival()
+                if not (n_done and nxt is not None and nxt <= clock
                         and pool.free_slots()):
                     break
             if not pool.busy():
@@ -626,8 +680,9 @@ class ContinuousScheduler:
             active_ids = pool.occupied()
             n = min(self._remaining[pool.slot_req[i].rid]
                     for i in active_ids)
-            if pending and pending[0].arrival > clock:
-                n = min(n, pending[0].arrival - clock)
+            nxt = pending.next_arrival()
+            if nxt is not None and nxt > clock:
+                n = min(n, nxt - clock)
             if self.max_burst:
                 n = min(n, self.max_burst)
             if self.ambient_schedule and self.life is not None:

@@ -1,0 +1,33 @@
+"""repro.workload — trace-driven workload harness for mixed-traffic serving.
+
+The serving stack's policy knobs (extent floors, scrub, wear rotation,
+prefix cache, soft-error hardening) were all benchmarked against ONE
+synthetic single-distribution arrival stream. This package turns that one
+operating point into a scenario-diverse frontier:
+
+  * ``trace``      — a versioned, replayable JSONL trace format (arrival
+                     step, prompt tokens, decode length, quality hint,
+                     session id, shared-prefix group) with schema
+                     validation and bit-exact round-tripping;
+  * ``generators`` — deterministic generators for production traffic
+                     shapes (steady, diurnal, bursty two-state, heavy-tail
+                     contexts, chat-vs-batch mixes, shared-system-prompt
+                     floods), seeded through the ``workload-event`` RNG
+                     stream so a (preset, seed) pair IS the trace;
+  * ``pressure``   — the KV-write-pressure score (admissions × prompt
+                     length ÷ slot dwell) that orders generated mixes into
+                     a monotone mix1→mixN ramp, ordering asserted;
+  * ``replay``     — the trace-iterator arrival source feeding traces into
+                     ``serve/scheduler.py`` (lazy prompt materialization,
+                     one-sync-per-event discipline preserved), the stream
+                     recorder that makes ANY run replayable, and the
+                     per-mix report joiner for frontier tables.
+"""
+from repro.workload.generators import (PRESETS, make_workload)  # noqa: F401
+from repro.workload.pressure import (assert_monotone,  # noqa: F401
+                                     build_ramp, pressure_score)
+from repro.workload.replay import (TraceSource, join_reports,  # noqa: F401
+                                   record_requests, requests_from_trace)
+from repro.workload.trace import (TRACE_VERSION, Trace,  # noqa: F401
+                                  TraceEvent, load_trace, save_trace,
+                                  validate_trace)

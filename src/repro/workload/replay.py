@@ -1,0 +1,199 @@
+"""Trace ⇄ scheduler adapters: replay, recording, and the report joiner.
+
+``TraceSource`` is the trace-iterator arrival source the scheduler
+consumes alongside its materialized-list default (see
+``serve/scheduler.py``'s arrival-source protocol): it answers the two
+host-side questions scheduling needs — "when does the next request
+arrive" and "hand me the next request" — and materializes prompt arrays
+only at admission time, so a million-event trace never sits on the device
+as a million prompt tensors. The admission order is (arrival, rid),
+identical to the list path, which is what keeps replay-vs-synthetic
+bit-parity intact.
+
+``record_requests`` is the inverse: any request stream (the synthetic
+default included) becomes a trace, so any run is replayable. One host
+read per request — eager pre-serve code, not scheduler-event work.
+
+``join_reports`` merges per-mix serve reports (energy / latency / BER /
+wear / lifetime / prefix ledgers) into one flat frontier table for the
+workload_mixes benchmark and the BENCH json trajectory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.priority import Priority
+from repro.serve.scheduler import Request
+from repro.workload.trace import Trace, TraceEvent, from_requests, \
+    validate_trace
+
+
+def _materialize(ev: TraceEvent, cfg,
+                 quality_override: Optional[str] = None) -> Request:
+    """TraceEvent -> scheduler Request: prompt arrays built here (the one
+    place trace data becomes device data). Multimodal prompt leaves are
+    regenerated from the recorded modal_seed with the synthetic stream's
+    recipe — same key, same shape, same bits."""
+    prompt: Dict[str, jax.Array] = {
+        "tokens": jnp.asarray([list(ev.tokens)], jnp.int32)}
+    if cfg.family in ("vlm", "audio"):
+        if ev.modal_seed is None:
+            raise ValueError(
+                f"rid {ev.rid}: family {cfg.family!r} needs a modal_seed "
+                "to regenerate non-token prompt leaves")
+        k = jax.random.PRNGKey(ev.modal_seed)
+        if cfg.family == "vlm":
+            prompt["image_embeds"] = jax.random.normal(
+                k, (1, cfg.num_image_tokens, cfg.vision_dim), jnp.float32)
+        else:
+            prompt["frames"] = jax.random.normal(
+                k, (1, 24, cfg.d_model), jnp.float32)
+    q = quality_override if quality_override is not None else ev.quality
+    return Request(
+        rid=ev.rid, prompt=prompt, new_tokens=ev.new_tokens,
+        arrival=ev.arrival, app_id=ev.app_id,
+        quality=Priority.coerce(q) if q is not None else None,
+        session=ev.session, modal_seed=ev.modal_seed)
+
+
+class TraceSource:
+    """Trace-iterator arrival source for ``ContinuousScheduler.run``.
+
+    Implements the scheduler's arrival-source protocol
+    (``next_arrival`` / ``popleft`` / truthiness) over validated,
+    (arrival, rid)-sorted trace events. Prompts materialize lazily in
+    ``popleft`` — peeking the next arrival is pure host metadata, so the
+    scheduler's one-sync-per-event discipline is untouched.
+
+    ``quality_override`` forces every request to one quality level (the
+    workload_mixes extent-floor knob)."""
+
+    def __init__(self, trace: Trace, cfg,
+                 quality_override: Optional[str] = None):
+        self.trace = validate_trace(trace)
+        self.cfg = cfg
+        self.quality_override = quality_override
+        self._i = 0
+
+    def __bool__(self) -> bool:
+        return self._i < len(self.trace.events)
+
+    def __len__(self) -> int:
+        return len(self.trace.events) - self._i
+
+    def next_arrival(self) -> Optional[int]:
+        if not self:
+            return None
+        return self.trace.events[self._i].arrival
+
+    def popleft(self) -> Request:
+        ev = self.trace.events[self._i]
+        self._i += 1
+        return _materialize(ev, self.cfg, self.quality_override)
+
+
+def requests_from_trace(trace: Trace, cfg,
+                        quality_override: Optional[str] = None
+                        ) -> List[Request]:
+    """Fully materialized request list (small traces / tests); prefer
+    ``TraceSource`` for serving."""
+    return [_materialize(ev, cfg, quality_override)
+            for ev in validate_trace(trace).events]
+
+
+def record_requests(requests: Sequence[Request], cfg,
+                    meta: Optional[Dict[str, Any]] = None) -> Trace:
+    """Record a request stream as a replayable trace. Token ids cross to
+    the host here — one small read per request, in eager pre-serve code
+    (never inside the scheduler's event loop)."""
+    pairs = []
+    for r in requests:
+        toks = [int(t) for t in np.asarray(r.prompt["tokens"][0])]
+        if cfg.family in ("vlm", "audio") and \
+                getattr(r, "modal_seed", None) is None:
+            raise ValueError(
+                f"rid {r.rid}: cannot record a {cfg.family!r} request "
+                "without a modal_seed (non-token leaves are regenerated, "
+                "not serialized)")
+        pairs.append((r, toks))
+    return from_requests(pairs, vocab_size=cfg.vocab_size,
+                         family=cfg.family,
+                         meta=meta or {"source": "recorded"})
+
+
+# ------------------------------------------------------------ report joiner
+def flatten_report(report: Dict[str, Any]) -> Dict[str, float]:
+    """One serve report -> flat scalar metrics row: the total write
+    ledger, latency/queue aggregates over the per-request entries, and
+    whichever optional ledgers (lifetime, wear, prefix) the run carried."""
+    reqs = list(report["requests"].values())
+    lat = sorted(r["latency_steps"] for r in reqs)
+    row: Dict[str, float] = {
+        "requests": float(len(reqs)),
+        "clock_steps": float(report["clock_steps"]),
+        "decode_steps": float(report["decode_steps"]),
+        "bursts": float(report["bursts"]),
+        "energy_pj": report["total"]["energy_pj"],
+        "energy_pj_per_step": (report["total"]["energy_pj"]
+                               / max(1, report["clock_steps"])),
+        "write_skip_rate": report["total"]["write_skip_rate"],
+        "ber_realized": report["total"]["ber_realized"],
+        "mean_latency_steps": sum(lat) / len(lat),
+        "p95_latency_steps": float(lat[min(len(lat) - 1,
+                                           int(0.95 * len(lat)))]),
+        "mean_queue_steps": (sum(r["queue_steps"] for r in reqs)
+                             / len(reqs)),
+        "peak_occupancy": float(report["pool"]["peak_occupancy"]),
+    }
+    if "lifetime" in report:
+        lt = report["lifetime"]
+        row.update({
+            "lifetime_energy_pj": lt["lifetime_energy_pj"],
+            "scrub_energy_pj": lt["scrub_energy_pj"],
+            "retention_flips": float(lt["retention_flips"]),
+            "residual_decayed_bits": float(lt["residual_decayed_bits"]),
+            "scrub_passes": float(lt["scrub_passes"]),
+        })
+    if "wear" in report:
+        w = report["wear"]
+        row.update({
+            "max_group_wear": float(w["max_group_wear"]),
+            "worn_groups": float(w["worn_groups"]),
+            "rotations": float(w["rotations"]),
+            "remap_energy_pj": w["remap_energy_pj"],
+        })
+    if "prefix" in report:
+        p = report["prefix"]
+        row.update({
+            "prefix_hit_rate": p["hit_rate"],
+            "linked_admissions": float(p["linked_admissions"]),
+            "linked_cols": float(p["linked_cols"]),
+            "prefix_net_saved_pj": p["net_energy_saved_pj"],
+        })
+    return row
+
+
+def join_reports(entries: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    """Merge per-(mix, arm) serve reports into one frontier table.
+
+    ``entries`` rows carry {mix, name, pressure, arm, report}; the joined
+    table is {"columns": [...], "rows": [...]} with every row flattened
+    to scalars — one table a human or the BENCH json can scan across the
+    whole ramp × knob grid."""
+    rows = []
+    for e in entries:
+        row = {"mix": e["mix"], "name": e["name"],
+               "pressure": round(float(e["pressure"]), 4),
+               "arm": e["arm"]}
+        row.update(flatten_report(e["report"]))
+        rows.append(row)
+    columns: List[str] = []
+    for r in rows:
+        for k in r:
+            if k not in columns:
+                columns.append(k)
+    return {"columns": columns, "rows": rows}

@@ -516,3 +516,8 @@ class TestRepoInvariants:
         assert rs.SCHEDULER_SCRUB_PASS_OFFSET == 1_000_000
         assert rs.CHECKPOINT_RESTORE_OFFSET == 4_000_037
         assert rs.RESTORE_SCRUB_OFFSET == 1_000_003
+        # ISSUE 8: the workload-event stream joined the registry (and
+        # validate() grew range-overlap checking) — existing pinned
+        # values above must not have moved
+        assert rs.WORKLOAD_OFFSET == 5_000_011
+        assert rs.INDEX_SPAN == 1_000_000
