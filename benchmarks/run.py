@@ -27,7 +27,7 @@ from benchmarks import (endurance_sweep, fig2_switching, fig6_thermal,
                         fig12_waveform, fig13_access, fig14_energy,
                         fig15_variation, kernel_bench, prefix_reuse,
                         retention_sweep, serving_energy, table1,
-                        workload_mixes)
+                        telemetry_overhead, workload_mixes)
 
 BENCHES = {
     "table1": lambda fast: table1.run(),
@@ -52,6 +52,8 @@ BENCHES = {
     "prefix_reuse": lambda fast: prefix_reuse.run(n=12 if fast else 16),
     "workload_mixes": lambda fast: workload_mixes.run(
         events=4 if fast else 6),
+    "telemetry_overhead": lambda fast: telemetry_overhead.run(
+        repeats=4 if fast else 6),
 }
 
 #: the --quick profile: the curated sub-minute subset the CI bench-report
@@ -59,7 +61,7 @@ BENCHES = {
 #: accumulates (implies --fast; one invocation, one JSON)
 QUICK_BENCHES = ("table1", "fig6_thermal", "kernel_bench",
                  "retention_sweep", "endurance_sweep", "prefix_reuse",
-                 "workload_mixes")
+                 "workload_mixes", "telemetry_overhead")
 
 #: modules exposing ``bench_metrics(out)`` — the registration hook for the
 #: machine-readable report
@@ -70,6 +72,7 @@ _METRIC_FNS = {
     "endurance_sweep": endurance_sweep.bench_metrics,
     "prefix_reuse": prefix_reuse.bench_metrics,
     "workload_mixes": workload_mixes.bench_metrics,
+    "telemetry_overhead": telemetry_overhead.bench_metrics,
 }
 
 
@@ -117,6 +120,10 @@ def _headline(name: str, out) -> str:
                 f"{out['ramp'][-1]['pressure']:.2f} "
                 f"adversarial_worn none={adv['none']['worn_groups']:.0f} "
                 f"rotate={adv['rotate']['worn_groups']:.0f}")
+    if name == "telemetry_overhead":
+        return (f"overhead={out['overhead_frac']:+.3f} "
+                f"bit_exact={out['claims']['bit_exact_tokens']} "
+                f"drains/event={out['telemetry']['drains_per_event']:g}")
     return ""
 
 

@@ -4,6 +4,7 @@ module here, import it below, give it fixture coverage in
 tests/test_analysis.py (one true positive, one true negative, one waiver
 case — the acceptance bar every rule meets)."""
 from repro.analysis.rules import host_sync  # noqa: F401
+from repro.analysis.rules import metrics_discipline  # noqa: F401
 from repro.analysis.rules import operand_discipline  # noqa: F401
 from repro.analysis.rules import pytree_carry  # noqa: F401
 from repro.analysis.rules import registry_discipline  # noqa: F401

@@ -36,7 +36,8 @@ NUMPY_CTORS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
 SYNC_METHODS = {"item", "block_until_ready"}
 COERCIONS = {"float", "int", "bool"}
 
-ZONE_PREFIXES = ("src/repro/serve/", "src/repro/reliability/")
+ZONE_PREFIXES = ("src/repro/serve/", "src/repro/reliability/",
+                 "src/repro/telemetry/")
 
 
 def _sync_name(call: ast.Call) -> str:

@@ -10,7 +10,8 @@ Continuous batching over an arrival stream (the default):
        --scrub-interval 8 --scrub-cols 0] \
       [--wear-policy rotate --endurance-budget 100 --remap-group-cols 8] \
       [--prefix-cache --prefix-chunk 8 --prefix-table-size 256 \
-       --shared-prefix 8]
+       --shared-prefix 8] \
+      [--metrics-out metrics.prom --trace-timeline timeline.json]
 
 Trace-driven workloads (repro.workload):
 
@@ -48,7 +49,11 @@ content-addressable prefix cache (``repro.serve.prefix``): admission
 matches each request's leading prompt chunks against a CAM-style table
 and links hits to already-resident KV columns instead of re-writing them;
 ``--shared-prefix N`` makes the synthetic arrival stream share its first
-N prompt tokens so the cache has something to hit.
+N prompt tokens so the cache has something to hit. ``--metrics-out`` /
+``--trace-timeline`` enable ``repro.telemetry``: end-of-run metrics
+(Prometheus text or annotated JSON) and a per-request span timeline as
+Chrome trace-event JSON that opens directly in Perfetto — telemetry off
+(the default) runs bit-identically and writes no files.
 """
 from __future__ import annotations
 
@@ -149,6 +154,16 @@ def main():
     ap.add_argument("--trace-record", default=None, metavar="PATH",
                     help="record the served arrival stream as a "
                          "replayable trace file")
+    # observability (repro.telemetry): either flag turns telemetry on;
+    # off (the default) is bit-identical and writes NO files
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write end-of-run metrics (Prometheus text, or "
+                         "the annotated JSON document when PATH ends in "
+                         ".json); enables telemetry")
+    ap.add_argument("--trace-timeline", default=None, metavar="PATH",
+                    help="write the per-request span timeline as Chrome "
+                         "trace-event JSON (open in Perfetto / "
+                         "chrome://tracing); enables telemetry")
     # arrival-stream simulation
     ap.add_argument("--requests", type=int, default=6,
                     help="number of requests in the arrival stream")
@@ -167,6 +182,21 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+
+    telemetry = None
+    if args.metrics_out or args.trace_timeline:
+        from repro.telemetry import Telemetry
+        telemetry = Telemetry()
+
+    def export_telemetry(snapshot) -> None:
+        from repro.telemetry import write_metrics, write_timeline
+        if args.metrics_out:
+            p = write_metrics(snapshot, args.metrics_out)
+            print(f"metrics -> {p}")
+        if args.trace_timeline:
+            p = write_timeline(snapshot, args.trace_timeline)
+            print(f"timeline -> {p} (open in https://ui.perfetto.dev "
+                  f"or chrome://tracing)")
 
     retention_scale = args.retention_scale
     if args.scrub_policy != "none" and retention_scale == 0.0:
@@ -204,7 +234,7 @@ def main():
         max_seq = args.prompt_len + args.new_tokens + (
             cfg.num_image_tokens if cfg.family == "vlm" else 0)
         eng = ServingEngine(cfg, serve_cfg(max_seq))
-        toks, report = eng.generate(prompt)
+        toks, report = eng.generate(prompt, telemetry=telemetry)
         print(f"generated {toks.shape} tokens; first row: "
               f"{[int(t) for t in toks[0][:8]]}...")
         if not args.no_extent:
@@ -217,6 +247,8 @@ def main():
                 print(f"soft errors: {tot['soft_strikes']} strikes at "
                       f"BER {args.soft_error_ber:.1e} "
                       f"({'hardened' if not args.soft_error_unhardened else 'unhardened'} driver)")
+        if telemetry is not None:
+            export_telemetry(telemetry.snapshot())
         return
 
     # ----- continuous batching over an arrival stream: a replayed trace,
@@ -284,7 +316,8 @@ def main():
             hot_row_wear=args.hot_row_wear)
     sch = ContinuousScheduler(eng, capacity=args.capacity,
                               scrub_policy=scrub_policy,
-                              wear_policy=wear_policy)
+                              wear_policy=wear_policy,
+                              telemetry=telemetry)
     # every stream is recordable/scorable: the synthetic default is read
     # back into a trace (one host read per request, pre-serve), trace and
     # workload modes already have one
@@ -299,79 +332,19 @@ def main():
           f"pressure={pressure_score(rec):.4f}")
     report = sch.run(reqs)
 
-    print(f"served {len(report['requests'])} requests in "
-          f"{report['clock_steps']} steps "
-          f"({report['bursts']} compiled decode bursts, pool "
-          f"{report['pool']['capacity']} slots, peak occupancy "
-          f"{report['pool']['peak_occupancy']})")
-    for rid in sorted(report["requests"]):
-        r = report["requests"][rid]
-        print(f"  req {rid} app={str(r['app_id']):10s} q={r['quality']:5s} "
-              f"arrived {r['arrival_step']:3d} queued {r['queue_steps']:2d} "
-              f"latency {r['latency_steps']:3d} tokens {r['n_tokens']:3d} "
-              f"E={r['energy_pj']/1e3:8.1f} nJ BER={r['ber']:.2e}")
-    if not args.no_extent:
-        tot = report["total"]
-        tbl = report["extent_table"]
-        label = ("KV energy (all streams)" if "lifetime" in report
-                 else "KV write energy")
-        print(f"{label} {tot['energy_pj']/1e6:.3f} uJ "
-              f"(backend={args.backend}), "
-              f"skip-rate {tot['write_skip_rate']:.3f}, "
-              f"BER {tot['ber_realized']:.2e}")
-        if args.soft_error_ber > 0:
-            print(f"soft errors: {tot['soft_strikes']} strikes at "
-                  f"BER {args.soft_error_ber:.1e} "
-                  f"({'hardened' if not args.soft_error_unhardened else 'unhardened'} driver)")
-        # headline = SERVE-scope traffic only: folding background scrub
-        # lookups (near-100% hits) into the hit rate is exactly the
-        # double-counting the scope accumulator exists to prevent
-        srv = tbl.get("scopes", {}).get(
-            "serve", {"hits": tbl["hits"], "misses": tbl["misses"],
-                      "evictions": tbl["evictions"]})
-        n_srv = srv["hits"] + srv["misses"]
-        print(f"EXTENT table (serve): {srv['hits']} hits / "
-              f"{srv['misses']} misses "
-              f"(hit rate {srv['hits'] / n_srv if n_srv else 0.0:.2f}), "
-              f"{srv['evictions']} evictions")
-        for scope, c in sorted(tbl.get("scopes", {}).items()):
-            if scope != "serve":
-                print(f"  [{scope}] {c['hits']} hits / "
-                      f"{c['misses']} misses")
-    if "prefix" in report:
-        p = report["prefix"]
-        print(f"prefix cache (chunk {p['chunk']}, table "
-              f"{p['table_size']}): hits={p['hits']} "
-              f"misses={p['misses']} (hit rate {p['hit_rate']:.2f}), "
-              f"{p['linked_admissions']} linked admissions "
-              f"({p['linked_cols']} cols), {p['stale_drops']} stale "
-              f"drops, {p['evictions']} evictions")
-        print(f"  write energy saved {p['write_energy_saved_pj']/1e3:.1f}"
-              f" nJ - cow {p['cow_energy_pj']/1e3:.1f} nJ "
-              f"({p['cow_events']} events) - cam search "
-              f"{p['cam_energy_pj']/1e3:.3f} nJ = net "
-              f"{p['net_energy_saved_pj']/1e3:.1f} nJ")
-    if "lifetime" in report:
-        lt = report["lifetime"]
-        print(f"lifetime ledger @ {lt['ambient_k']:.0f} K "
-              f"(dwell {lt['dwell_s_per_step']:.0f} s/step, "
-              f"policy {lt['scrub_policy']}): "
-              f"write {lt['write_energy_pj']/1e6:.3f} uJ + "
-              f"scrub {lt['scrub_energy_pj']/1e6:.3f} uJ + "
-              f"remap {lt['remap_energy_pj']/1e6:.3f} uJ = "
-              f"{lt['lifetime_energy_pj']/1e6:.3f} uJ; "
-              f"{lt['retention_flips']} retention flips, "
-              f"{lt['residual_decayed_bits']} still decayed after "
-              f"{lt['scrub_passes']} scrub passes")
-    if "wear" in report:
-        w = report["wear"]
-        print(f"wear leveling (policy {w['policy']}, group "
-              f"{w['group_cols']} cols, budget "
-              f"{w['endurance_budget'] or 'unbounded'}): "
-              f"rotations={w['rotations']}, "
-              f"max group wear {w['max_group_wear']}, "
-              f"worn groups {w['worn_groups']}, "
-              f"remap {w['remap_energy_pj']/1e6:.3f} uJ")
+    # ONE rendering path (repro.telemetry.report): every summary section
+    # the scheduler emits surfaces here — known sections keep their
+    # established line formats, unknown ones print through the fallback
+    # instead of being silently dropped
+    from repro.telemetry import render_report
+    for line in render_report(
+            report, backend=args.backend,
+            show_extent=not args.no_extent,
+            soft_error_ber=args.soft_error_ber,
+            soft_error_hardened=not args.soft_error_unhardened):
+        print(line)
+    if telemetry is not None:
+        export_telemetry(report["telemetry"])
 
 
 if __name__ == "__main__":

@@ -55,6 +55,11 @@ class ScrubPolicy:
         self.last_pass = 0
         self.passes = 0
 
+    def describe(self) -> dict:
+        """Static policy identity for telemetry span args / reports."""
+        return {"policy": self.name, "interval": self.interval,
+                "cols_per_pass": self.cols_per_pass}
+
     def plan_pass(self, clock: int,
                   levels: Sequence[Optional[Priority]], *,
                   idle: bool = False

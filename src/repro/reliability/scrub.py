@@ -181,3 +181,17 @@ def scrub_tree(
         last_scrub_step=jnp.where(scrubbed > 0, state.step,
                                   state.last_scrub_step))
     return treedef.unflatten(out), state2, acc
+
+
+def scrub_span_args(stats: WriteStats, policy, *, cols: int,
+                    floor, resident: Sequence[int]) -> dict:
+    """Telemetry attribution for one scrub pass's background span
+    (``repro.telemetry``): the policy identity, the window width, the
+    quality floor the re-writes were driven at, and the co-resident
+    requests the pass interferes with. ``stats.energy_pj`` stays a LAZY
+    device reference — the tracer resolves it in the one batched
+    finalize transfer, never here."""
+    return {**policy.describe(), "cols": int(cols or 0),
+            "floor": getattr(floor, "name", str(floor)),
+            "energy_pj": stats.energy_pj,
+            "resident": list(resident)}

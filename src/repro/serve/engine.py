@@ -486,7 +486,7 @@ class ServingEngine:
 
     def generate(self, batch: Dict[str, jax.Array],
                  max_new_tokens: Optional[int] = None, *,
-                 sync_stats: bool = True
+                 sync_stats: bool = True, telemetry: Any = None
                  ) -> Tuple[jax.Array, Dict[str, Any]]:
         """Prefill `batch` then decode. Returns (tokens (B, T_new),
         report{energy, errors, tokens/s-shape stats}).
@@ -499,6 +499,11 @@ class ServingEngine:
         device accumulators are returned under ``report["device_stats"]``
         (used by the no-transfer test and by callers batching many
         generates before accounting).
+
+        ``telemetry`` (a ``repro.telemetry.Telemetry``) adds the
+        monolithic run's prefill/decode spans and one instrument drain —
+        the compiled computation and the RNG schedule are untouched, so
+        tokens and stats stay bit-identical with it on or off.
         """
         mnt = max_new_tokens or self.scfg.max_new_tokens
         key = jax.random.PRNGKey(self.scfg.seed + 1)
@@ -539,6 +544,26 @@ class ServingEngine:
         else:
             tokens = tok[:, None]
 
+        if telemetry is not None:
+            # the batch's span pair on the serve lane plus ONE drain at
+            # the end of the generate (the monolithic "event"); energy
+            # args stay lazy device refs until finalize
+            ins = telemetry.instruments
+            ins.bind("serve_prefill_energy_pj_total",
+                     lambda: pre_acc.energy_pj)
+            ins.bind("serve_decode_energy_pj_total",
+                     lambda: acc.energy_pj)
+            root = telemetry.tracer.begin(
+                f"generate[B={B}]", 0, track="batch", cat="request")
+            telemetry.tracer.complete(
+                "prefill", 0, 0, track="batch", parent=root,
+                energy_pj=pre_acc.energy_pj)
+            telemetry.tracer.complete(
+                "decode", 0, mnt - 1, track="batch", parent=root,
+                steps=mnt - 1, energy_pj=acc.energy_pj)
+            telemetry.tracer.end(root, mnt - 1)
+            telemetry.event(mnt - 1, serve_pool_occupancy=B,
+                            serve_queue_depth=0)
         if not sync_stats:
             rep = {"device_stats": {"kv_prefill": pre_acc,
                                     "kv_decode": acc},

@@ -75,6 +75,13 @@ class PrefixMatch:
     cols: int
     tokens: int
 
+    def span_args(self) -> Dict[str, int]:
+        """Telemetry attribution for a linked admission's prefill span
+        (``repro.telemetry``): which resident slot the prefix linked to
+        and how many columns the link covers."""
+        return {"linked_owner": self.slot, "linked_cols": self.cols,
+                "linked_tokens": self.tokens}
+
 
 class PrefixCache:
     """Bounded-LRU CAM model mapping prompt-prefix digests to resident

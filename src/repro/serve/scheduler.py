@@ -42,6 +42,7 @@ from repro.memory import WriteStats, rng_streams
 from repro.serve.engine import ServingEngine
 from repro.serve.prefix import PrefixCache, PrefixConfig, PrefixMatch
 from repro.serve.slots import SlotPool
+from repro.telemetry import LANE_BACKGROUND, Lazy, Telemetry
 
 
 @dataclasses.dataclass
@@ -168,13 +169,19 @@ class ContinuousScheduler:
                  scrub_policy: Optional[Any] = None,
                  ambient_schedule: Optional[Sequence[Tuple[int, float]]]
                  = None,
-                 wear_policy: Optional[Any] = None):
+                 wear_policy: Optional[Any] = None,
+                 telemetry: Optional[Telemetry] = None):
         assert capacity >= 1
         self.eng = engine
         self.pool = SlotPool(engine.api, capacity, engine.scfg.max_seq)
         self.max_burst = max_burst
         self.scrub_policy = scrub_policy
         self.wear_policy = wear_policy
+        # observability is strictly additive: with ``telemetry=None`` no
+        # instrument/span/drain exists anywhere in the loop, and with it
+        # on, the compiled bursts and the RNG key schedule are untouched
+        # — tokens and WriteStats stay bit-identical either way
+        self.tele = telemetry
         self.ambient_schedule = (sorted(ambient_schedule)
                                  if ambient_schedule else None)
         self.life = None  # LifetimeState, owned per run()
@@ -218,6 +225,48 @@ class ContinuousScheduler:
             if r is not None:
                 floor = max(floor, self._level[r.rid])
         return Priority(floor)
+
+    # ----------------------------------------------------------- telemetry
+    def _bind_telemetry(self) -> None:
+        """Bind the registry's device-resident metrics to the run's
+        scan-carried ``WriteStats`` accumulators. The accumulators ARE
+        the hot-path instruments — binding adds no device work; each
+        per-event ``Telemetry.event`` drain reads these views in one
+        batched transfer."""
+        ins = self.tele.instruments
+        ins.bind("serve_prefill_energy_pj_total",
+                 lambda: self._acc_prefill.energy_pj)
+        ins.bind("serve_decode_energy_pj_total",
+                 lambda: self._acc_decode.energy_pj)
+        ins.bind("serve_scrub_energy_pj_total",
+                 lambda: self._acc_scrub.energy_pj)
+        ins.bind("serve_remap_energy_pj_total",
+                 lambda: self._acc_remap.energy_pj)
+        # tuple providers: the parts cross in the same batched transfer
+        # and sum on host — a drain never dispatches a device op
+        ins.bind("serve_flips_total",
+                 lambda: (self._acc_prefill.flips01,
+                          self._acc_prefill.flips10,
+                          self._acc_decode.flips01,
+                          self._acc_decode.flips10))
+        ins.bind("serve_bit_errors_total",
+                 lambda: (self._acc_prefill.errors,
+                          self._acc_decode.errors))
+        if self.eng.life_plan is not None:
+            ins.bind("serve_retention_flips_total",
+                     lambda: self.life.retention_flips)
+
+    def _event_gauges(self, clock: int, pending) -> Dict[str, float]:
+        ambient = self._ambient_at(clock)
+        return {
+            **self.pool.telemetry_gauges(),
+            "serve_queue_depth": len(pending),
+            "serve_ambient_k": (ambient if ambient is not None
+                                else self.eng.scfg.ambient_k),
+        }
+
+    def _req_track(self, rid: int) -> str:
+        return f"req {rid}"
 
     # ----------------------------------------------------------- reliability
     def _ambient_at(self, clock: int) -> Optional[float]:
@@ -272,6 +321,20 @@ class ContinuousScheduler:
                 k, self.pool.cache, self.life, vectors, cursor,
                 enabled=enabled, cols=cols)
         self._acc_scrub = self._acc_scrub + st
+        if self.tele is not None:
+            # scrub interference is visible on the background lane over
+            # the same clock; the co-resident requests it contends with
+            # are named in the span args. The pass energy is a lazy
+            # device ref resolved at finalize — no sync here.
+            from repro.reliability.scrub import scrub_span_args
+            self.tele.instruments.inc("serve_scrub_passes_total")
+            self.tele.tracer.complete(
+                "scrub_pass", clock, clock, lane=LANE_BACKGROUND,
+                track="scrub", cat="reliability",
+                **scrub_span_args(
+                    st, policy, cols=cols or 0, floor=Priority(floor),
+                    resident=[self.pool.slot_req[i].rid
+                              for i in self.pool.occupied()]))
         policy.record(clock)
         self._scrub_passes += 1
         if cols:
@@ -307,6 +370,11 @@ class ContinuousScheduler:
             (self.life.row_wear(),
              eng._slot_scores(self.life, self.pool.cache)))
         self._slot_scores_host = scores
+        if self.tele is not None:
+            self.tele.tracer.complete(
+                "wear_check", clock, clock, lane=LANE_BACKGROUND,
+                track="wear", cat="reliability",
+                max_group_wear=int(wear.max()))
         if pol is not None and pol.plan_rotation(clock, wear):
             self.addr = self.addr.rotate(self._rotatable, pol.rotate_step)
             self._acc_remap = self._acc_remap + self._remap_stats()
@@ -317,6 +385,13 @@ class ContinuousScheduler:
                 pol.rotate_step)
             self._gap_host += pol.rotate_step
             pol.record(clock, wear)
+            if self.tele is not None:
+                self.tele.instruments.inc("serve_wear_rotations_total")
+                self.tele.tracer.complete(
+                    "remap_rotation", clock, clock,
+                    lane=LANE_BACKGROUND, track="wear",
+                    cat="reliability", rotate_step=pol.rotate_step,
+                    migration_energy_pj=float(self._remap_cost[0]))
 
     def wear_state(self) -> Dict[str, Any]:
         """Portable wear snapshot — the physical address map and the
@@ -368,7 +443,7 @@ class ContinuousScheduler:
                 self.pool.cache, cols)
         return p
 
-    def _cow_owner(self, owner: int) -> None:
+    def _cow_owner(self, owner: int, clock: int = 0) -> None:
         """Copy-on-write detach of every linker of ``owner``: the moment
         the linkers' own rows are actually driven. Books one full column
         write per detached linker — energy via the same pricing the link
@@ -379,6 +454,12 @@ class ContinuousScheduler:
             self._acc_cow = self._acc_cow + WriteStats.for_bits(
                 bits, energy_pj=jnp.asarray(pj, jnp.float32))
             self._cow_events += 1
+            if self.tele is not None:
+                self.tele.instruments.inc("serve_cow_events_total")
+                self.tele.tracer.complete(
+                    "cow_detach", clock, clock, lane=LANE_BACKGROUND,
+                    track="prefix", cat="prefix", owner=owner,
+                    linker=linker, cols=cols, energy_pj=pj)
             if self.eng.wear and self.life is not None:
                 self.life = self.eng._life_admit(
                     self.life, self.pool.cache,
@@ -387,7 +468,7 @@ class ContinuousScheduler:
                     jnp.asarray([cols], jnp.int32), self.addr.shifts)
 
     def _make_room(self, n: int, matches: List[Optional[PrefixMatch]],
-                   exclude: set) -> None:
+                   exclude: set, clock: int = 0) -> None:
         """Guarantee ``n`` allocatable slots before ``alloc``: first CoW
         link-blocked free slots (cheapest first = lowest id), then drop
         matches whose owner exclusion is starving capacity. Terminates:
@@ -397,7 +478,7 @@ class ContinuousScheduler:
             blocked = [i for i in self.pool.blocked_free()
                        if i not in exclude]
             if blocked:
-                self._cow_owner(blocked[0])
+                self._cow_owner(blocked[0], clock)
                 continue
             dropped = False
             for j, m in enumerate(matches):
@@ -410,7 +491,8 @@ class ContinuousScheduler:
                     exclude.discard(m.slot)
                     if (self.pool.col_refs[m.slot] > 0
                             and self.pool.slot_req[m.slot] is None):
-                        self._cow_owner(m.slot)  # free but still blocked
+                        # free but still blocked
+                        self._cow_owner(m.slot, clock)
                 dropped = True
                 break
             assert dropped, (n, sorted(exclude))
@@ -445,7 +527,7 @@ class ContinuousScheduler:
             if self.prefix is not None:
                 matches, sigs = self._resolve_prefix(group)
                 exclude = {m.slot for m in matches if m is not None}
-                self._make_room(len(group), matches, exclude)
+                self._make_room(len(group), matches, exclude, clock)
             # wear-aware admission: HIGH-quality requests steer away from
             # slots backed by high-wear / high-residual-decay rows (scores
             # from the last wear checkpoint — no extra sync here). LOW/MID
@@ -526,6 +608,35 @@ class ContinuousScheduler:
                 self._tokens[r.rid] = [(tok, j, 1)]
                 self._remaining[r.rid] = r.new_tokens - 1
                 self._admitted[r.rid] = clock
+            if self.tele is not None:
+                # per-request span tree: root (arrival->completion) with
+                # queue + prefill children. Prefill energy attribution is
+                # the group accumulator's even split, kept as a lazy
+                # device ref until finalize.
+                self.tele.instruments.inc("serve_admissions_total",
+                                          len(group))
+                share = Lazy(lambda e, k=len(group): e / k,
+                             acc.energy_pj)
+                for j, r in enumerate(group):
+                    track = self._req_track(r.rid)
+                    root = self.tele.tracer.begin(
+                        f"req {r.rid}", r.arrival, track=track,
+                        cat="request", rid=r.rid, app_id=str(r.app_id),
+                        quality=self._level[r.rid].name)
+                    self._req_span[r.rid] = root
+                    self.tele.tracer.complete(
+                        "queue", r.arrival, clock, track=track,
+                        cat="request", parent=root)
+                    m = matches[j]
+                    pargs = dict(group=len(group), slot=ids[j],
+                                 energy_pj=share)
+                    if m is not None:
+                        self.tele.instruments.inc(
+                            "serve_prefix_linked_total")
+                        pargs.update(m.span_args())
+                    self.tele.tracer.complete(
+                        "prefill", clock, clock, track=track,
+                        cat="prefill", parent=root, **pargs)
             n_done += self._complete(clock)
         return key, n_done
 
@@ -576,6 +687,23 @@ class ContinuousScheduler:
                 "flips": flips, "errors": errors,
                 "ber": errors / max(flips, 1.0),
             }
+            if self.tele is not None:
+                rep = self._reports[r.rid]
+                ins = self.tele.instruments
+                ins.inc("serve_completions_total")
+                ins.observe("serve_request_latency_steps",
+                            rep["latency_steps"])
+                ins.observe("serve_request_queue_steps",
+                            rep["queue_steps"])
+                root = self._req_span.pop(r.rid, None)
+                if root is not None:
+                    # slot release IS the eviction: the root span closes
+                    # with the request's attributed energy/flips/WER
+                    # (host floats — this event's sync already paid)
+                    self.tele.tracer.end(
+                        root, clock, slot=i, n_tokens=len(toks),
+                        energy_pj=rep["energy_pj"], flips=flips,
+                        errors=errors, ber=rep["ber"])
             # drop the lazy fragments: retaining them would pin every
             # burst's device token array for the scheduler's lifetime
             del self._tokens[r.rid]
@@ -616,6 +744,9 @@ class ContinuousScheduler:
         self._linked_admissions = 0
         self._linked_cols = 0
         self._cow_events = 0
+        self._req_span: Dict[int, int] = {}
+        if self.tele is not None:
+            self._bind_telemetry()
         self._alias_cost_cache: Dict[int, Tuple[float, int]] = {}
         if self.prefix is not None:
             self.prefix.reset_stats()  # same contract as the extent table
@@ -674,6 +805,9 @@ class ContinuousScheduler:
                         and pool.free_slots()):
                     break
             if not pool.busy():
+                if self.tele is not None:
+                    self.tele.event(clock,
+                                    **self._event_gauges(clock, pending))
                 continue
             # burst until the next scheduler event: earliest completion,
             # next arrival, or the optional compile-bounding cap
@@ -695,6 +829,10 @@ class ContinuousScheduler:
                         n = min(n, step - clock)
                         break
             n = max(int(n), 1)
+            # device ref to the pre-burst decode energy: the burst span's
+            # energy delta is computed lazily against it (no sync)
+            e_before = (self._acc_decode.energy_pj
+                        if self.tele is not None else None)
             active = pool.active_mask()
             vectors = eng.vectors_for_floor(self._floor())
             if eng.wear:
@@ -726,9 +864,35 @@ class ContinuousScheduler:
             clock += n
             decode_steps += n
             bursts += 1
+            if self.tele is not None:
+                ins = self.tele.instruments
+                ins.inc("serve_bursts_total")
+                ins.inc("serve_decode_steps_total", n)
+                ins.observe("serve_burst_steps", n)
+                # Lazy derivations: the delta/split arithmetic runs on
+                # host floats at finalize — the burst path records two
+                # array refs and dispatches nothing
+                e_after = self._acc_decode.energy_pj
+                burst_e = Lazy(lambda a, b: a - b, e_after, e_before)
+                share = Lazy(lambda a, b, k=len(active_ids): (a - b) / k,
+                             e_after, e_before)
+                self.tele.tracer.complete(
+                    "burst", clock - n, clock, track="pool",
+                    cat="decode", steps=n, active=len(active_ids),
+                    energy_pj=burst_e)
+                for i in active_ids:
+                    rid = pool.slot_req[i].rid
+                    self.tele.tracer.complete(
+                        "decode", clock - n, clock,
+                        track=self._req_track(rid), cat="decode",
+                        parent=self._req_span.get(rid),
+                        steps=n, energy_pj=share)
             self._complete(clock)
             self._maybe_scrub(clock, key)
             self._maybe_wear_check(clock)
+            if self.tele is not None:
+                self.tele.event(clock,
+                                **self._event_gauges(clock, pending))
 
         # ----- aggregate ledger: ONE final device->host sync covering the
         # stream accumulators AND the lifetime/wear counters (bits_total
@@ -822,4 +986,9 @@ class ContinuousScheduler:
                 "endurance_budget": eng.scfg.endurance_budget,
                 "group_cols": eng.scfg.remap_group_cols,
             }
+        if self.tele is not None:
+            # the telemetry section rides the summary so every consumer
+            # (launcher, workload harness, benchmarks) sees ONE snapshot
+            # instead of re-assembling its own
+            summary["telemetry"] = self.tele.snapshot()
         return summary

@@ -252,3 +252,8 @@ class SlotPool:
                 "completions": self.completions,
                 "peak_occupancy": self.peak_occupancy,
                 "occupancy": self.capacity - len(self._free)}
+
+    def telemetry_gauges(self) -> Dict[str, int]:
+        """The pool's per-event gauge sample (``repro.telemetry``) — all
+        host free-list metadata, no device traffic."""
+        return {"serve_pool_occupancy": self.capacity - len(self._free)}

@@ -1,0 +1,297 @@
+"""Central metric registry + device-resident instruments.
+
+The registry mirrors ``memory/rng_streams.py``: every counter, gauge and
+histogram the serving stack emits is declared ONCE, at import, with a
+name, unit and doc line; a second declaration under the same name raises
+at import time, so two subsystems can never silently fight over a series.
+Naming follows Prometheus conventions — ``snake_case``, a ``serve_``
+subsystem prefix, monotone counters end in ``_total``, and the unit is
+part of the name when it isn't obvious (``_pj``, ``_steps``, ``_k``).
+
+``Instruments`` is the runtime half. Host-side metadata (admission
+counts, queue depth, clock) lives in plain Python floats — it is already
+host data on the scheduler's control path, no device traffic involved.
+Hot-path metrics (write energy, flips, bit errors) are NOT accumulated
+here at all: the scan-carried ``WriteStats`` pytrees the serving stack
+already threads through every burst ARE the device-resident instruments.
+``bind()`` registers a zero-argument provider returning a device scalar
+view of those accumulators, and ``drain()`` — called once per scheduler
+event — *captures* references to every bound provider's value. The
+arrays are immutable, so each drain pins exactly the event's values
+with zero transfers, zero op dispatch and zero blocking (a blocking
+read per event would serialize the scheduler against the device's
+async burst pipeline and cost far more than 5% wall time);
+``resolve()`` lands all queued drains at finalize, off the serving
+path, through one waived per-leaf host read (``_land``).
+Nothing here may run inside a traced region (the ``metrics-discipline``
+lint rule enforces that).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+COUNTER = "counter"
+GAUGE = "gauge"
+HISTOGRAM = "histogram"
+
+_KINDS = (COUNTER, GAUGE, HISTOGRAM)
+
+
+def _land(v) -> float:
+    """Bring one captured device scalar — or a tuple provider's parts,
+    summed — to the host. Only ``resolve()`` calls this, after the run:
+    the arrays are long since computed (and ``jax.Array`` caches its
+    host value), so this is a cached read, not a sync point. A plain
+    per-leaf ``np.asarray`` beats a batched ``jax.device_get`` here —
+    the tree flatten + per-leaf profiler hooks cost more than the
+    copies themselves at instrument-scalar sizes."""
+    if isinstance(v, (tuple, list)):
+        return float(sum(_land(x) for x in v))
+    # repro: allow(no-host-sync-in-scan): THE end-of-run landing of the per-event async instrument drains (the telemetry sync budget, audited by the drain counter)
+    return float(np.asarray(v))
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One declared metric: the registry row."""
+    name: str
+    kind: str
+    unit: str
+    doc: str
+    buckets: Optional[Tuple[float, ...]] = None  # histogram upper edges
+
+    def __post_init__(self):
+        assert self.kind in _KINDS, self.kind
+        if self.kind == HISTOGRAM:
+            assert self.buckets, f"histogram {self.name} needs buckets"
+            assert list(self.buckets) == sorted(set(self.buckets)), \
+                f"histogram {self.name} buckets must be strictly increasing"
+        else:
+            assert self.buckets is None, \
+                f"{self.kind} {self.name} cannot carry buckets"
+
+
+class MetricRegistry:
+    """Declare-once metric namespace. Collisions raise immediately —
+    at import time for the module-level ``REGISTRY`` below."""
+
+    def __init__(self):
+        self._specs: Dict[str, MetricSpec] = {}
+
+    def _declare(self, spec: MetricSpec) -> MetricSpec:
+        if spec.name in self._specs:
+            raise ValueError(
+                f"metric {spec.name!r} already declared "
+                f"({self._specs[spec.name].kind}); registry names are "
+                f"declare-once")
+        self._specs[spec.name] = spec
+        return spec
+
+    def counter(self, name: str, unit: str, doc: str) -> MetricSpec:
+        if not name.endswith("_total"):
+            raise ValueError(
+                f"counter {name!r} must end in '_total' (monotone series "
+                f"are named as such so dashboards can rate() them)")
+        return self._declare(MetricSpec(name, COUNTER, unit, doc))
+
+    def gauge(self, name: str, unit: str, doc: str) -> MetricSpec:
+        return self._declare(MetricSpec(name, GAUGE, unit, doc))
+
+    def histogram(self, name: str, unit: str, doc: str,
+                  buckets: Sequence[float]) -> MetricSpec:
+        return self._declare(MetricSpec(name, HISTOGRAM, unit, doc,
+                                        tuple(float(b) for b in buckets)))
+
+    def spec(self, name: str) -> MetricSpec:
+        return self._specs[name]
+
+    def specs(self) -> Dict[str, MetricSpec]:
+        return dict(self._specs)
+
+    def validate(self) -> None:
+        """Cross-row invariants (the rng_streams.validate() analogue)."""
+        for s in self._specs.values():
+            assert s.name.isidentifier() or "_" in s.name, s.name
+            assert s.unit, f"metric {s.name} has no unit"
+            assert s.doc, f"metric {s.name} has no doc"
+
+
+#: The process-wide registry. Every serving metric is declared HERE, next
+#: to its unit and doc — the one place to audit what the stack can emit.
+REGISTRY = MetricRegistry()
+
+# --- host-side counters (scheduler control-path metadata) -------------
+REGISTRY.counter("serve_events_total", "events",
+                 "scheduler loop events (one instrument drain each)")
+REGISTRY.counter("serve_admissions_total", "requests",
+                 "requests admitted into the slot pool")
+REGISTRY.counter("serve_completions_total", "requests",
+                 "requests retired with their token budget spent")
+REGISTRY.counter("serve_bursts_total", "bursts",
+                 "compiled decode bursts dispatched")
+REGISTRY.counter("serve_decode_steps_total", "steps",
+                 "decode steps executed across all bursts")
+REGISTRY.counter("serve_scrub_passes_total", "passes",
+                 "background corrective-scrub passes run")
+REGISTRY.counter("serve_wear_rotations_total", "rotations",
+                 "wear-leveling remap rotations")
+REGISTRY.counter("serve_cow_events_total", "events",
+                 "prefix-cache copy-on-write detaches")
+REGISTRY.counter("serve_prefix_linked_total", "admissions",
+                 "admissions that linked a cached prompt prefix")
+
+# --- gauges (sampled once per scheduler event) ------------------------
+REGISTRY.gauge("serve_pool_occupancy", "slots",
+               "occupied slots at the event boundary")
+REGISTRY.gauge("serve_queue_depth", "requests",
+               "requests arrived but not yet admitted")
+REGISTRY.gauge("serve_clock_steps", "steps",
+               "the serving clock (decode steps since run start)")
+REGISTRY.gauge("serve_ambient_k", "K",
+               "die ambient temperature driving the retention model")
+
+# --- device-resident counters (bound to WriteStats accumulators) ------
+REGISTRY.counter("serve_prefill_energy_pj_total", "pJ",
+                 "admission prefill write energy (device accumulator)")
+REGISTRY.counter("serve_decode_energy_pj_total", "pJ",
+                 "decode-burst write energy (device accumulator)")
+REGISTRY.counter("serve_scrub_energy_pj_total", "pJ",
+                 "background scrub write energy (device accumulator)")
+REGISTRY.counter("serve_remap_energy_pj_total", "pJ",
+                 "wear-rotation migration write energy (device)")
+REGISTRY.counter("serve_flips_total", "bits",
+                 "bit transitions driven (prefill + decode, device)")
+REGISTRY.counter("serve_bit_errors_total", "bits",
+                 "approximation write errors realized (device)")
+REGISTRY.counter("serve_retention_flips_total", "bits",
+                 "stored bits lost to retention decay (device)")
+
+# --- request-latency histograms (observed at completion) --------------
+REGISTRY.histogram("serve_request_latency_steps", "steps",
+                   "arrival->completion latency per request",
+                   buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256))
+REGISTRY.histogram("serve_request_queue_steps", "steps",
+                   "arrival->admission queue wait per request",
+                   buckets=(0, 1, 2, 4, 8, 16, 32, 64))
+REGISTRY.histogram("serve_burst_steps", "steps",
+                   "decode steps per compiled burst",
+                   buckets=(1, 2, 4, 8, 16, 32, 64))
+
+REGISTRY.validate()
+
+
+class Instruments:
+    """Runtime instrument surface over a registry.
+
+    Host ops (``inc``/``set``/``observe``) touch plain Python numbers.
+    Device metrics are *bound*, not pushed: ``bind(name, provider)``
+    where ``provider()`` returns a device scalar (a view into an existing
+    scan-carried accumulator); ``drain()`` starts one async host copy of
+    all of them, ``resolve()`` lands every queued drain in one batched
+    transfer. ``drains`` counts the per-event initiations so tests can
+    audit the one-drain-per-event contract.
+    """
+
+    def __init__(self, registry: Optional[MetricRegistry] = None):
+        self.registry = registry if registry is not None else REGISTRY
+        self._host: Dict[str, float] = {}
+        self._hist: Dict[str, Dict[str, Any]] = {}
+        self._bound: Dict[str, Callable[[], Any]] = {}
+        self._bound_last: Dict[str, float] = {}
+        self._queue: List[Any] = []  # (row, captured refs) per drain
+        self.drains = 0
+
+    # ------------------------------------------------------------ host ops
+    def _spec(self, name: str, kind: str) -> MetricSpec:
+        s = self.registry.spec(name)  # KeyError = undeclared metric
+        if s.kind != kind:
+            raise ValueError(f"{name} is a {s.kind}, not a {kind}")
+        return s
+
+    def inc(self, name: str, value: float = 1.0) -> None:
+        self._spec(name, COUNTER)
+        if value < 0:
+            raise ValueError(f"counter {name} cannot decrease")
+        self._host[name] = self._host.get(name, 0.0) + value
+
+    def set(self, name: str, value: float) -> None:
+        self._spec(name, GAUGE)
+        self._host[name] = float(value)
+
+    def observe(self, name: str, value: float) -> None:
+        s = self._spec(name, HISTOGRAM)
+        h = self._hist.get(name)
+        if h is None:
+            h = self._hist[name] = {
+                "counts": [0] * (len(s.buckets) + 1), "sum": 0.0,
+                "count": 0}
+        # bucket edges are inclusive upper bounds (Prometheus `le`)
+        h["counts"][bisect.bisect_left(s.buckets, value)] += 1
+        h["sum"] += float(value)
+        h["count"] += 1
+
+    # --------------------------------------------------------- device side
+    def bind(self, name: str, provider: Callable[[], Any]) -> None:
+        """Register a device-scalar provider for ``name``. The provider
+        is evaluated lazily at each ``drain()`` and must return either a
+        device scalar or a flat tuple/list of device scalars whose
+        host-side SUM is the metric value — references to accumulators
+        that already live on device, so a drain dispatches no device
+        ops at all (the arithmetic, if any, happens on host floats)."""
+        self.registry.spec(name)  # KeyError = undeclared metric
+        self._bound[name] = provider
+
+    def drain(self) -> Dict[str, float]:
+        """One per-event drain: snapshot the host metrics into a row and
+        capture references to every bound device metric (immutable
+        arrays — the values are pinned to this event even though they
+        cross to the host later). Pure bookkeeping: no transfer, no op
+        dispatch, no blocking. The returned row is completed in place by
+        ``resolve()``."""
+        row = dict(self._host)
+        if self._bound:
+            self._queue.append(
+                (row, {n: fn() for n, fn in self._bound.items()}))
+        self.drains += 1
+        return row
+
+    def resolve(self) -> None:
+        """Land every queued drain, completing each drain's row in place
+        with its event-time device values. Called from
+        ``Telemetry.finalize`` — after the run, when the results have
+        already arrived, so the landing is a sequence of cached host
+        reads, not a pipeline stall."""
+        if not self._queue:
+            return
+        rows = [r for r, _ in self._queue]
+        for row, vals in self._queue:
+            row.update({n: _land(v) for n, v in vals.items()})
+        self._bound_last = {n: rows[-1][n] for n in self._bound}
+        self._queue.clear()
+
+    def sample(self) -> Dict[str, float]:
+        """The current sample row without touching the device (last
+        resolved values for bound metrics)."""
+        row = dict(self._host)
+        row.update(self._bound_last)
+        return row
+
+    # ------------------------------------------------------------ snapshot
+    def snapshot(self) -> Dict[str, Any]:
+        """Plain-dict summary for the serve report / exporters."""
+        counters, gauges = {}, {}
+        for name, v in sorted(self.sample().items()):
+            kind = self.registry.spec(name).kind
+            (counters if kind == COUNTER else gauges)[name] = v
+        hists = {}
+        for name, h in sorted(self._hist.items()):
+            s = self.registry.spec(name)
+            hists[name] = {"buckets": list(s.buckets),
+                           "counts": list(h["counts"]),
+                           "sum": h["sum"], "count": h["count"]}
+        return {"counters": counters, "gauges": gauges,
+                "histograms": hists, "drains": self.drains}

@@ -1,0 +1,169 @@
+"""Per-request span tracing over the serving clock.
+
+A span is a named interval on the decode-step clock, attributed to a
+*lane* (the Chrome-trace process: ``serve`` for request work,
+``background`` for scrub/rotation/migration) and a *track* (the thread:
+one per request, plus ``pool``/``scrub``/``wear`` lanes), optionally
+parented to another span — so one request's admission → prefill →
+decode bursts → eviction is a tree rooted at its request span, with
+scrub interference visible on the background lane over the same clock.
+
+Span args may hold *device* scalars (a raw accumulator reference) or
+``Lazy(fn, *deps)`` derivations over them (e.g. a burst's energy
+share, ``Lazy(lambda a, b: (a - b) / n, after, before)``): the deps
+cross to the host at ``finalize()`` and ``fn`` runs on the landed
+floats — so derived attribution costs zero device-op dispatch and zero
+syncs anywhere on the serving loop; the whole tracing bill is that
+single documented end-of-run landing pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+#: Chrome-trace lanes (processes). Tracks (threads) are free-form.
+LANE_SERVE = "serve"
+LANE_BACKGROUND = "background"
+
+
+def _land(v) -> float:
+    """One span arg's device scalar, read on host (cached after the
+    first access — finalize runs strictly after the serving loop)."""
+    # repro: allow(no-host-sync-in-scan): THE one end-of-run span-attribution landing (documented in the drain-count audit)
+    return float(np.asarray(v))
+
+
+class Lazy:
+    """A derived span arg: ``fn(*host(deps))``, evaluated at finalize.
+
+    ``deps`` are device scalars (existing accumulator references —
+    immutable, so they pin the recording-time values); ``fn`` is pure
+    host float arithmetic. Recording one allocates a tiny object and
+    nothing else: no op dispatch, no transfer."""
+    __slots__ = ("fn", "deps")
+
+    def __init__(self, fn, *deps):
+        self.fn = fn
+        self.deps = deps
+
+
+@dataclasses.dataclass
+class Span:
+    sid: int
+    parent: Optional[int]
+    name: str
+    cat: str
+    lane: str
+    track: str
+    t0: float
+    t1: Optional[float] = None
+    args: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def closed(self) -> bool:
+        return self.t1 is not None
+
+
+class SpanTracer:
+    """Append-only span store with explicit parent handles.
+
+    ``begin``/``end`` bracket long-lived spans (the per-request root);
+    ``complete`` records an already-finished interval in one call (the
+    common case: burst/prefill/scrub work whose extent is known when the
+    scheduler books it). All timestamps are in decode steps.
+    """
+
+    def __init__(self):
+        self.spans: List[Span] = []
+        self._finalized = False
+
+    def begin(self, name: str, t0: float, *, lane: str = LANE_SERVE,
+              track: str = "main", cat: str = "serve",
+              parent: Optional[int] = None, **args: Any) -> int:
+        sid = len(self.spans)
+        self.spans.append(Span(sid=sid, parent=parent, name=name, cat=cat,
+                               lane=lane, track=track, t0=float(t0),
+                               args=dict(args)))
+        return sid
+
+    def end(self, sid: int, t1: float, **args: Any) -> None:
+        s = self.spans[sid]
+        assert not s.closed, f"span {sid} ({s.name}) already closed"
+        s.t1 = float(t1)
+        s.args.update(args)
+
+    def complete(self, name: str, t0: float, t1: float, *,
+                 lane: str = LANE_SERVE, track: str = "main",
+                 cat: str = "serve", parent: Optional[int] = None,
+                 **args: Any) -> int:
+        sid = self.begin(name, t0, lane=lane, track=track, cat=cat,
+                         parent=parent, **args)
+        self.end(sid, t1)
+        return sid
+
+    # ------------------------------------------------------------ finalize
+    def finalize(self) -> None:
+        """Resolve every lazy span arg — raw device refs land as host
+        floats and every ``Lazy`` derivation runs on its deps' landed
+        values. Runs after the run, when the accumulators are long
+        since computed (consecutive bursts share dep arrays and
+        ``jax.Array`` caches its host value, so repeats are free).
+        Idempotent; must run before export."""
+        if self._finalized:
+            return
+        for s in self.spans:
+            for k, v in s.args.items():
+                if isinstance(v, Lazy):
+                    s.args[k] = float(v.fn(*(_land(d) for d in v.deps)))
+                elif isinstance(v, jax.Array):
+                    s.args[k] = _land(v)
+        self._finalized = True
+
+    # ------------------------------------------------------------ validate
+    def validate(self) -> List[str]:
+        """Structural integrity check: parent handles resolve, children
+        nest inside their parent's interval, everything is closed.
+        Returns a list of problem strings (empty = clean)."""
+        problems = []
+        by_sid = {s.sid: s for s in self.spans}
+        for s in self.spans:
+            if not s.closed:
+                problems.append(f"span {s.sid} ({s.name}) never closed")
+                continue
+            if s.t1 < s.t0:
+                problems.append(f"span {s.sid} ({s.name}) ends before "
+                                f"it starts ({s.t0}..{s.t1})")
+            if s.parent is None:
+                continue
+            p = by_sid.get(s.parent)
+            if p is None:
+                problems.append(f"span {s.sid} ({s.name}) parent "
+                                f"{s.parent} does not exist")
+            elif p.closed and not (p.t0 <= s.t0 and s.t1 <= p.t1):
+                problems.append(
+                    f"span {s.sid} ({s.name}) [{s.t0},{s.t1}] escapes "
+                    f"parent {p.sid} ({p.name}) [{p.t0},{p.t1}]")
+        return problems
+
+    def children(self, sid: int) -> List[Span]:
+        return [s for s in self.spans if s.parent == sid]
+
+    def roots(self) -> List[Span]:
+        return [s for s in self.spans if s.parent is None]
+
+    def snapshot(self) -> List[Dict[str, Any]]:
+        """Plain-dict span list for the serve report. Requires
+        ``finalize()`` (device args must already be resolved)."""
+        assert self._finalized or not any(
+            isinstance(v, (Lazy, jax.Array))
+            for s in self.spans for v in s.args.values()), \
+            "snapshot() before finalize() with unresolved lazy args"
+        # hand-rolled (dataclasses.asdict deep-copies recursively — real
+        # milliseconds at serving span counts)
+        return [{"sid": s.sid, "parent": s.parent, "name": s.name,
+                 "cat": s.cat, "lane": s.lane, "track": s.track,
+                 "t0": s.t0, "t1": s.t1, "args": dict(s.args)}
+                for s in self.spans]

@@ -174,6 +174,13 @@ def flatten_report(report: Dict[str, Any]) -> Dict[str, float]:
             "linked_cols": float(p["linked_cols"]),
             "prefix_net_saved_pj": p["net_energy_saved_pj"],
         })
+    if "telemetry" in report:
+        t = report["telemetry"]
+        row.update({
+            "telemetry_events": float(t["events"]),
+            "telemetry_spans": float(t["spans"]),
+            "telemetry_drains_per_event": t["drains_per_event"],
+        })
     return row
 
 

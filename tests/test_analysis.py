@@ -201,6 +201,58 @@ REGISTRY_FIXTURE = """
 """
 
 
+class TestMetricsDiscipline:
+    def test_fires_on_adhoc_module_accumulator(self, tmp_path):
+        rep = lint(tmp_path, {"src/mod.py": """
+            TOTAL_WRITES = 0
+
+            def record(n):
+                global TOTAL_WRITES
+                TOTAL_WRITES += n
+        """})
+        v = [f for f in rep.violations if f.rule == "metrics-discipline"]
+        assert len(v) == 1 and "TOTAL_WRITES" in v[0].message
+        assert "registry" in v[0].message
+
+    def test_fires_on_drain_in_traced_region(self, tmp_path):
+        rep = lint(tmp_path, {"src/mod.py": """
+            import jax
+
+            def run(ins, xs):
+                def body(c, x):
+                    row = ins.drain()
+                    return c + x, x
+                return jax.lax.scan(body, 0.0, xs)
+        """})
+        v = [f for f in rep.violations if f.rule == "metrics-discipline"]
+        assert len(v) == 1 and ".drain()" in v[0].message
+
+    def test_silent_on_constants_and_host_drains(self, tmp_path):
+        rep = lint(tmp_path, {"src/mod.py": """
+            WRITE_LEAF_OFFSET = 0
+            SCALE = 1.5
+
+            def event(tele, clock):
+                return tele.event(clock)
+
+            def scaled(x):
+                return x * SCALE
+        """})
+        assert "metrics-discipline" not in rules_of(rep)
+
+    def test_waiver_suppresses(self, tmp_path):
+        rep = lint(tmp_path, {"src/mod.py": """
+            # repro: allow(metrics-discipline): legacy counter, migrating in PR 10
+            HITS = 0
+
+            def bump():
+                global HITS
+                HITS += 1
+        """})
+        assert "metrics-discipline" not in rules_of(rep)
+        assert any(w.rule == "metrics-discipline" for w in rep.waived)
+
+
 class TestRngStreamHygiene:
     def test_fires_on_magic_constant_and_offset_assign(self, tmp_path):
         rep = lint(tmp_path, {"src/mod.py": """
