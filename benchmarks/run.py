@@ -26,8 +26,8 @@ from pathlib import Path
 from benchmarks import (endurance_sweep, fig2_switching, fig6_thermal,
                         fig12_waveform, fig13_access, fig14_energy,
                         fig15_variation, kernel_bench, prefix_reuse,
-                        retention_sweep, serving_energy, table1,
-                        telemetry_overhead, workload_mixes)
+                        retention_sweep, serving_energy, shard_scaling,
+                        table1, telemetry_overhead, workload_mixes)
 
 BENCHES = {
     "table1": lambda fast: table1.run(),
@@ -54,6 +54,8 @@ BENCHES = {
         events=4 if fast else 6),
     "telemetry_overhead": lambda fast: telemetry_overhead.run(
         repeats=4 if fast else 6),
+    "shard_scaling": lambda fast: shard_scaling.run(
+        n=6 if fast else 8, repeats=2 if fast else 3),
 }
 
 #: the --quick profile: the curated sub-minute subset the CI bench-report
@@ -61,7 +63,7 @@ BENCHES = {
 #: accumulates (implies --fast; one invocation, one JSON)
 QUICK_BENCHES = ("table1", "fig6_thermal", "kernel_bench",
                  "retention_sweep", "endurance_sweep", "prefix_reuse",
-                 "workload_mixes", "telemetry_overhead")
+                 "workload_mixes", "telemetry_overhead", "shard_scaling")
 
 #: modules exposing ``bench_metrics(out)`` — the registration hook for the
 #: machine-readable report
@@ -73,6 +75,7 @@ _METRIC_FNS = {
     "prefix_reuse": prefix_reuse.bench_metrics,
     "workload_mixes": workload_mixes.bench_metrics,
     "telemetry_overhead": telemetry_overhead.bench_metrics,
+    "shard_scaling": shard_scaling.bench_metrics,
 }
 
 
@@ -124,6 +127,12 @@ def _headline(name: str, out) -> str:
         return (f"overhead={out['overhead_frac']:+.3f} "
                 f"bit_exact={out['claims']['bit_exact_tokens']} "
                 f"drains/event={out['telemetry']['drains_per_event']:g}")
+    if name == "shard_scaling":
+        return (f"bit_identical="
+                f"{out['claims']['bit_identical_across_dies']} "
+                f"speedup_4die={out['speedup_vs_1die']['4']:.2f}x "
+                f"collective_free="
+                f"{out['claims']['burst_collective_free']}")
     return ""
 
 

@@ -1,0 +1,168 @@
+"""Shard scaling: one logical STT-RAM pool across 1/2/4 simulated dies.
+
+Two claims, one benchmark:
+
+  * **Bit-identity** — the extent-write RNG hashes flat logical lane
+    indices, so the die count is a pure *layout* choice: the SAME arrival
+    stream served at ``shards`` 1, 2 and 4 must produce byte-equal
+    ledgers (energy, flips, errors, bits) and identical per-request
+    tokens. Asserted exactly, not within tolerance.
+  * **Scaling** — the decode burst stays ONE scan with zero cross-die
+    transfers (asserted against the compiled HLO: no collectives), so D
+    dies decode their slot sub-batches concurrently and the wall-clock of
+    the pool-wide burst is the slowest die's shard-local time. Measured
+    as the compiled burst time at per-die batch B/D: tokens/s must rise
+    monotonically 1 -> 4 dies.
+
+Per-die write energy comes from the sharded serve report's ``sharding``
+section (the contiguous-slice reduction of the per-slot attribution
+ledger) — the same numbers the ``die N:`` report lines print.
+
+Usage: PYTHONPATH=src python -m benchmarks.shard_scaling [--fast]
+Registered in benchmarks/run.py (--quick lane).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.energy_model import zero_slot_stats
+from repro.core.priority import Priority
+from repro.memory import WriteStats
+from repro.serve import (ContinuousScheduler, Request, ServeConfig,
+                         ServingEngine)
+
+#: HLO ops that would mean cross-die traffic inside the decode scan; the
+#: shard-locality contract says the compiled burst contains none of them
+_COLLECTIVES = ("all-reduce", "all-gather", "collective-permute",
+                "all-to-all", "reduce-scatter")
+
+
+def _requests(cfg, n: int, *, prompt_len: int, new_tokens: int,
+              arrival_every: int, seed: int = 11):
+    vocab = cfg.vocab_size
+    out = []
+    for i in range(n):
+        toks = jax.random.randint(jax.random.PRNGKey(seed + 13 * i),
+                                  (1, prompt_len), 0, vocab)
+        out.append(Request(rid=i, prompt={"tokens": toks},
+                           new_tokens=new_tokens + (i * i) % 3,
+                           arrival=i * arrival_every))
+    return out
+
+
+def _serve(shards: int, *, n: int, prompt_len: int, new_tokens: int,
+           capacity: int, arrival_every: int):
+    cfg = get_config("qwen2.5-3b").reduced()
+    eng = ServingEngine(cfg, ServeConfig(
+        max_seq=prompt_len + new_tokens + 8,
+        max_new_tokens=new_tokens + 4, shards=shards))
+    reqs = _requests(cfg, n, prompt_len=prompt_len, new_tokens=new_tokens,
+                     arrival_every=arrival_every)
+    return ContinuousScheduler(eng, capacity=capacity).run(reqs)
+
+
+def _ledger(rep) -> dict:
+    tot = rep["total"]
+    return {k: tot[k] for k in ("energy_pj", "bits_written", "bit_errors",
+                                "bits_total")}
+
+
+def _tokens(rep) -> dict:
+    return {r: list(rep["requests"][r]["tokens"]) for r in rep["requests"]}
+
+
+def _burst_args(eng, B: int, steps: int):
+    """Operands of one plain decode burst at slot batch ``B`` — what a
+    single die carries when the pool is split D ways."""
+    cache = eng.api.init_cache(B, eng.scfg.max_seq)
+    return (eng.params, jnp.zeros((B,), jnp.int32), cache,
+            jnp.full((B,), 4, jnp.int32), jax.random.PRNGKey(0),
+            WriteStats.zero(), zero_slot_stats(B), jnp.ones((B,), bool),
+            eng.vectors_for_floor(Priority.LOW))
+
+
+def _time_burst(eng, B: int, steps: int, repeats: int) -> float:
+    """Min wall-clock seconds of the compiled burst at batch ``B``."""
+    args = _burst_args(eng, B, steps)
+    jax.block_until_ready(eng._burst(*args, n=steps))  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng._burst(*args, n=steps))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(dies=(1, 2, 4), n: int = 8, prompt_len: int = 12,
+        new_tokens: int = 5, capacity: int = 4, arrival_every: int = 2,
+        pool: int = 8, steps: int = 12, repeats: int = 3):
+    kw = dict(n=n, prompt_len=prompt_len, new_tokens=new_tokens,
+              capacity=capacity, arrival_every=arrival_every)
+
+    # --- bit-identity: the same stream at every die count -------------
+    reps = {d: _serve(d, **kw) for d in dies}
+    base = dies[0]
+    ledgers = {d: _ledger(r) for d, r in reps.items()}
+    tokens = {d: _tokens(r) for d, r in reps.items()}
+    bit_identical = all(ledgers[d] == ledgers[base]
+                        and tokens[d] == tokens[base] for d in dies)
+
+    per_die_energy = {
+        d: [die["energy_pj"] for die in reps[d]["sharding"]["dies"]]
+        for d in dies if d > 1}
+
+    # --- scaling: per-die burst time at batch pool/D ------------------
+    cfg = get_config("qwen2.5-3b").reduced()
+    eng = ServingEngine(cfg, ServeConfig(max_seq=32, max_new_tokens=8))
+    tps = {}
+    for d in dies:
+        assert pool % d == 0, (pool, d)
+        t = _time_burst(eng, pool // d, steps, repeats)
+        tps[d] = pool * steps / t
+
+    # --- locality: the compiled burst carries zero collectives --------
+    hlo = eng._burst.lower(*_burst_args(eng, pool, steps),
+                           n=steps).compile().as_text()
+    collective_free = not any(c in hlo for c in _COLLECTIVES)
+
+    out = {
+        "workload": {**kw, "dies": list(dies), "pool": pool,
+                     "steps": steps},
+        "ledger": ledgers[base],
+        "per_die_energy_pj": per_die_energy,
+        "tokens_per_s": {str(d): tps[d] for d in dies},
+        "speedup_vs_1die": {str(d): tps[d] / tps[dies[0]] for d in dies},
+        "claims": {
+            "bit_identical_across_dies": bit_identical,
+            "throughput_monotone_1_to_4": all(
+                tps[b] >= tps[a] for a, b in zip(dies, dies[1:])),
+            "burst_collective_free": collective_free,
+        },
+    }
+    for name, ok in out["claims"].items():
+        assert ok, (name, out)
+    return out
+
+
+def bench_metrics(out) -> dict:
+    tps = out["tokens_per_s"]
+    m = {f"tokens_per_s_{d}die": v for d, v in tps.items()}
+    m.update({f"speedup_{d}die": v
+              for d, v in out["speedup_vs_1die"].items()})
+    m["total_energy_pj"] = out["ledger"]["energy_pj"]
+    m.update({k: v for k, v in out["claims"].items()})
+    return m
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    a = ap.parse_args()
+    res = run(n=6 if a.fast else 8, repeats=2 if a.fast else 3)
+    print(json.dumps(res, indent=2, default=float))

@@ -9,3 +9,4 @@ from repro.analysis.rules import operand_discipline  # noqa: F401
 from repro.analysis.rules import pytree_carry  # noqa: F401
 from repro.analysis.rules import registry_discipline  # noqa: F401
 from repro.analysis.rules import rng_streams  # noqa: F401
+from repro.analysis.rules import shard_locality  # noqa: F401

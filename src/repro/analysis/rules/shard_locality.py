@@ -1,0 +1,68 @@
+"""R8 shard-locality — zero cross-die collectives in the serving zone's
+traced code.
+
+The sharded pool's scaling contract (``repro.sharding``): the slot axis
+partitions over dies and every traced computation — the decode burst,
+the scrub pass, admission updates — is elementwise or batched *along*
+that axis, never *across* it. Decode throughput then scales with the die
+count because each die only ever touches its own slot rows; a single
+``all_gather``/``psum`` inside the scan would serialize every die on the
+slowest one and put cross-die traffic on the per-token path.
+
+So: any ``jax.lax`` collective (gather, reduce, permute, shuffle) inside
+a traced region of ``src/repro/serve/`` or ``src/repro/reliability/`` is
+a violation. Intentional cross-die reductions (none exist today; a
+future hierarchical-report path might add one) must carry a
+``# repro: allow(shard-locality): …`` waiver naming why the transfer is
+off the per-token path, so the set of collectives stays enumerable by
+grep and audited in review. Host-path code and
+``jax.ensure_compile_time_eval`` blocks are exempt — the contract is
+about the compiled per-token stream, not resolve-once setup.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+from repro.analysis.engine import (Finding, RepoContext, Rule, SourceFile,
+                                   register_rule)
+from repro.analysis.visitors import dotted, walk_calls
+
+_COLLECTIVE_NAMES = ("all_gather", "all_to_all", "psum", "psum_scatter",
+                     "pmean", "pmax", "pmin", "ppermute", "pshuffle",
+                     "axis_index_groups")
+COLLECTIVE_CALLS = {f"{prefix}.{name}"
+                    for name in _COLLECTIVE_NAMES
+                    for prefix in ("jax.lax", "lax")}
+
+ZONE_PREFIXES = ("src/repro/serve/", "src/repro/reliability/")
+
+
+class ShardLocality(Rule):
+    name = "shard-locality"
+    contract = ("traced decode/scrub code performs zero cross-die "
+                "collectives — die-sharded throughput scales only while "
+                "each die touches its own slot rows")
+
+    def check(self, sf: SourceFile, ctx: RepoContext) -> Iterator[Finding]:
+        if not sf.rel.startswith(ZONE_PREFIXES):
+            return
+        tm = sf.trace_map()
+        for call in walk_calls(sf.tree):
+            if tm.under_compile_time_eval(call):
+                continue
+            fn = dotted(call.func)
+            if fn not in COLLECTIVE_CALLS:
+                continue
+            hit = tm.traced_region_of(call)
+            if hit is None:
+                continue
+            _, kind = hit
+            yield self.finding(
+                sf, call,
+                f"{fn} inside a {kind} body: a cross-die collective on "
+                "the per-token path serializes every die on the slowest "
+                "one — keep traced work slot-local and reduce per-die "
+                "ledgers on the host, once per run")
+
+
+register_rule(ShardLocality())

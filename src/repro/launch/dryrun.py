@@ -1,7 +1,14 @@
 import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
+if __name__ == "__main__":
+    # The CLI needs the fake 512-device pod staged before the jax import
+    # below initializes the backend. Guarded so merely IMPORTING this
+    # module (tests pull input_specs/_collective_bytes) cannot poison the
+    # process: pytest imports test modules at collection, before backend
+    # init, and a 512-device host breaks the smoke tests' contract that
+    # they run on the real single CPU device (see tests/conftest.py).
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -31,7 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config, all_cells, cell_is_runnable
-from repro.launch.mesh import make_production_mesh
+from repro.sharding import make_production_mesh
 from repro.models import get_model
 from repro.sharding.rules import (default_rules, make_constrain, spec_for,
                                   strategy_rules, tree_shardings)

@@ -11,6 +11,7 @@ Continuous batching over an arrival stream (the default):
       [--wear-policy rotate --endurance-budget 100 --remap-group-cols 8] \
       [--prefix-cache --prefix-chunk 8 --prefix-table-size 256 \
        --shared-prefix 8] \
+      [--shards 2 --die-ambient 1=400] \
       [--metrics-out metrics.prom --trace-timeline timeline.json]
 
 Trace-driven workloads (repro.workload):
@@ -138,6 +139,19 @@ def main():
                     help="leading prompt tokens shared across the "
                          "synthetic arrival stream (0 = fully unique "
                          "prompts, nothing for the prefix cache to hit)")
+    # sharded serving (repro.sharding.DieMesh): one logical STT-RAM pool
+    # across N independently aging dies
+    ap.add_argument("--shards", type=int, default=1,
+                    help="number of STT-RAM dies the slot pool is "
+                         "sharded across (capacity must divide evenly; "
+                         "any value is bit-identical to 1 until per-die "
+                         "state diverges)")
+    ap.add_argument("--die-ambient", action="append", default=[],
+                    metavar="DIE=KELVIN",
+                    help="override one die's ambient temperature "
+                         "(repeats), e.g. --die-ambient 1=400; diverging "
+                         "dies get per-slot decay operands, extra scrub "
+                         "cadence, and HIGH-quality admission steering")
     ap.add_argument("--monolithic", action="store_true",
                     help="single fixed batch, no arrival stream")
     # trace-driven workloads (repro.workload): replay, generate, record
@@ -216,7 +230,8 @@ def main():
             remap_group_cols=args.remap_group_cols,
             prefix_cache=args.prefix_cache,
             prefix_chunk=args.prefix_chunk,
-            prefix_table_size=args.prefix_table_size)
+            prefix_table_size=args.prefix_table_size,
+            shards=args.shards)
 
     if args.monolithic:
         prompt = {"tokens": jax.random.randint(
@@ -314,10 +329,15 @@ def main():
             args.wear_policy, check_interval=args.wear_check_interval,
             rotate_step=args.remap_group_cols,
             hot_row_wear=args.hot_row_wear)
+    die_ambients = {}
+    for spec in args.die_ambient:
+        die, _, kelvin = spec.partition("=")
+        die_ambients[int(die)] = float(kelvin)
     sch = ContinuousScheduler(eng, capacity=args.capacity,
                               scrub_policy=scrub_policy,
                               wear_policy=wear_policy,
-                              telemetry=telemetry)
+                              telemetry=telemetry,
+                              die_ambients=die_ambients)
     # every stream is recordable/scorable: the synthetic default is read
     # back into a trace (one host read per request, pre-serve), trace and
     # workload modes already have one

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs import SHAPES, get_config
 from repro.core.priority import Priority
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.sharding import make_host_mesh, make_production_mesh
 from repro.models import get_model
 from repro.sharding.rules import make_constrain, strategy_rules, tree_shardings
 from repro.train import compression as comp

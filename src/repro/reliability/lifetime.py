@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Optional, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -251,6 +251,41 @@ class LifetimePlan:
             if lvl is not None else None
             for dt, lvl in zip(self.leaf_dtypes, self.plan.leaf_levels))
 
+    def vectors_for_dies(self, floor: Priority, ambients: Sequence[float],
+                         slots_per_die: int,
+                         dwell_s: Optional[float] = None
+                         ) -> Tuple[Optional[jax.Array], ...]:
+        """Per-DIE ambient temperatures -> per-leaf decay-threshold
+        operands for a slot pool sharded over ``len(ambients)`` dies of
+        ``slots_per_die`` slots each (repro.sharding.DieMesh layout: die
+        ``d`` owns the contiguous slot block starting at
+        ``d * slots_per_die``).
+
+        Uniform ambients delegate to ``vectors_for`` — the legacy
+        ``(nbits,)`` operand shapes, so the compiled burst and its results
+        are bit-identical to a 1-die run by construction. Divergent
+        ambients lift each approximate leaf's thresholds to per-slot
+        ``(B, nbits)`` rows (one retrace at first divergence); the decay
+        sampler's uniform draws hash only (seed, flat element, bit plane),
+        so a die's thresholds gate ONLY its own slots' strikes — heating
+        one die never perturbs another die's decay record."""
+        ts = [float(t) for t in ambients]
+        if len(set(ts)) <= 1:
+            return self.vectors_for(floor, ambient_k=ts[0],
+                                    dwell_s=dwell_s)
+        dw = self.dwell_s if dwell_s is None else float(dwell_s)
+        floor = Priority.coerce(floor)
+        out = []
+        for dt, lvl in zip(self.leaf_dtypes, self.plan.leaf_levels):
+            if lvl is None:
+                out.append(None)
+                continue
+            rows = jnp.stack([
+                _retention_thresholds(dt, max(lvl, floor), t, dw)
+                for t in ts])                               # (D, nbits)
+            out.append(jnp.repeat(rows, slots_per_die, axis=0))
+        return tuple(out)
+
     # ---------------------------------------------------------------- state
     def n_row_groups(self, tree: Any) -> int:
         """Padded row-group count G for the (L, G) wear counters: the max
@@ -418,6 +453,23 @@ class LifetimePlan:
                     axis=1).astype(jnp.float32)
         return wear_s + decay_s
 
+    def decayed_bits_by_slot(self, state: LifetimeState
+                             ) -> Optional[jax.Array]:
+        """(B,) i32 residual decayed bits per slot row (popcount of the
+        masks reduced over every non-batch axis). The per-die decay ledger
+        is this vector's contiguous-slice reduction (DieMesh.reduce_slots)
+        — zero extra in-scan work. None when no leaf carries a mask."""
+        bx = self.plan.batch_axis
+        out = None
+        for m in state.masks:
+            if m is None:
+                continue
+            v = jnp.sum(jax.lax.population_count(
+                jnp.moveaxis(m, bx, 0).reshape(m.shape[bx], -1)
+                ).astype(jnp.int32), axis=1, dtype=jnp.int32)
+            out = v if out is None else out + v
+        return out
+
     # -------------------------------------------------------------- advance
     def advance(self, key: jax.Array, tree: Any, state: LifetimeState,
                 vectors: Optional[Tuple[Optional[jax.Array], ...]] = None,
@@ -448,6 +500,15 @@ class LifetimePlan:
             if thr is None:
                 out.append(leaf)
                 continue
+            if thr.ndim == 2:
+                # per-slot (B, nbits) threshold rows (sharded dies with
+                # divergent ambients — vectors_for_dies): align B with the
+                # leaf's batch axis so each slot's bits gate on its own
+                # die's thresholds
+                bx = self.plan.batch_axis
+                shape = [1] * leaf.ndim + [thr.shape[-1]]
+                shape[bx] = thr.shape[0]
+                thr = thr.reshape(shape)
             k = jax.random.fold_in(key, _RET_KEY_OFFSET + i)
             decayed, dmask, n = _decay_leaf(k, leaf, thr)
             out.append(decayed)

@@ -90,6 +90,7 @@ def scrub_tree(
     cols: Optional[int] = None,
     cursor: Optional[jax.Array] = None,
     addr: Optional[Tuple[jax.Array, Optional[jax.Array]]] = None,
+    slot_mask: Optional[jax.Array] = None,
 ) -> Tuple[Any, LifetimeState, WriteStats]:
     """One scrub pass. ``vectors`` is the WRITE plan's per-leaf operand
     tuple (``WritePlan.vectors_for(floor)``) — scrub re-writes at write
@@ -99,6 +100,15 @@ def scrub_tree(
     is the physical-addressing operand pair ``(shifts, worn)`` (see
     ``WritePlan.write``); identity shifts with no worn rows reproduce the
     address-free pass bit-for-bit.
+
+    ``slot_mask`` ((B,) bool operand) scopes the pass to a subset of slot
+    rows — the sharded scheduler's per-DIE scrub cadence (hot dies run
+    extra masked passes over their own slots only). Excluded slots keep
+    their decay in the residual mask and, since zero-mask bits are free
+    under the scrub protocol, contribute zero energy/flips — so a
+    die-masked pass composes bit-exactly with the other dies' masked
+    passes at the same key, and ``slot_mask=None`` (every slot) is the
+    legacy whole-pool pass unchanged.
 
     Returns (scrubbed_tree, state', WriteStats): masks of scrubbed spans
     are replaced by the residual (failed-correction) masks, scrub wear
@@ -142,6 +152,12 @@ def scrub_tree(
             idx = None
             w_leaf, w_mask = leaf, masks[i]
         stuck = _worn_cols_mask(plan, spec, i, leaf, shifts, worn, idx)
+        if slot_mask is not None:
+            # out-of-die slots are withheld from this pass exactly like
+            # worn rows: decay held in the residual, zero drive energy
+            row = jax.lax.broadcasted_iota(jnp.int32, w_mask.shape, bx)
+            excl = ~slot_mask[row]
+            stuck = excl if stuck is None else (stuck | excl)
         if stuck is not None:
             # worn rows cannot be re-driven: their decayed bits are
             # withheld from the corrective write (zero-mask bits are free
@@ -172,6 +188,13 @@ def scrub_tree(
                 n_cols = cols if windowed else leaf.shape[ax]
                 inc = addr_mod.window_group_counts(
                     c0, n_cols, leaf.shape[ax], B, G, spec)
+            if slot_mask is not None:
+                # scrub wear is booked only for the covered die's rows
+                # (groups are slot-major: group g backs slot g // gc)
+                gc = 1 if ax is None else spec.col_groups(leaf.shape[ax])
+                sl = jnp.arange(G, dtype=jnp.int32) // gc
+                covered = slot_mask[jnp.clip(sl, 0, B - 1)] & (sl < B)
+                inc = jnp.where(covered, inc, 0)
             row_scrub = row_scrub.at[i].add(inc)
     scrubbed = jnp.asarray(scrubbed_vec, jnp.int32)
     state2 = dataclasses.replace(

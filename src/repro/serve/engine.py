@@ -119,6 +119,14 @@ class ServeConfig:
     prefix_cache: bool = False
     prefix_chunk: int = 8
     prefix_table_size: int = 256
+    # sharded serving (repro.sharding.DieMesh): the slot pool spans
+    # ``shards`` independently aging STT-RAM dies, partitioned over the
+    # slot axis. The burst stays ONE full-pool compiled scan regardless —
+    # the flat-logical-index RNG layout makes the shard count a pure
+    # layout choice, so any ``shards`` run is bit-identical (tokens,
+    # flips, energy, WER) to ``shards=1`` until per-die state (ambients,
+    # wear) actually diverges. Pool capacity must divide evenly by it.
+    shards: int = 1
 
 
 def _tag_cache(cache: Any) -> Any:
@@ -270,6 +278,17 @@ class ServingEngine:
         ``vectors_for_floor``. Only valid with retention enabled."""
         assert self.life_plan is not None, "retention_scale == 0"
         return self.life_plan.vectors_for(floor, ambient_k=ambient_k)
+
+    def retention_vectors_for_dies(self, floor: Priority,
+                                   ambients: Tuple[float, ...],
+                                   slots_per_die: int) -> Tuple:
+        """Per-die decay-threshold operands for a die-sharded pool (see
+        ``LifetimePlan.vectors_for_dies``): uniform ambients return the
+        legacy pool-wide operands (same executables, bit-identical);
+        divergent ambients return per-slot ``(B, nbits)`` rows."""
+        assert self.life_plan is not None, "retention_scale == 0"
+        return self.life_plan.vectors_for_dies(floor, ambients,
+                                               slots_per_die)
 
     def remap_cost(self, tree: Any) -> Tuple[float, int]:
         """Host constants (energy_pj, bits) of ONE wear-leveling rotation
@@ -456,18 +475,20 @@ class ServingEngine:
         from repro.reliability import scrub_tree
 
         if self.wear:
-            def scrub(key, cache, life, vectors, cursor, shifts, *,
-                      enabled, cols):
+            def scrub(key, cache, life, vectors, cursor, shifts,
+                      slot_mask=None, *, enabled, cols):
                 # the cursor walks PHYSICAL rows; worn rows stay decayed
                 worn = self.life_plan.worn_groups(life)
                 return scrub_tree(key, cache, life, self.life_plan,
                                   vectors, enabled=enabled, cols=cols,
-                                  cursor=cursor, addr=(shifts, worn))
+                                  cursor=cursor, addr=(shifts, worn),
+                                  slot_mask=slot_mask)
         else:
-            def scrub(key, cache, life, vectors, cursor, *, enabled, cols):
+            def scrub(key, cache, life, vectors, cursor, slot_mask=None,
+                      *, enabled, cols):
                 return scrub_tree(key, cache, life, self.life_plan,
                                   vectors, enabled=enabled, cols=cols,
-                                  cursor=cursor)
+                                  cursor=cursor, slot_mask=slot_mask)
 
         return scrub
 

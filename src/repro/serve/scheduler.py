@@ -39,9 +39,10 @@ import numpy as np
 from repro.core.energy_model import StepEnergyMeter
 from repro.core.priority import Priority
 from repro.memory import WriteStats, rng_streams
-from repro.serve.engine import ServingEngine
+from repro.serve.engine import BATCH_AXIS, ServingEngine
 from repro.serve.prefix import PrefixCache, PrefixConfig, PrefixMatch
 from repro.serve.slots import SlotPool
+from repro.sharding import DieMesh, uniform
 from repro.telemetry import LANE_BACKGROUND, Lazy, Telemetry
 
 
@@ -162,6 +163,18 @@ class ContinuousScheduler:
     ``ambient_schedule`` is an optional piecewise-constant
     [(from_step, kelvin), ...] die-temperature profile; swapping the
     ambient between bursts swaps decay-threshold operands, never retraces.
+
+    Sharded serving (``ServeConfig.shards`` > 1, repro.sharding.DieMesh):
+    the pool spans N independently aging dies partitioned over the slot
+    axis. The stack keeps ONE full-pool compiled burst — per-die state
+    enters only through operands: ``die_ambients`` (``{die: kelvin}``
+    overrides on top of the global ambient/schedule) lift the decay
+    thresholds to per-slot rows, dies hotter than the coolest run extra
+    die-masked scrub passes (their own scrub cadence), and HIGH-quality
+    admissions steer toward cool/low-wear dies through a per-die score
+    bias. While the dies are indistinguishable every one of these
+    collapses to the legacy 1-die path, so any ``shards`` count is
+    bit-identical to ``shards=1`` — shard count is a layout choice.
     """
 
     def __init__(self, engine: ServingEngine, capacity: int,
@@ -170,10 +183,21 @@ class ContinuousScheduler:
                  ambient_schedule: Optional[Sequence[Tuple[int, float]]]
                  = None,
                  wear_policy: Optional[Any] = None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 die_ambients: Optional[Dict[int, float]] = None):
         assert capacity >= 1
         self.eng = engine
         self.pool = SlotPool(engine.api, capacity, engine.scfg.max_seq)
+        self.mesh = DieMesh(n_dies=max(1, engine.scfg.shards),
+                            capacity=capacity)
+        self.die_ambients: Dict[int, float] = dict(die_ambients or {})
+        assert all(0 <= d < self.mesh.n_dies for d in self.die_ambients)
+        if self.mesh.n_dies > 1:
+            # place the pool's slot axis through the die mesh
+            # (value-preserving device_put; identity on a 1-device host)
+            self.pool.cache = self.mesh.shard_slots(self.pool.cache,
+                                                    BATCH_AXIS)
+            self.pool.mesh = self.mesh
         self.max_burst = max_burst
         self.scrub_policy = scrub_policy
         self.wear_policy = wear_policy
@@ -280,6 +304,51 @@ class ContinuousScheduler:
                 t = kelvin
         return t
 
+    def _die_ambients_at(self, clock: int) -> Tuple[float, ...]:
+        """Per-die ambient temperatures at ``clock``: the global
+        schedule/config ambient, overridden per die by ``die_ambients``
+        (dies heat independently — the per-device variation sharding
+        exists to model)."""
+        base = self._ambient_at(clock)
+        if base is None:
+            base = self.eng.scfg.ambient_k
+        return tuple(self.die_ambients.get(d, float(base))
+                     for d in range(self.mesh.n_dies))
+
+    def _retention_vectors(self, clock: int) -> Tuple:
+        """Decay-threshold burst operands for the current clock: the
+        legacy pool-wide vectors while every die sits at one temperature
+        (bit-identical executables across shard counts), per-slot rows
+        once the die ambients diverge."""
+        amb = self._die_ambients_at(clock)
+        if not uniform(amb):
+            return self.eng.retention_vectors_for_dies(
+                self._floor(), amb, self.mesh.slots_per_die)
+        return self.eng.retention_vectors_for(
+            self._floor(), ambient_k=self._ambient_at(clock))
+
+    def _die_bias(self, clock: int) -> Optional[np.ndarray]:
+        """(capacity,) admission score bias steering HIGH-quality
+        requests toward healthy/cool dies (higher = worse home, the
+        ``SlotPool.alloc`` convention). Active only once the dies are
+        *observably* unequal — divergent ambients — so uniform runs keep
+        the legacy lowest-id admission order and the shard-count
+        bit-parity contract. The bias combines each die's kelvin above
+        the coolest die with its wear-checkpoint row-group wear above the
+        healthiest die's (per-die reductions of the PR 5 ``slot_scores``
+        machinery's counters)."""
+        if self.mesh.n_dies <= 1:
+            return None
+        amb = self._die_ambients_at(clock)
+        if uniform(amb):
+            return None
+        # repro: allow(no-host-sync-in-scan): host kelvin tuple, no device operand
+        per_die = np.asarray(amb, np.float64) - min(amb)
+        if self._die_wear_host is not None:
+            per_die = per_die + (self._die_wear_host
+                                 - self._die_wear_host.min())
+        return self.mesh.per_slot(per_die)
+
     def _maybe_scrub(self, clock: int, key) -> None:
         """Idle-slot background scrubbing: consult the (host-side) policy;
         when a pass is due, re-write the accumulated decay through the
@@ -337,6 +406,32 @@ class ContinuousScheduler:
                               for i in self.pool.occupied()]))
         policy.record(clock)
         self._scrub_passes += 1
+        for d in range(self.mesh.n_dies):
+            self._die_scrub_passes[d] += 1
+        # per-DIE scrub cadence: a die hotter than the coolest accumulates
+        # decay faster, so it earns one extra pass over ITS slots only (a
+        # die-masked pass — out-of-die slots are withheld at zero energy).
+        # With uniform ambients (every parity configuration) this never
+        # fires and the schedule is exactly the legacy global one.
+        amb = self._die_ambients_at(clock)
+        if not uniform(amb):
+            coolest = min(amb)
+            for d in [d for d, t in enumerate(amb) if t > coolest]:
+                kd = jax.random.fold_in(
+                    key, rng_streams.SCHEDULER_SCRUB_PASS_OFFSET
+                    + self._scrub_passes)
+                mask = self.mesh.slot_mask(d)
+                if eng.wear:
+                    self.pool.cache, self.life, st = eng._scrub_fused(
+                        kd, self.pool.cache, self.life, vectors, cursor,
+                        self.addr.shifts, mask, enabled=enabled, cols=cols)
+                else:
+                    self.pool.cache, self.life, st = eng._scrub_fused(
+                        kd, self.pool.cache, self.life, vectors, cursor,
+                        mask, enabled=enabled, cols=cols)
+                self._acc_scrub = self._acc_scrub + st
+                self._scrub_passes += 1
+                self._die_scrub_passes[d] += 1
         if cols:
             self._scrub_cursor = (self._scrub_cursor + cols) % \
                 eng.scfg.max_seq
@@ -370,6 +465,10 @@ class ContinuousScheduler:
             (self.life.row_wear(),
              eng._slot_scores(self.life, self.pool.cache)))
         self._slot_scores_host = scores
+        if self.mesh.n_dies > 1:
+            # per-die health from the same checkpoint sync: each die's
+            # hottest row-group wear (contiguous-slice reduction)
+            self._die_wear_host = self.mesh.reduce_wear(wear)
         if self.tele is not None:
             self.tele.tracer.complete(
                 "wear_check", clock, clock, lane=LANE_BACKGROUND,
@@ -534,10 +633,23 @@ class ContinuousScheduler:
             # admissions keep the lowest-id order the bit-parity contract
             # rests on.
             scores = None
+            high = max(self._level[r.rid] for r in group) >= Priority.HIGH
             if (self.eng.wear and self._slot_scores_host is not None
-                    and max(self._level[r.rid] for r in group)
-                    >= Priority.HIGH):
+                    and high):
                 scores = self._slot_scores_host
+            if high:
+                # cross-shard steering: once the dies are observably
+                # unequal, HIGH requests prefer the healthy/cool dies
+                # (per-die bias on top of the per-slot wear scores; ties
+                # keep the lowest-id order)
+                bias = self._die_bias(clock)
+                if bias is None:
+                    pass
+                elif scores is None:
+                    scores = bias
+                else:
+                    # repro: allow(no-host-sync-in-scan): scores crossed at the wear checkpoint
+                    scores = np.asarray(scores) + bias
             ids = self.pool.alloc(len(group), scores=scores,
                                   exclude=sorted(exclude))
             vectors = self.eng.vectors_for_floor(
@@ -754,6 +866,8 @@ class ContinuousScheduler:
         self._scrub_cursor = 0
         self._last_wear_check = 0
         self._slot_scores_host = None
+        self._die_scrub_passes = [0] * self.mesh.n_dies
+        self._die_wear_host = None
         self._remap_cost = None
         self._gap_host = 0  # host mirror of the gap (pre-rotation shift)
         if self.scrub_policy is not None:
@@ -836,16 +950,14 @@ class ContinuousScheduler:
             active = pool.active_mask()
             vectors = eng.vectors_for_floor(self._floor())
             if eng.wear:
-                rvec = eng.retention_vectors_for(
-                    self._floor(), ambient_k=self._ambient_at(clock))
+                rvec = self._retention_vectors(clock)
                 (pool.tok, pool.cache, pool.pos, key, self._acc_decode,
                  pool.slot_acc, self.life, toks) = eng._burst(
                     eng.params, pool.tok, pool.cache, pool.pos, key,
                     self._acc_decode, pool.slot_acc, active, vectors,
                     self.life, rvec, self.addr.shifts, n=n)
             elif self.life is not None:
-                rvec = eng.retention_vectors_for(
-                    self._floor(), ambient_k=self._ambient_at(clock))
+                rvec = self._retention_vectors(clock)
                 (pool.tok, pool.cache, pool.pos, key, self._acc_decode,
                  pool.slot_acc, self.life, toks) = eng._burst(
                     eng.params, pool.tok, pool.cache, pool.pos, key,
@@ -902,6 +1014,15 @@ class ContinuousScheduler:
                         self._acc_scrub, self._acc_remap)}
         if self.prefix is not None:
             fetch["cow"] = self._acc_cow
+        if self.mesh.n_dies > 1:
+            # per-die ledgers ride the SAME final sync: the per-slot
+            # attribution and decay vectors cross once and reduce to
+            # per-die rows on host (contiguous slices — zero device work)
+            fetch["slot_acc"] = pool.slot_acc
+            if self.life is not None:
+                slot_decay = eng.life_plan.decayed_bits_by_slot(self.life)
+                if slot_decay is not None:
+                    fetch["slot_decay"] = slot_decay
         if self.life is not None:
             fetch["retention"] = (self.life.retention_flips,
                                   self.life.decayed_bits())
@@ -986,9 +1107,48 @@ class ContinuousScheduler:
                 "endurance_budget": eng.scfg.endurance_budget,
                 "group_cols": eng.scfg.remap_group_cols,
             }
+        if self.mesh.n_dies > 1:
+            summary["sharding"] = self._sharding_summary(host, clock)
         if self.tele is not None:
             # the telemetry section rides the summary so every consumer
             # (launcher, workload harness, benchmarks) sees ONE snapshot
             # instead of re-assembling its own
             summary["telemetry"] = self.tele.snapshot()
         return summary
+
+    def _sharding_summary(self, host: Dict[str, Any], clock: int
+                          ) -> Dict[str, Any]:
+        """Per-die breakdown of the merged serve ledger: every row is a
+        contiguous-slice reduction of host arrays the final sync already
+        fetched. The pool-wide streams above remain the merged view (and
+        the cross-shard-count bit-identity anchor); this section is where
+        the dies' independent aging becomes visible."""
+        m = self.mesh
+        amb = self._die_ambients_at(clock)
+        sa = host["slot_acc"]
+        energy = m.reduce_slots(sa["energy_pj"])
+        flips = m.reduce_slots(sa["flips"])
+        errors = m.reduce_slots(sa["errors"])
+        decay = (m.reduce_slots(host["slot_decay"])
+                 if "slot_decay" in host else None)
+        wear_by_die = (m.reduce_wear(host["wear"][0])
+                       if "wear" in host else None)
+        dies = []
+        for d in range(m.n_dies):
+            sl = m.slot_slice(d)
+            row: Dict[str, Any] = {
+                "die": d, "slots": [sl.start, sl.stop],
+                "ambient_k": amb[d],
+                "energy_pj": float(energy[d]),
+                "flips": float(flips[d]),
+                "errors": float(errors[d]),
+                "scrub_passes": self._die_scrub_passes[d],
+            }
+            if decay is not None:
+                row["decayed_bits"] = int(decay[d])
+            if wear_by_die is not None:
+                row["max_group_wear"] = int(wear_by_die[d])
+            dies.append(row)
+        return {"shards": m.n_dies, "slots_per_die": m.slots_per_die,
+                "mesh_devices": int(m.device_mesh().devices.size),
+                "dies": dies}

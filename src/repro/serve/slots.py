@@ -96,6 +96,10 @@ class SlotPool:
         self.admissions = 0
         self.completions = 0
         self.peak_occupancy = 0
+        # die mesh (repro.sharding.DieMesh), attached by a sharded
+        # scheduler: slot -> die is a pure layout mapping, so per-die
+        # occupancy stays free host bookkeeping
+        self.mesh: Optional[Any] = None
 
     # -------------------------------------------------------------- free list
     def free_slots(self) -> int:
@@ -247,11 +251,18 @@ class SlotPool:
         """(capacity,) bool device mask of occupied slots."""
         return jnp.asarray([r is not None for r in self.slot_req], bool)
 
-    def stats(self) -> Dict[str, int]:
-        return {"capacity": self.capacity, "admissions": self.admissions,
-                "completions": self.completions,
-                "peak_occupancy": self.peak_occupancy,
-                "occupancy": self.capacity - len(self._free)}
+    def stats(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "capacity": self.capacity, "admissions": self.admissions,
+            "completions": self.completions,
+            "peak_occupancy": self.peak_occupancy,
+            "occupancy": self.capacity - len(self._free)}
+        if self.mesh is not None:
+            out["occupancy_by_die"] = [
+                sum(1 for i in range(*self.mesh.slot_slice(d).indices(
+                    self.capacity)) if self.slot_req[i] is not None)
+                for d in range(self.mesh.n_dies)]
+        return out
 
     def telemetry_gauges(self) -> Dict[str, int]:
         """The pool's per-event gauge sample (``repro.telemetry``) — all

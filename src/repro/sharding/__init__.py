@@ -1,0 +1,14 @@
+"""repro.sharding — device-mesh layers for serving and training.
+
+``mesh.DieMesh`` is the serving die mesh the slot-pool stack actually
+consumes (serve/scheduler.py): the slot-axis partition of one logical
+STT-RAM memory over N independently aging dies, plus the contiguous-slice
+per-die ledger reductions and the jax Mesh/NamedSharding placement.
+``rules`` keeps the training-side model-axis sharding rules used by the
+launch tooling (launch/train.py, launch/dryrun.py)."""
+from repro.sharding import rules  # noqa: F401
+from repro.sharding.mesh import (DIE_AXIS, DieMesh, make_host_mesh,
+                                 make_production_mesh, uniform)
+
+__all__ = ["DIE_AXIS", "DieMesh", "make_host_mesh",
+           "make_production_mesh", "rules", "uniform"]

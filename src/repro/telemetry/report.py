@@ -17,7 +17,7 @@ from typing import Any, Dict, List
 
 #: summary keys with a dedicated renderer below
 _HANDLED = ("requests", "total", "extent_table", "prefix", "lifetime",
-            "wear", "telemetry")
+            "wear", "telemetry", "sharding")
 #: summary keys folded into the header / totals lines (not standalone)
 _INLINE = ("streams", "pool", "clock_steps", "decode_steps", "bursts")
 
@@ -117,6 +117,25 @@ def _wear_lines(report: Dict[str, Any]) -> List[str]:
             f"remap {w['remap_energy_pj']/1e6:.3f} uJ"]
 
 
+def _sharding_lines(report: Dict[str, Any]) -> List[str]:
+    s = report["sharding"]
+    out = [f"sharding: {s['shards']} dies x {s['slots_per_die']} slots "
+           f"({s['mesh_devices']} device"
+           f"{'s' if s['mesh_devices'] != 1 else ''})"]
+    for d in s["dies"]:
+        line = (f"  die {d['die']}: slots [{d['slots'][0]},"
+                f"{d['slots'][1]}) ambient {d['ambient_k']:.0f} K "
+                f"E={d['energy_pj']/1e3:.1f} nJ "
+                f"flips={d['flips']:.0f} errors={d['errors']:.0f} "
+                f"scrubs={d['scrub_passes']}")
+        if "decayed_bits" in d:
+            line += f" decayed={d['decayed_bits']}"
+        if "max_group_wear" in d:
+            line += f" wear={d['max_group_wear']}"
+        out.append(line)
+    return out
+
+
 def _telemetry_lines(report: Dict[str, Any]) -> List[str]:
     t = report["telemetry"]
     return [f"telemetry: {t['events']} events, {t['spans']} spans, "
@@ -154,6 +173,8 @@ def render_report(report: Dict[str, Any], **opts: Any) -> List[str]:
         lines += _lifetime_lines(report)
     if "wear" in report:
         lines += _wear_lines(report)
+    if "sharding" in report:
+        lines += _sharding_lines(report)
     if "telemetry" in report:
         lines += _telemetry_lines(report)
     lines += _fallback_lines(report)

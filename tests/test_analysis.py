@@ -459,6 +459,68 @@ class TestPytreeCarry:
         assert rep.ok and len(rep.waived) == 1
 
 
+# ------------------------------------------------------------------ R8
+class TestShardLocality:
+    def test_fires_on_collective_in_traced_zone_code(self, tmp_path):
+        rep = lint(tmp_path, {"src/repro/serve/engine.py": """
+            import jax
+            import jax.numpy as jnp
+
+            @jax.jit
+            def burst(acc):
+                return jax.lax.psum(acc, axis_name="die")
+        """})
+        v = [f for f in rep.violations if f.rule == "shard-locality"]
+        assert len(v) == 1 and "jax.lax.psum" in v[0].message
+
+    def test_fires_inside_scan_body(self, tmp_path):
+        rep = lint(tmp_path, {"src/repro/reliability/scrub.py": """
+            import jax
+            from jax import lax
+
+            def run(xs):
+                def body(c, x):
+                    g = lax.all_gather(x, axis_name="die")
+                    return c + g.sum(), x
+                return jax.lax.scan(body, 0.0, xs)
+        """})
+        v = [f for f in rep.violations if f.rule == "shard-locality"]
+        assert len(v) == 1 and "lax.all_gather" in v[0].message
+
+    def test_silent_on_host_paths_and_outside_zone(self, tmp_path):
+        rep = lint(tmp_path, {
+            # host-path reduction in the zone: the once-per-run ledger
+            # merge is exactly the sanctioned place for cross-die math
+            "src/repro/serve/sched.py": """
+                import numpy as np
+
+                def merge(per_slot, n_dies):
+                    return per_slot.reshape(n_dies, -1).sum(axis=1)
+            """,
+            # traced collective OUTSIDE the serving zone: not this rule's
+            # business (launch-time replication uses them legitimately)
+            "src/repro/launch/train.py": """
+                import jax
+
+                @jax.jit
+                def mean_grads(g):
+                    return jax.lax.pmean(g, axis_name="batch")
+            """})
+        assert not [f for f in rep.violations
+                    if f.rule == "shard-locality"]
+
+    def test_waiver(self, tmp_path):
+        rep = lint(tmp_path, {"src/repro/serve/engine.py": """
+            import jax
+
+            @jax.jit
+            def report(acc):
+                # repro: allow(shard-locality): off the per-token path
+                return jax.lax.psum(acc, axis_name="die")
+        """})
+        assert rep.ok and len(rep.waived) == 1
+
+
 # -------------------------------------------------------------- engine
 class TestEngine:
     def test_unjustified_waiver_is_a_violation(self, tmp_path):

@@ -95,9 +95,22 @@ class TestRooflineModel:
         assert swa_fl < full_fl
 
 
+def test_dryrun_import_is_side_effect_free():
+    """Importing launch.dryrun (this module did, at collection time) must
+    not stage the CLI's 512-device XLA_FLAGS: pytest imports test modules
+    before the jax backend initializes, so an import-time mutation would
+    put the ENTIRE suite on 512 fake CPU devices — conftest.py's contract
+    is that smoke tests see the real single device. (Found the hard way:
+    the sharded-serve bit-invariance test folds dies onto real devices,
+    and a partitioned f32 energy reduction reassociates by a few ULP.)"""
+    import os
+    assert "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", "")
+
+
 class TestStrategyRules:
     def test_all_named_strategies_resolve(self):
-        from repro.launch.mesh import make_host_mesh
+        from repro.sharding import make_host_mesh
         from repro.sharding.rules import strategy_rules
         mesh = make_host_mesh()
         for name in ("baseline", "serve_tp_only", "serve_moe_2d"):

@@ -1,5 +1,7 @@
-"""Sharding rules: divisibility fallback, dup-axis regressions, full-tree
-spec construction for every architecture."""
+"""repro.sharding: the serve-side die mesh (slot-axis partition, per-die
+reductions, placement) plus the training-side rules — divisibility
+fallback, dup-axis regressions, full-tree spec construction for every
+architecture."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,10 +9,69 @@ import pytest
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, get_config
-from repro.launch.mesh import make_host_mesh
 from repro.models import get_model
+from repro.sharding import DIE_AXIS, DieMesh, make_host_mesh, uniform
 from repro.sharding.rules import (default_rules, make_constrain, spec_for,
                                   tree_shardings)
+
+
+class TestDieMesh:
+    def test_contiguous_slot_layout(self):
+        m = DieMesh(n_dies=4, capacity=12)
+        assert m.slots_per_die == 3
+        assert m.slot_slice(2) == slice(6, 9)
+        assert [m.die_of_slot(s) for s in range(12)] == \
+            [0, 0, 0, 1, 1, 1, 2, 2, 2, 3, 3, 3]
+        np.testing.assert_array_equal(m.die_ids(),
+                                      np.repeat(np.arange(4), 3))
+
+    def test_capacity_must_divide(self):
+        with pytest.raises(AssertionError):
+            DieMesh(n_dies=3, capacity=8)
+
+    def test_slot_mask_partitions_the_pool(self):
+        m = DieMesh(n_dies=2, capacity=6)
+        masks = [np.asarray(m.slot_mask(d)) for d in range(2)]
+        # each slot belongs to exactly one die
+        np.testing.assert_array_equal(masks[0] ^ masks[1],
+                                      np.ones(6, bool))
+        np.testing.assert_array_equal(masks[0], [1, 1, 1, 0, 0, 0])
+
+    def test_reduce_slots_and_per_slot_roundtrip(self):
+        m = DieMesh(n_dies=3, capacity=6)
+        per_slot = np.arange(6, dtype=np.float64)
+        np.testing.assert_array_equal(m.reduce_slots(per_slot),
+                                      [1.0, 5.0, 9.0])
+        np.testing.assert_array_equal(m.per_slot([10.0, 20.0, 30.0]),
+                                      [10, 10, 20, 20, 30, 30])
+
+    def test_reduce_wear_slices_slot_major_groups(self):
+        # (L=2, G=capacity*gps) slot-major wear with gps=2: die d's
+        # groups are columns [d*gps*spd, (d+1)*gps*spd)
+        m = DieMesh(n_dies=2, capacity=4)
+        wear = np.zeros((2, 8), np.int64)
+        wear[0, 1] = 7   # die 0 (slots 0-1 -> groups 0-3)
+        wear[1, 6] = 9   # die 1 (slots 2-3 -> groups 4-7)
+        np.testing.assert_array_equal(m.reduce_wear(wear), [7, 9])
+
+    def test_device_mesh_folds_onto_host_devices(self):
+        m = DieMesh(n_dies=4, capacity=8)
+        dm = m.device_mesh()
+        assert dm.axis_names == (DIE_AXIS,)
+        assert len(jax.devices()) % dm.devices.size == 0
+
+    def test_shard_slots_preserves_values(self):
+        m = DieMesh(n_dies=2, capacity=4)
+        tree = {"a": jnp.arange(24.0).reshape(2, 4, 3),
+                "b": jnp.arange(4, dtype=jnp.int32)}
+        placed = m.shard_slots({"a": tree["a"]}, 1)
+        np.testing.assert_array_equal(np.asarray(placed["a"]),
+                                      np.asarray(tree["a"]))
+
+    def test_uniform(self):
+        assert uniform([])
+        assert uniform([300.0, 300.0])
+        assert not uniform([300.0, 360.0])
 
 
 @pytest.fixture(scope="module")
